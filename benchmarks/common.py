@@ -1,0 +1,145 @@
+"""Shared benchmark substrate: the Gemma-2B-shaped SFT proxy.
+
+The paper measures FFN1/FFN2 weight/activation/gradient tensors of
+Gemma 2B during SFT, sharded 18 layers × 64 TPUs = 1152 shards.  This
+module builds the same measurement: a reduced-but-same-family Gemma
+model takes a few SFT steps on synthetic data; hooks capture FFN1
+activations and gradients per layer; `shard_histograms` splits them
+64-way exactly like the TP mesh would.
+
+Every benchmark prints ``name,us_per_call,derived`` CSV rows via
+``emit()`` so `python -m benchmarks.run` output is machine-readable.
+"""
+from __future__ import annotations
+
+import time
+from functools import lru_cache
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.stats import shard_histograms
+from repro.core.symbols import SCHEMES
+from repro.data import DataConfig, SyntheticDataset
+from repro.models import ModelConfig, forward_train, model_init
+from repro.models.layers import mlp_apply, rmsnorm_apply
+from repro.optim import AdamWConfig
+from repro.train import make_train_step, train_state_init
+
+N_SHARDS = 64          # the paper's TP width
+SYMBOL_BITS = 8
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    print(f"{name},{us_per_call:.3f},{derived}")
+
+
+@lru_cache(maxsize=1)
+def gemma_proxy() -> Tuple[ModelConfig, dict, List[np.ndarray]]:
+    """A Gemma-family proxy after a short SFT run.
+
+    Returns (cfg, params, ffn1_activations) where activations are one
+    (tokens, d_ff) array per layer, captured post-gate (the FFN1 output
+    the paper histograms).  d_ff is kept divisible by 64 shards.
+
+    SFT hyperparameters matter for fidelity: the paper's statistical-
+    similarity claim holds for *conservatively fine-tuned* models (small
+    lr, weight decay).  An over-aggressive lr distorts per-feature scales
+    and breaks cross-shard similarity — a finding recorded in
+    EXPERIMENTS.md §Paper-claims.
+    """
+    full = get_config("gemma2-2b")
+    cfg = full.reduced(name="gemma2-proxy",
+                       blocks=(full.blocks[0].__class__(("attn",), 3),),
+                       d_model=256, d_ff=8192, vocab_size=4096,
+                       n_heads=4, n_kv_heads=1, head_dim=64)
+    params = model_init(cfg, jax.random.PRNGKey(7))
+    state = train_state_init(params)
+    step = jax.jit(make_train_step(cfg, AdamWConfig(lr=5e-4,
+                                                    weight_decay=0.1)))
+    ds = iter(SyntheticDataset(cfg, DataConfig(batch_size=4, seq_len=256,
+                                               seed=7)))
+    batch = None
+    for _ in range(25):     # SFT steps so activations are "trained"
+        batch = {k: jnp.asarray(v) for k, v in next(ds).items()}
+        state, _ = step(state, batch)
+
+    # capture on a bigger held-out batch (denser shard histograms)
+    cap_ds = iter(SyntheticDataset(cfg, DataConfig(batch_size=16,
+                                                   seq_len=256, seed=99)))
+    cap = {k: jnp.asarray(v) for k, v in next(cap_ds).items()}
+    acts = capture_ffn1_acts(state.params, cfg, cap)
+    return cfg, state.params, acts
+
+
+def capture_ffn1_acts(params, cfg: ModelConfig, batch) -> List[np.ndarray]:
+    """FFN1 (gate*up) activations per layer for one batch."""
+    from repro.models.layers import embed_apply
+
+    x = embed_apply(params["embed"], batch["tokens"])
+    x = x * jnp.asarray(cfg.d_model ** 0.5, cfg.dtype)
+    acts = []
+    group = params["groups"][0]
+    sub = group[0]
+    from repro.models.blocks import block_apply
+    for li in range(cfg.n_layers):
+        layer = jax.tree.map(lambda a: a[li], sub)
+        h = rmsnorm_apply(layer["norm_mix"], x, cfg.norm_eps)
+        from repro.models.layers import attn_apply
+        x = x + attn_apply(layer["mixer"], h, cfg)
+        h = rmsnorm_apply(layer["norm_ffn"], x, cfg.norm_eps)
+        act = jax.nn.gelu(h @ layer["ffn"]["w_gate"]) * (
+            h @ layer["ffn"]["w_up"])                      # FFN1 activation
+        acts.append(np.asarray(act.reshape(-1, act.shape[-1]),
+                               dtype=jnp.bfloat16))
+        x = x + act @ layer["ffn"]["w_down"]
+    return acts
+
+
+@lru_cache(maxsize=4)
+def ffn1_shard_hists(plane: str = "hi", scheme_name: str = "bf16"
+                     ) -> np.ndarray:
+    """(n_layers × 64, 256) per-plane histograms of FFN1 activation
+    shards — the paper's 1152-shard ensemble at proxy scale."""
+    cfg, params, acts = gemma_proxy()
+    scheme = SCHEMES[scheme_name]
+    hists = []
+    for act in acts:
+        h = shard_histograms(act, scheme, N_SHARDS)[plane]
+        hists.append(h)
+    return np.concatenate(hists, axis=0)
+
+
+@lru_cache(maxsize=1)
+def ffn1_shard_hists_bytes() -> np.ndarray:
+    """(n_layers × 64, 256) histograms of the INTERLEAVED bf16 byte
+    stream per shard — the paper's symbolization (8-bit symbols over the
+    raw tensor bytes; Fig. 1 entropy ≈ 6.25 bits is this stream)."""
+    cfg, params, acts = gemma_proxy()
+    hists = []
+    for act in acts:
+        arr = np.asarray(act)
+        tile = arr.shape[-1] // N_SHARDS
+        for si in range(N_SHARDS):
+            by = arr[:, si * tile:(si + 1) * tile].view(np.uint8).reshape(-1)
+            hists.append(np.bincount(by, minlength=256))
+    return np.stack(hists)
+
+
+def timed(fn, *args, reps: int = 3, warmup: int = 1) -> Tuple[float, object]:
+    out = None
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out) if hasattr(out, "block_until_ready") else None
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+        try:
+            jax.block_until_ready(out)
+        except Exception:
+            pass
+    us = (time.perf_counter() - t0) / reps * 1e6
+    return us, out

@@ -1,0 +1,70 @@
+"""Fig. 4 — the paper's headline: compressibility with a FIXED codebook
+built from the average PMF, applied to every shard.
+
+Claims validated here:
+  * fixed-codebook compressibility within 0.5 % (absolute) of per-shard
+    Huffman,
+  * and within 1 % of the ideal Shannon compressibility.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.codebook import build_codebook
+from repro.core.stats import per_shard_report
+
+from .common import SYMBOL_BITS, emit, ffn1_shard_hists, ffn1_shard_hists_bytes, timed
+
+
+def run() -> None:
+    hists = ffn1_shard_hists_bytes()
+    us, avg_book = timed(lambda: build_codebook(hists.sum(axis=0)), reps=1)
+    rep = per_shard_report(hists, avg_book.lengths, SYMBOL_BITS)
+    ideal = rep["ideal"].mean()
+    per_shard = rep["per_shard_huffman"].mean()
+    fixed = rep["fixed_codebook"].mean()
+    gap_huff = per_shard - fixed
+    gap_ideal = ideal - fixed
+    emit("fig4.codebook_build_us", us, "off-critical-path")
+    emit("fig4.ideal_mean", 0.0, f"{ideal:.4f}")
+    emit("fig4.per_shard_huffman_mean", 0.0, f"{per_shard:.4f}")
+    emit("fig4.fixed_codebook_mean", 0.0, f"{fixed:.4f}")
+    emit("fig4.gap_to_per_shard", 0.0, f"{gap_huff:.5f}")
+    emit("fig4.gap_to_ideal", 0.0, f"{gap_ideal:.5f}")
+    emit("fig4.claim_within_0.5pct_of_per_shard", 0.0,
+         str(bool(gap_huff <= 0.005)))
+    emit("fig4.claim_within_1pct_of_ideal", 0.0,
+         str(bool(gap_ideal <= 0.01)))
+    run_plane_split_extension()
+
+
+if __name__ == "__main__":
+    run()
+
+
+def run_plane_split_extension() -> None:
+    """BEYOND-PAPER: per-byte-plane codebooks instead of the interleaved
+    stream.  The mantissa byte is ~incompressible and the exponent byte
+    is highly structured; coding them separately with two fixed books
+    strictly dominates one mixed-stream book."""
+    import numpy as np
+    from repro.core.codebook import build_codebook
+    from repro.core.entropy import expected_code_length
+
+    mixed = ffn1_shard_hists_bytes()
+    mixed_book = build_codebook(mixed.sum(axis=0))
+    mixed_bits = np.array([expected_code_length(h, mixed_book.lengths)
+                           for h in mixed]).mean()
+
+    split_bits = 0.0
+    for plane in ("lo", "hi"):
+        h = ffn1_shard_hists(plane)
+        book = build_codebook(h.sum(axis=0))
+        split_bits += np.array([expected_code_length(x, book.lengths)
+                                for x in h]).mean()
+    mixed_c = 1 - mixed_bits / 8
+    split_c = 1 - split_bits / 16        # two planes = 16 raw bits
+    emit("fig4ext.interleaved_fixed_compressibility", 0.0, f"{mixed_c:.4f}")
+    emit("fig4ext.plane_split_fixed_compressibility", 0.0, f"{split_c:.4f}")
+    emit("fig4ext.plane_split_gain_pct", 0.0,
+         f"{100 * (split_c - mixed_c):.2f}")

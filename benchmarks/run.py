@@ -1,0 +1,45 @@
+"""Benchmark driver — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  Figures map to the paper:
+  fig1  PMF + entropy of one FFN1 activation shard
+  fig2  per-shard ideal vs Huffman compressibility (1152-shard analogue)
+  fig3  KL(shard ‖ average PMF)
+  fig4  fixed-codebook compressibility (the headline claims)
+  dtype sweep over bf16/e4m3/e3m2/e2m3/e2m1
+  encoder single-stage vs three-stage timing + wire accounting
+  traffic end-to-end compressed-training ledger
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from . import (codelen_ablation, collective_traffic, dtype_sweep,
+                   encoder_throughput, fig1_pmf, fig2_per_shard, fig3_kl,
+                   fig4_fixed_codebook, tensor_kinds)
+
+    print("name,us_per_call,derived")
+    suites = [
+        ("fig1", fig1_pmf.run),
+        ("fig2", fig2_per_shard.run),
+        ("fig3", fig3_kl.run),
+        ("fig4", fig4_fixed_codebook.run),
+        ("dtype_sweep", dtype_sweep.run),
+        ("tensor_kinds", tensor_kinds.run),
+        ("codelen_ablation", codelen_ablation.run),
+        ("encoder", encoder_throughput.run),
+        ("traffic", collective_traffic.run),
+    ]
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    for name, fn in suites:
+        if only and only != name:
+            continue
+        t0 = time.time()
+        fn()
+        print(f"# {name} done in {time.time() - t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

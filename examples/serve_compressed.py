@@ -1,0 +1,69 @@
+"""Serving with compressed collectives: batched requests through a small
+decoder, where the decode-step wire payloads are (a) accounted by the
+ledger and (b) proven lossless through a REAL multi-device all-gather
+carrying the actual Huffman bitstream (bitexact mode, 8 host devices).
+
+Run:  PYTHONPATH=src python examples/serve_compressed.py
+"""
+import os
+
+# bitexact demo wants >1 device; set before jax import.
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.comm import all_gather_bitexact
+from repro.core.codebook import build_codebook
+from repro.core.symbols import bf16_planes_np
+from repro.models import BlockGroup, ModelConfig, model_init
+from repro.serve import Engine, ServeConfig
+
+
+def main() -> None:
+    cfg = ModelConfig(
+        name="serve-demo", arch_type="dense", d_model=256, vocab_size=1024,
+        blocks=(BlockGroup(("attn",), 4),), n_heads=4, n_kv_heads=2,
+        head_dim=64, d_ff=512, remat="none")
+    params = model_init(cfg, jax.random.PRNGKey(0))
+
+    # ---- batched generation --------------------------------------------
+    engine = Engine(params, cfg, ServeConfig(max_cache_len=128,
+                                             temperature=0.8))
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (4, 16), 0, 1024)
+    out, _ = engine.generate(prompts, max_new_tokens=24)
+    print(f"[serve] generated {out.shape} tokens for 4 requests")
+    print(f"[serve] first request: {out[0][:12]} ...")
+
+    # ---- the wire: hidden-state all-gather with the real bitstream ------
+    # A TP all-gather of decode activations, encoded with a fixed codebook
+    # built from a PREVIOUS batch (the paper's exact deployment).
+    prev = np.asarray(jax.random.normal(jax.random.PRNGKey(2), (8, 64, 256)),
+                      dtype=jnp.bfloat16)
+    books = {p: build_codebook(np.bincount(s, minlength=256))
+             for p, s in bf16_planes_np(prev).items()}
+
+    x = np.asarray(jax.random.normal(jax.random.PRNGKey(3), (8, 64, 256)),
+                   dtype=jnp.bfloat16)
+    mesh = jax.make_mesh((8,), ("tp",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+
+    @jax.shard_map(mesh=mesh, in_specs=P("tp"), out_specs=(P("tp"), P()))
+    def gather(xs):
+        y, stats = all_gather_bitexact(xs, "tp", books, "bf16")
+        return y[None], {k: jax.lax.psum(v, "tp") for k, v in stats.items()}
+
+    y, stats = gather(jnp.asarray(x))
+    got = np.asarray(y, np.float32)[0]
+    assert (got == np.asarray(x, np.float32)).all(), "bit-exact through wire"
+    raw = float(stats["payload_raw_bits"])
+    coded = float(stats["payload_coded_bits"])
+    print(f"[serve] all-gather wire: raw {raw/8/1024:.1f} KiB → "
+          f"coded {coded/8/1024:.1f} KiB "
+          f"({100 * (1 - coded / raw):.1f} % saved), bit-exact ✓")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,100 @@
+"""End-to-end driver: SFT a ~100M-parameter Gemma-family model for a few
+hundred steps with the single-stage compression feature live:
+
+  * gradients are probed every step against the fixed codebook
+    (exact coded size of the DP all-reduce payload),
+  * gradient PMFs are observed and codebooks rebuilt off the critical
+    path every N steps (the paper's §4 lifecycle),
+  * the collective ledger reports raw vs coded wire traffic at the end.
+
+Run:  PYTHONPATH=src python examples/train_sft_compressed.py \
+          [--steps 300] [--d-model 768] [--layers 12]
+(defaults give ~100M params; reduce for a quicker demo)
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.comm import CollectiveLedger, CompressionSpec
+from repro.core.codebook import CodebookRegistry
+from repro.data import DataConfig, SyntheticDataset
+from repro.models import BlockGroup, ModelConfig, model_init, param_count
+from repro.optim import AdamWConfig, cosine_schedule
+from repro.train import make_train_step, train_state_init
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--d-model", type=int, default=768)
+    ap.add_argument("--layers", type=int, default=12)
+    ap.add_argument("--batch-size", type=int, default=16)
+    ap.add_argument("--seq-len", type=int, default=256)
+    ap.add_argument("--vocab", type=int, default=32_768)
+    ap.add_argument("--rebuild-every", type=int, default=50)
+    args = ap.parse_args()
+
+    cfg = ModelConfig(
+        name="gemma-sft-100m", arch_type="dense", d_model=args.d_model,
+        vocab_size=args.vocab, blocks=(BlockGroup(("attn",), args.layers),),
+        n_heads=args.d_model // 64, n_kv_heads=max(args.d_model // 256, 1),
+        head_dim=64, d_ff=4 * args.d_model, ffn_activation="gelu",
+        tie_embeddings=True, remat="block")
+    params = model_init(cfg, jax.random.PRNGKey(0))
+    print(f"[sft] {cfg.name}: {param_count(params):,} params, "
+          f"{cfg.n_layers} layers")
+    state = train_state_init(params)
+
+    # Bootstrap codebooks from the initial parameter byte statistics;
+    # the loop replaces them with real gradient PMFs within one rebuild.
+    registry = CodebookRegistry()
+    from repro.core.symbols import bf16_planes_np
+    seed_bytes = np.concatenate([
+        np.asarray(l).reshape(-1)[:65536]
+        for l in jax.tree.leaves(state.params)[:8]]).astype(jnp.bfloat16)
+    for plane, sym in bf16_planes_np(seed_bytes).items():
+        registry.install(("grad", "bf16", plane),
+                         np.bincount(sym, minlength=256))
+    spec = CompressionSpec.from_registry(registry, "grad", "bf16", "ledger")
+
+    sched = cosine_schedule(3e-4, warmup=20, total=args.steps)
+    opt = AdamWConfig(lr=3e-4)
+
+    def build_step(s):
+        return jax.jit(make_train_step(cfg, opt, sched, comp_spec=s))
+
+    step = build_step(spec)
+    ds = iter(SyntheticDataset(cfg, DataConfig(args.batch_size, args.seq_len)))
+    ledger = CollectiveLedger()
+    t0 = time.time()
+    for i in range(args.steps):
+        batch = {k: jnp.asarray(v) for k, v in next(ds).items()}
+        state, m = step(state, batch)
+        ledger.record("grad/all_reduce(dp)", {
+            "raw_wire_bits": float(m["grad_raw_bits"]),
+            "coded_wire_bits": float(m["grad_coded_bits"])})
+        for plane in ("lo", "hi"):
+            registry.observe(("grad", "bf16", plane),
+                             np.asarray(m[f"grad_hist_{plane}"]))
+        if (i + 1) % args.rebuild_every == 0:
+            registry.rebuild()
+            spec = CompressionSpec.from_registry(registry, "grad", "bf16",
+                                                 "ledger")
+            step = build_step(spec)
+            print(f"[sft] step {i}: codebooks rebuilt "
+                  f"(ratio so far {ledger.overall_ratio():.3f})")
+        if i % 25 == 0 or i == args.steps - 1:
+            print(f"[sft] step {i:>4} loss={float(m['loss']):.4f} "
+                  f"gnorm={float(m['grad_norm']):.2f} "
+                  f"saved={100 * (1 - float(m['grad_coded_bits']) / max(float(m['grad_raw_bits']), 1)):.1f}%")
+    dt = time.time() - t0
+    print(f"\n[sft] {args.steps} steps in {dt:.1f}s "
+          f"({args.steps / dt:.2f} steps/s)")
+    print(ledger.report())
+
+
+if __name__ == "__main__":
+    main()

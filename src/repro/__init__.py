@@ -1,0 +1,15 @@
+"""repro — production-grade JAX reproduction of
+"Single-Stage Huffman Encoder for ML Compression" (Agrawal et al., 2026).
+
+Layers:
+  repro.core     — fixed-codebook Huffman coding (the paper)
+  repro.kernels  — Pallas TPU kernels for the encode hot path
+  repro.comm     — compressed collectives + traffic ledger
+  repro.models   — the assigned architecture pool
+  repro.configs  — exact assigned configurations + input shapes
+  repro.data / optim / train / serve / checkpoint — substrate
+  repro.launch   — mesh, multi-pod dry-run, training driver
+  repro.roofline — roofline-term extraction from compiled artifacts
+"""
+
+__version__ = "1.0.0"

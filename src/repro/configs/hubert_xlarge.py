@@ -1,0 +1,31 @@
+"""HuBERT X-Large — encoder-only audio backbone [arXiv:2106.07447].
+
+The conv/mel frontend is a STUB per the brief: ``prefix_only=True`` means
+inputs arrive as precomputed frame embeddings (B, S, d) and the model is
+the bidirectional transformer encoder predicting cluster ids (vocab 504).
+Adaptation notes: rotary positions replace w2v2's conv positional embeds;
+the FFN uses the framework's gated form (parameter count matched to
+d_ff=5120).  No decode step exists (encoder-only) — decode shapes skip.
+"""
+import jax.numpy as jnp
+
+from ..models.common import BlockGroup, ModelConfig
+
+TRAIN_GRAD_ACCUM = 2
+
+CONFIG = ModelConfig(
+    name="hubert-xlarge",
+    arch_type="audio",
+    d_model=1280,
+    vocab_size=504,
+    blocks=(BlockGroup(("attn",), 48),),
+    n_heads=16,
+    n_kv_heads=16,
+    head_dim=80,
+    d_ff=5120,
+    causal=False,            # bidirectional encoder
+    prefix_only=True,        # frame embeddings in, no token embedding
+    ffn_activation="gelu",
+    dtype=jnp.bfloat16,
+    source="arXiv:2106.07447 (HuBERT)",
+)

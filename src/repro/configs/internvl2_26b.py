@@ -1,0 +1,29 @@
+"""InternVL2-26B — InternViT vision encoder + InternLM2-20B-style decoder
+[arXiv:2404.16821].
+
+The vision tower + MLP projector are a STUB per the brief: the decoder
+consumes ``prefix_len`` precomputed patch embeddings (early-fusion
+prefix) followed by text tokens.  The language decoder is the assigned
+backbone: 48L, d 6144, 48H GQA kv=8, d_ff 16384, vocab 92553.
+"""
+import jax.numpy as jnp
+
+from ..models.common import BlockGroup, ModelConfig
+
+TRAIN_GRAD_ACCUM = 8
+
+CONFIG = ModelConfig(
+    name="internvl2-26b",
+    arch_type="vlm",
+    d_model=6144,
+    vocab_size=92_553,
+    blocks=(BlockGroup(("attn",), 48),),
+    n_heads=48,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=16_384,
+    prefix_len=1024,         # InternViT patch tokens after pixel-shuffle
+    rope_theta=1_000_000.0,
+    dtype=jnp.bfloat16,
+    source="arXiv:2404.16821 (InternVL2)",
+)

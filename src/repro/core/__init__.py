@@ -1,0 +1,16 @@
+"""Core of the reproduction: single-stage Huffman coding with fixed
+codebooks (Agrawal et al., 2026)."""
+from .codebook import Codebook, CodebookKey, CodebookRegistry, build_codebook
+from .encoder import (EncodeResult, decode_jit, decode_np, decode_with_book,
+                      encode_jit, encode_np, encoded_size_bits,
+                      packed_words_capacity, single_stage_encode,
+                      three_stage_encode)
+from .entropy import (compressibility, cross_entropy, expected_code_length,
+                      kl_divergence, pmf_from_counts, shannon_entropy)
+from .huffman import (MAX_CODE_LEN, canonical_codes, canonical_decode_tables,
+                      huffman_code_lengths, kraft_sum, package_merge_lengths,
+                      validate_prefix_free)
+from .stats import ShardStatsCollector, per_shard_report, shard_histograms
+from .symbols import SCHEMES, SymbolScheme, scheme_for_dtype
+
+__all__ = [k for k in dir() if not k.startswith("_")]

@@ -1,0 +1,218 @@
+"""Fixed codebooks and the codebook registry — the paper's §4 Implementation.
+
+A deployment keeps one codebook per *(tensor kind, dtype, byte plane)*,
+built from the running-average PMF of previous batches, entirely off the
+critical path.  All participating nodes hold identical registries, so a
+message is just ``(codebook_id, n_symbols, encoded bits)`` — no codebook
+ever rides the wire.
+
+Codebook *selection* supports both of the paper's modes:
+  * software — the caller names the tensor kind and gets "its" book;
+  * hardware — ``select_best`` evaluates every candidate book against the
+    message histogram in parallel (a (n_books, 256) · (256,) matvec) and
+    picks the argmin expected length, mimicking parallel hardware
+    evaluation.
+
+Histograms are floor-smoothed before code construction so *every* symbol
+owns a code — a fixed book must be total: future batches may emit bytes
+the averaging window never saw.
+"""
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, List, Optional, Tuple
+
+import numpy as np
+
+from .entropy import (compressibility, expected_code_length, pmf_from_counts,
+                      shannon_entropy)
+from .huffman import (MAX_CODE_LEN, CanonicalTables, canonical_codes,
+                      canonical_decode_tables, package_merge_lengths,
+                      validate_prefix_free)
+
+__all__ = ["Codebook", "CodebookKey", "CodebookRegistry", "build_codebook"]
+
+CodebookKey = Tuple[str, str, str]  # (tensor_kind, dtype_scheme, plane)
+
+
+@dataclass(frozen=True)
+class Codebook:
+    """A fixed canonical Huffman codebook over an n-symbol alphabet."""
+    book_id: int
+    key: CodebookKey
+    lengths: np.ndarray          # (n,) int32; >0 everywhere (total code)
+    codes: np.ndarray            # (n,) uint32, canonical, MSB-first
+    tables: CanonicalTables      # decode-side tables
+    source_counts: np.ndarray    # the (smoothed) histogram it was built from
+    max_len: int = MAX_CODE_LEN
+
+    def expected_bits_per_symbol(self, counts: np.ndarray) -> float:
+        return float(expected_code_length(counts, self.lengths))
+
+    def encoded_bits(self, counts: np.ndarray) -> int:
+        """Exact payload size in bits for a message with this histogram."""
+        return int(np.dot(np.asarray(counts, np.int64), self.lengths.astype(np.int64)))
+
+    def compressibility(self, counts: np.ndarray, symbol_bits: int = 8) -> float:
+        return float(compressibility(self.expected_bits_per_symbol(counts),
+                                     symbol_bits))
+
+    def code_lut(self) -> np.ndarray:
+        """(n, 2) uint32 [code, length] table — the encoder kernel's LUT."""
+        return np.stack([self.codes.astype(np.uint32),
+                         self.lengths.astype(np.uint32)], axis=1)
+
+
+def build_codebook(counts: np.ndarray, *, book_id: int = -1,
+                   key: CodebookKey = ("", "", ""),
+                   max_len: int = MAX_CODE_LEN,
+                   floor: int = 1, n_symbols: Optional[int] = None) -> Codebook:
+    """Build a total, length-limited canonical codebook from a histogram.
+
+    ``floor`` smoothing gives every symbol at least that count so the code
+    is total.  The compression loss from smoothing is O(n/total) bits —
+    negligible for the multi-MB shards the paper studies.
+    """
+    counts = np.asarray(counts, dtype=np.int64)
+    if n_symbols is not None and counts.shape[0] != n_symbols:
+        raise ValueError(f"histogram has {counts.shape[0]} bins, expected {n_symbols}")
+    smoothed = np.maximum(counts, floor)
+    lengths = package_merge_lengths(smoothed, max_len=max_len)
+    validate_prefix_free(lengths)
+    codes = canonical_codes(lengths)
+    tables = canonical_decode_tables(lengths, max_len=max_len)
+    return Codebook(book_id=book_id, key=key, lengths=lengths, codes=codes,
+                    tables=tables, source_counts=smoothed, max_len=max_len)
+
+
+@dataclass
+class _RunningPMF:
+    """Exponential-moving-average histogram over observation windows."""
+    counts: np.ndarray
+    n_batches: int = 0
+
+    def observe(self, counts: np.ndarray, ema: float) -> None:
+        counts = np.asarray(counts, dtype=np.float64)
+        if self.n_batches == 0:
+            self.counts = counts.copy()
+        else:
+            # EMA over *normalized* batch PMFs so batch size can vary.
+            self.counts = ema * self.counts + (1.0 - ema) * (
+                counts / max(counts.sum(), 1.0) * max(self.counts.sum(), 1.0))
+        self.n_batches += 1
+
+
+class CodebookRegistry:
+    """Shared registry of fixed codebooks, mirrored on every node.
+
+    Lifecycle: `observe()` feeds histograms from previous batches (cheap,
+    off critical path); `rebuild()` refreshes the codebooks; `get()` /
+    `select_best()` serve the encoder.  Thread-safe: a background stats
+    thread may observe while the train loop encodes.
+    """
+
+    def __init__(self, n_symbols: int = 256, *, ema: float = 0.9,
+                 max_len: int = MAX_CODE_LEN):
+        self.n_symbols = n_symbols
+        self.ema = ema
+        self.max_len = max_len
+        self._lock = threading.Lock()
+        self._running: Dict[CodebookKey, _RunningPMF] = {}
+        self._books: Dict[CodebookKey, Codebook] = {}
+        self._by_id: List[Codebook] = []
+
+    # ---------------------------------------------------------- observation
+    def observe(self, key: CodebookKey, counts: np.ndarray) -> None:
+        counts = np.asarray(counts, dtype=np.float64)
+        n = counts.shape[-1]
+        with self._lock:
+            rp = self._running.setdefault(
+                key, _RunningPMF(np.zeros(n, dtype=np.float64)))
+            if counts.ndim == 1:
+                rp.observe(counts, self.ema)
+            else:  # a stack of shard histograms: average first (paper §3)
+                rp.observe(counts.sum(axis=0), self.ema)
+
+    def average_pmf(self, key: CodebookKey) -> np.ndarray:
+        with self._lock:
+            return pmf_from_counts(self._running[key].counts)
+
+    # ---------------------------------------------------------- (re)build
+    def rebuild(self, keys: Optional[Iterable[CodebookKey]] = None) -> None:
+        with self._lock:
+            todo = list(keys) if keys is not None else list(self._running)
+            for key in todo:
+                counts = np.round(self._running[key].counts).astype(np.int64)
+                book_id = (self._books[key].book_id if key in self._books
+                           else len(self._by_id))
+                book = build_codebook(counts, book_id=book_id, key=key,
+                                      max_len=self.max_len)
+                self._books[key] = book
+                if book_id == len(self._by_id):
+                    self._by_id.append(book)
+                else:
+                    self._by_id[book_id] = book
+
+    def install(self, key: CodebookKey, counts: np.ndarray) -> Codebook:
+        """Observe + rebuild in one shot (bootstrap path)."""
+        self.observe(key, counts)
+        self.rebuild([key])
+        return self._books[key]
+
+    # ---------------------------------------------------------- lookup
+    def get(self, key: CodebookKey) -> Codebook:
+        with self._lock:
+            return self._books[key]
+
+    def by_id(self, book_id: int) -> Codebook:
+        with self._lock:
+            return self._by_id[book_id]
+
+    def __contains__(self, key: CodebookKey) -> bool:
+        with self._lock:
+            return key in self._books
+
+    def keys(self) -> List[CodebookKey]:
+        with self._lock:
+            return list(self._books)
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._by_id)
+
+    def select_best(self, counts: np.ndarray,
+                    candidates: Optional[Iterable[int]] = None) -> Tuple[int, float]:
+        """Hardware-mode selection: evaluate candidate books in parallel
+        against the message histogram; return (book_id, bits/symbol)."""
+        with self._lock:
+            ids = list(candidates) if candidates is not None else list(
+                range(len(self._by_id)))
+            if not ids:
+                raise ValueError("registry has no codebooks")
+            lens = np.stack([self._by_id[i].lengths for i in ids])  # (k, n)
+        pmf = pmf_from_counts(counts)
+        ebits = lens.astype(np.float64) @ pmf                        # (k,)
+        j = int(np.argmin(ebits))
+        return ids[j], float(ebits[j])
+
+    # ---------------------------------------------------------- persistence
+    def save(self, path: str) -> None:
+        with self._lock:
+            blob = {}
+            for i, book in enumerate(self._by_id):
+                blob[f"lengths_{i}"] = book.lengths
+                blob[f"counts_{i}"] = book.source_counts
+                blob[f"key_{i}"] = np.array(list(book.key))
+            blob["n_books"] = np.array(len(self._by_id))
+            blob["n_symbols"] = np.array(self.n_symbols)
+        np.savez(path, **blob)
+
+    @classmethod
+    def load(cls, path: str) -> "CodebookRegistry":
+        blob = np.load(path, allow_pickle=False)
+        reg = cls(n_symbols=int(blob["n_symbols"]))
+        for i in range(int(blob["n_books"])):
+            key = tuple(str(s) for s in blob[f"key_{i}"])
+            reg.install(key, blob[f"counts_{i}"])
+        return reg

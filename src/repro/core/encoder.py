@@ -1,0 +1,242 @@
+"""Single-stage Huffman encoder (the paper's contribution) plus the
+three-stage baseline and a NumPy reference codec.
+
+Single-stage = the critical path touches the data exactly once: each
+symbol is mapped through a fixed (code, length) LUT and the codewords are
+bit-packed.  No frequency scan, no tree build, no codebook on the wire.
+
+The jit encoder works on fixed-size inputs and returns a worst-case-sized
+word buffer plus the true bit count — variable-length output with static
+shapes, which is what a fixed-function link encoder produces into its
+transmit FIFO as well.  Bit order: MSB-first within big-endian 32-bit
+words (network order), matching the canonical-decode table walk.
+
+The decoder is a ``lax.scan`` over output symbols doing the canonical
+first-code/offset walk — O(1) table state, fully jittable.  A pure-Python
+codec (`encode_np`/`decode_np`) serves as the independent oracle for
+property tests.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .codebook import Codebook, build_codebook
+from .huffman import MAX_CODE_LEN
+
+__all__ = [
+    "encode_jit", "decode_jit", "encode_np", "decode_np",
+    "three_stage_encode", "single_stage_encode",
+    "encoded_size_bits", "packed_words_capacity", "EncodeResult",
+]
+
+# Per-call symbol cap so bit offsets fit comfortably in uint32 cumsums.
+_MAX_SYMBOLS = 1 << 26
+
+
+def packed_words_capacity(n_symbols: int, max_len: int = MAX_CODE_LEN) -> int:
+    """Static worst-case uint32 word count (+1 pad word for window reads)."""
+    return (n_symbols * max_len + 31) // 32 + 1
+
+
+@dataclass
+class EncodeResult:
+    words: jnp.ndarray      # (capacity,) uint32 — MSB-first bitstream
+    n_bits: jnp.ndarray     # () uint32 — true payload size
+    n_symbols: int
+    book_id: int = -1
+
+    def payload_bytes(self) -> float:
+        return float(self.n_bits) / 8.0
+
+
+# --------------------------------------------------------------------------
+# jit bit-packing encoder
+# --------------------------------------------------------------------------
+@partial(jax.jit, static_argnames=("max_len",))
+def encode_jit(symbols: jnp.ndarray, codes: jnp.ndarray, lengths: jnp.ndarray,
+               max_len: int = MAX_CODE_LEN) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Pack ``symbols`` through the (codes, lengths) LUT into a bitstream.
+
+    symbols: (N,) uint8/int32 — N static.
+    codes:   (n_sym,) uint32 canonical codes (MSB-first, right-aligned)
+    lengths: (n_sym,) int32 — all > 0 (total code)
+    Returns (words, n_bits): (capacity,) uint32 and scalar uint32.
+
+    A codeword of length ≤16 starting at bit offset o spans at most two
+    32-bit words.  We split it into a high-word and a low-word part with
+    two masked shifts (no uint64 needed) and assemble via scatter-add —
+    fields are disjoint so add ≡ or.
+    """
+    n = symbols.shape[0]
+    if n > _MAX_SYMBOLS:
+        raise ValueError(f"chunk too large: {n} > {_MAX_SYMBOLS}")
+    sym = symbols.astype(jnp.int32)
+    v = codes[sym].astype(jnp.uint32)
+    l = lengths[sym].astype(jnp.uint32)
+
+    ends = jnp.cumsum(l, dtype=jnp.uint32)
+    offs = ends - l                                  # exclusive prefix sum
+    n_bits = ends[-1] if n > 0 else jnp.uint32(0)
+
+    pos = offs & jnp.uint32(31)                      # bit position in word
+    idx = (offs >> jnp.uint32(5)).astype(jnp.int32)  # word index
+
+    # sh = 32 - pos - l : left-shift that right-aligns the code's end with
+    # the word end.  Negative sh means the low |sh| bits spill to word+1.
+    sh = 32 - pos.astype(jnp.int32) - l.astype(jnp.int32)
+    sh_pos = jnp.clip(sh, 0, 31).astype(jnp.uint32)
+    sh_neg = jnp.clip(-sh, 0, 31).astype(jnp.uint32)
+    hi = jnp.where(sh >= 0, v << sh_pos, v >> sh_neg)
+    lo = jnp.where(sh < 0, v << jnp.clip(32 + sh, 0, 31).astype(jnp.uint32),
+                   jnp.uint32(0))
+
+    capacity = packed_words_capacity(n, max_len)
+    words = jnp.zeros((capacity,), jnp.uint32)
+    words = words.at[idx].add(hi, mode="drop")
+    words = words.at[idx + 1].add(lo, mode="drop")
+    return words, n_bits
+
+
+# --------------------------------------------------------------------------
+# jit canonical decoder (lax.scan)
+# --------------------------------------------------------------------------
+@partial(jax.jit, static_argnames=("n_symbols", "max_len"))
+def decode_jit(words: jnp.ndarray, first_code: jnp.ndarray,
+               base_index: jnp.ndarray, num_codes: jnp.ndarray,
+               sorted_symbols: jnp.ndarray, n_symbols: int,
+               max_len: int = MAX_CODE_LEN) -> jnp.ndarray:
+    """Decode ``n_symbols`` symbols from an MSB-first canonical bitstream.
+
+    Per step: read a max_len-bit window at the cursor, find the unique
+    code length l with first_code[l] ≤ window>>(max_len-l) <
+    first_code[l]+num_codes[l], emit sorted_symbols[base+offset], advance.
+    The l-search is vectorized over the ≤16 candidate lengths.
+    """
+    fc = first_code.astype(jnp.int32)
+    bi = base_index.astype(jnp.int32)
+    nc = num_codes.astype(jnp.int32)
+    ss = sorted_symbols.astype(jnp.int32)
+    ls = jnp.arange(1, max_len + 1, dtype=jnp.int32)          # (L,)
+
+    def step(bit_pos, _):
+        widx = (bit_pos >> jnp.uint32(5)).astype(jnp.int32)
+        pin = bit_pos & jnp.uint32(31)
+        w0 = words[widx]
+        w1 = words[widx + 1]
+        hi = w0 << pin
+        lo = jnp.where(pin == 0, jnp.uint32(0),
+                       w1 >> jnp.clip(32 - pin.astype(jnp.int32), 0, 31
+                                      ).astype(jnp.uint32))
+        window = ((hi | lo) >> jnp.uint32(32 - max_len)).astype(jnp.int32)
+        cand = window >> (max_len - ls)                        # (L,)
+        off = cand - fc[ls]
+        valid = (off >= 0) & (off < nc[ls])
+        li = jnp.argmax(valid)                                 # smallest valid l
+        l = ls[li]
+        sym = ss[jnp.clip(bi[l] + off[li], 0, ss.shape[0] - 1)]
+        return bit_pos + l.astype(jnp.uint32), sym
+
+    # Initial cursor derives from `words` (0-valued) so its varying-axes
+    # type matches the body output under shard_map (see shard-map vma docs).
+    cursor0 = words[0] & jnp.uint32(0)
+    _, syms = jax.lax.scan(step, cursor0, None, length=n_symbols)
+    return syms.astype(jnp.uint8)
+
+
+def decode_with_book(words: jnp.ndarray, book: Codebook,
+                     n_symbols: int) -> jnp.ndarray:
+    t = book.tables
+    return decode_jit(words, jnp.asarray(t.first_code), jnp.asarray(t.base_index),
+                      jnp.asarray(t.num_codes), jnp.asarray(t.sorted_symbols),
+                      n_symbols, max_len=t.max_len)
+
+
+# --------------------------------------------------------------------------
+# NumPy reference codec (independent oracle for property tests)
+# --------------------------------------------------------------------------
+def encode_np(symbols: np.ndarray, codes: np.ndarray,
+              lengths: np.ndarray) -> Tuple[np.ndarray, int]:
+    """Bit-exact reference encoder: plain Python bit twiddling."""
+    bits = []
+    for s in np.asarray(symbols).astype(np.int64):
+        l = int(lengths[s])
+        c = int(codes[s])
+        bits.extend(((c >> (l - 1 - i)) & 1) for i in range(l))
+    n_bits = len(bits)
+    n_words = (n_bits + 31) // 32 + 1
+    words = np.zeros(n_words, dtype=np.uint32)
+    for i, b in enumerate(bits):
+        if b:
+            words[i >> 5] |= np.uint32(1) << np.uint32(31 - (i & 31))
+    return words, n_bits
+
+
+def decode_np(words: np.ndarray, n_symbols: int, book: Codebook) -> np.ndarray:
+    t = book.tables
+    out = np.zeros(n_symbols, dtype=np.uint8)
+    pos = 0
+    for k in range(n_symbols):
+        code = 0
+        l = 0
+        while True:
+            l += 1
+            bit = (int(words[pos >> 5]) >> (31 - (pos & 31))) & 1
+            pos += 1
+            code = (code << 1) | bit
+            off = code - int(t.first_code[l])
+            if 0 <= off < int(t.num_codes[l]):
+                out[k] = t.sorted_symbols[int(t.base_index[l]) + off]
+                break
+            if l >= t.max_len:
+                raise ValueError("corrupt stream")
+    return out
+
+
+# --------------------------------------------------------------------------
+# The two encoder designs the paper compares
+# --------------------------------------------------------------------------
+def three_stage_encode(symbols: np.ndarray, *, n_alphabet: int = 256,
+                       max_len: int = MAX_CODE_LEN):
+    """Baseline: scan → build codebook → encode.  Returns
+    (EncodeResult, Codebook, stage_seconds dict).  The codebook must ride
+    with the message (lengths vector, n_alphabet bytes) — accounted in
+    ``wire_bits``."""
+    t0 = time.perf_counter()
+    counts = np.bincount(np.asarray(symbols).reshape(-1), minlength=n_alphabet)
+    t1 = time.perf_counter()
+    book = build_codebook(counts, max_len=max_len)
+    t2 = time.perf_counter()
+    words, n_bits = encode_jit(jnp.asarray(symbols, dtype=jnp.uint8),
+                               jnp.asarray(book.codes),
+                               jnp.asarray(book.lengths), max_len=max_len)
+    jax.block_until_ready(words)
+    t3 = time.perf_counter()
+    res = EncodeResult(words=words, n_bits=n_bits, n_symbols=len(symbols))
+    stages = {"freq_scan_s": t1 - t0, "tree_build_s": t2 - t1,
+              "encode_s": t3 - t2,
+              "wire_bits": int(n_bits) + 8 * n_alphabet}  # + codebook payload
+    return res, book, stages
+
+
+def single_stage_encode(symbols: jnp.ndarray, book: Codebook) -> EncodeResult:
+    """The paper's encoder: one pass through a fixed codebook.  Wire
+    payload = header (book id + count) + bits; no codebook, no scan."""
+    words, n_bits = encode_jit(jnp.asarray(symbols, dtype=jnp.uint8),
+                               jnp.asarray(book.codes),
+                               jnp.asarray(book.lengths),
+                               max_len=book.max_len)
+    return EncodeResult(words=words, n_bits=n_bits, n_symbols=int(symbols.shape[0]),
+                        book_id=book.book_id)
+
+
+def encoded_size_bits(counts, lengths) -> jnp.ndarray:
+    """Ledger-mode exact size: histogram · lengths (device-friendly dot)."""
+    return jnp.dot(jnp.asarray(counts, jnp.float32),
+                   jnp.asarray(lengths, jnp.float32))

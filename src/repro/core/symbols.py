@@ -1,0 +1,153 @@
+"""Tensor → symbol-stream extraction for every dtype the paper analyzes:
+bfloat16, e4m3, e3m2, e2m3, e2m1 (plus raw-byte and e5m2 for completeness).
+
+The paper codes 8-bit symbols.  For bfloat16 we expose *byte planes*: the
+high byte (sign + exponent + top mantissa bit) is highly structured and
+compresses hard; the low byte (mantissa) is near-uniform.  Keeping the
+planes separate lets the registry hold one codebook per plane — strictly
+better than interleaved bytes and exactly what a link-layer encoder sees
+when it strides the tensor.
+
+Sub-byte formats (e3m2, e2m3, e2m1 — OCP MX-style, no inf/nan) are
+emulated via nearest-value quantization onto the format's representable
+set; the symbol is the format's code word, and ``symbol_bits`` is the
+format's true width, so compressibility is measured against the format's
+own footprint (as in the paper's dtype sweep).
+
+Both NumPy (host/offline) and jnp (on-device ledger) extractors are
+provided.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Dict, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "SymbolScheme", "SCHEMES", "scheme_for_dtype",
+    "exmy_values", "exmy_quantize", "exmy_dequantize",
+    "bf16_planes_np", "bf16_planes_jnp",
+]
+
+
+def exmy_values(e: int, m: int) -> np.ndarray:
+    """All representable values of a 1+e+m-bit (sign, exp, mantissa) format.
+
+    MX-style semantics: exp field 0 → subnormal; no inf/nan (the whole
+    code space is finite values).  Returned in code order (index == code).
+    """
+    n = 1 << (1 + e + m)
+    codes = np.arange(n, dtype=np.uint32)
+    sign = np.where(codes >> (e + m) == 1, -1.0, 1.0)
+    expf = (codes >> m) & ((1 << e) - 1)
+    mant = codes & ((1 << m) - 1)
+    bias = (1 << (e - 1)) - 1
+    sub = expf == 0
+    vals = np.where(
+        sub,
+        mant / (1 << m) * 2.0 ** (1 - bias),
+        (1.0 + mant / (1 << m)) * 2.0 ** (expf.astype(np.float64) - bias),
+    )
+    return sign * vals
+
+
+def _exmy_tables(e: int, m: int) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """(sorted values, code-for-sorted-rank, bin midpoints) for quantization."""
+    vals = exmy_values(e, m)
+    order = np.argsort(vals, kind="stable")
+    sv = vals[order]
+    # Collapse the duplicate ±0 onto +0's code for determinism.
+    mids = (sv[1:] + sv[:-1]) / 2.0
+    return sv, order.astype(np.uint8 if vals.size <= 256 else np.uint16), mids
+
+
+def exmy_quantize(x: np.ndarray, e: int, m: int) -> np.ndarray:
+    """Nearest-value quantization of float data onto the eXmY code space.
+
+    Returns the code words (uint8).  Saturates to the max normal, matching
+    MX casting semantics.
+    """
+    sv, codes, mids = _exmy_tables(e, m)
+    xf = np.asarray(x, dtype=np.float64).reshape(-1)
+    xf = np.clip(xf, sv[0], sv[-1])
+    idx = np.searchsorted(mids, xf, side="left")
+    return codes[idx]
+
+
+def exmy_dequantize(sym: np.ndarray, e: int, m: int) -> np.ndarray:
+    return exmy_values(e, m)[np.asarray(sym, dtype=np.int64)]
+
+
+def bf16_planes_np(x: np.ndarray) -> Dict[str, np.ndarray]:
+    """Split a bfloat16 array into low/high byte planes (NumPy, host)."""
+    u16 = np.asarray(x, dtype=jnp.bfloat16).view(np.uint16).reshape(-1)
+    return {"lo": (u16 & 0xFF).astype(np.uint8), "hi": (u16 >> 8).astype(np.uint8)}
+
+
+def bf16_planes_jnp(x: jnp.ndarray) -> Dict[str, jnp.ndarray]:
+    """Split a bfloat16 array into byte planes on device (for the ledger)."""
+    import jax
+    u16 = jax.lax.bitcast_convert_type(x.astype(jnp.bfloat16).reshape(-1),
+                                       jnp.uint16)
+    return {"lo": (u16 & 0xFF).astype(jnp.uint8),
+            "hi": (u16 >> 8).astype(jnp.uint8)}
+
+
+def _f32_bytes_np(x: np.ndarray) -> Dict[str, np.ndarray]:
+    b = np.asarray(x, dtype=np.float32).view(np.uint8).reshape(-1, 4)
+    return {f"b{i}": b[:, i].copy() for i in range(4)}
+
+
+def _fp8_np(x: np.ndarray, dt) -> Dict[str, np.ndarray]:
+    return {"b0": np.asarray(jnp.asarray(x, dtype=dt)).view(np.uint8).reshape(-1)}
+
+
+def _fp8_jnp(x: jnp.ndarray, dt) -> Dict[str, jnp.ndarray]:
+    import jax
+    return {"b0": jax.lax.bitcast_convert_type(x.astype(dt).reshape(-1), jnp.uint8)}
+
+
+@dataclass(frozen=True)
+class SymbolScheme:
+    """How a tensor dtype maps to one or more uint8 symbol streams."""
+    name: str
+    planes: Tuple[str, ...]
+    symbol_bits: int                      # true bits per symbol (≤8)
+    n_symbols: int                        # alphabet size (≤256)
+    to_symbols: Callable[[np.ndarray], Dict[str, np.ndarray]]
+    to_symbols_jnp: Callable = None       # device path where implemented
+
+    def total_symbol_bits(self) -> int:
+        """Bits of raw payload represented by one symbol from *each* plane."""
+        return self.symbol_bits * len(self.planes)
+
+
+SCHEMES: Dict[str, SymbolScheme] = {
+    "bf16": SymbolScheme("bf16", ("lo", "hi"), 8, 256,
+                         bf16_planes_np, bf16_planes_jnp),
+    "f32": SymbolScheme("f32", ("b0", "b1", "b2", "b3"), 8, 256, _f32_bytes_np),
+    "e4m3": SymbolScheme("e4m3", ("b0",), 8, 256,
+                         lambda x: _fp8_np(x, jnp.float8_e4m3fn),
+                         lambda x: _fp8_jnp(x, jnp.float8_e4m3fn)),
+    "e5m2": SymbolScheme("e5m2", ("b0",), 8, 256,
+                         lambda x: _fp8_np(x, jnp.float8_e5m2),
+                         lambda x: _fp8_jnp(x, jnp.float8_e5m2)),
+    "e3m2": SymbolScheme("e3m2", ("b0",), 6, 64,
+                         lambda x: {"b0": exmy_quantize(x, 3, 2)}),
+    "e2m3": SymbolScheme("e2m3", ("b0",), 6, 64,
+                         lambda x: {"b0": exmy_quantize(x, 2, 3)}),
+    "e2m1": SymbolScheme("e2m1", ("b0",), 4, 16,
+                         lambda x: {"b0": exmy_quantize(x, 2, 1)}),
+}
+
+
+def scheme_for_dtype(dtype) -> SymbolScheme:
+    """Best-effort mapping from a JAX/NumPy dtype to a symbol scheme."""
+    name = jnp.dtype(dtype).name
+    table = {"bfloat16": "bf16", "float32": "f32",
+             "float8_e4m3fn": "e4m3", "float8_e5m2": "e5m2"}
+    if name not in table:
+        raise KeyError(f"no symbol scheme for dtype {name}")
+    return SCHEMES[table[name]]

@@ -1,0 +1,85 @@
+"""Pallas TPU kernel: block-local bit-packing of variable-length codes.
+
+Completes the on-device encode pipeline: histogram (observe) → LUT
+(single-stage map) → **pack** (this kernel).  Global variable-length
+packing is inherently sequential at the bit level, so we split it the
+way a link-layer encoder does:
+
+  * each grid step packs a BLOCK of (code, length) pairs into its own
+    word-aligned sub-stream entirely in VMEM: an in-block exclusive
+    prefix sum of lengths gives every code's bit offset, and the
+    hi/lo-word split (two masked shifts, no uint64) scatters disjoint
+    bit fields — add ≡ or;
+  * the tiny merge of per-block streams (one barrel shift per block) is
+    the transmit-FIFO stitch; it runs on host / in jnp
+    (`ops.merge_block_streams`) and is O(output words).
+
+Per-block capacity is BLOCK × MAX_CODE_LEN bits; the block's true bit
+count rides in a side output so the merge drops the slack.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..core.huffman import MAX_CODE_LEN
+
+BLOCK = 2048
+CAP_WORDS = BLOCK * MAX_CODE_LEN // 32 + 1      # +1 pad word
+
+
+def _pack_kernel(codes_ref, lens_ref, words_ref, bits_ref):
+    """Pack one block.  codes/lens: (BLOCK,) int32 (len==0 → padding)."""
+    v = codes_ref[...].reshape(-1).astype(jnp.uint32)
+    l = lens_ref[...].reshape(-1).astype(jnp.uint32)
+
+    ends = jnp.cumsum(l, dtype=jnp.uint32)
+    offs = ends - l                              # in-block bit offsets
+    nbits = ends[-1]
+
+    pos = offs & jnp.uint32(31)
+    idx = (offs >> jnp.uint32(5)).astype(jnp.int32)
+    sh = 32 - pos.astype(jnp.int32) - l.astype(jnp.int32)
+    hi = jnp.where(sh >= 0, v << jnp.clip(sh, 0, 31).astype(jnp.uint32),
+                   v >> jnp.clip(-sh, 0, 31).astype(jnp.uint32))
+    lo = jnp.where(sh < 0,
+                   v << jnp.clip(32 + sh, 0, 31).astype(jnp.uint32),
+                   jnp.uint32(0))
+    words = jnp.zeros((CAP_WORDS,), jnp.uint32)
+    words = words.at[idx].add(hi, mode="drop")
+    words = words.at[idx + 1].add(lo, mode="drop")
+    words_ref[...] = words[None, :]
+    bits_ref[...] = nbits[None, None].astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def pack_blocks_pallas(codes: jnp.ndarray, lens: jnp.ndarray, *,
+                       interpret: bool = True
+                       ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """codes/lens: (N,) → (block words (NB, CAP_WORDS), block bits (NB,)).
+
+    N is padded to a BLOCK multiple with zero-length entries (zero-length
+    codes contribute no bits — the cumsum skips them).
+    """
+    n = codes.shape[0]
+    nb = max((n + BLOCK - 1) // BLOCK, 1)
+    pad = nb * BLOCK - n
+    c = jnp.pad(codes.astype(jnp.int32), (0, pad)).reshape(nb, BLOCK)
+    l = jnp.pad(lens.astype(jnp.int32), (0, pad)).reshape(nb, BLOCK)
+
+    words, bits = pl.pallas_call(
+        _pack_kernel,
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((1, BLOCK), lambda i: (i, 0)),
+                  pl.BlockSpec((1, BLOCK), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((1, CAP_WORDS), lambda i: (i, 0)),
+                   pl.BlockSpec((1, 1), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((nb, CAP_WORDS), jnp.uint32),
+                   jax.ShapeDtypeStruct((nb, 1), jnp.int32)],
+        interpret=interpret,
+    )(c, l)
+    return words, bits[:, 0]

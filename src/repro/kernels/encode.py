@@ -1,0 +1,104 @@
+"""Pallas TPU kernel: single-stage Huffman symbol→(code, length) mapping.
+
+This is the paper's critical-path stage — the ONLY stage, hence
+"single-stage".  Each uint8 symbol is looked up in a fixed 256-entry
+codebook LUT; downstream bit-packing consumes the (code, length) pairs.
+
+TPU adaptation: a byte→word table lookup is a random gather, which the
+TPU vector unit handles poorly.  We reformulate the LUT as a matmul on
+the MXU: one-hot(symbols, 256) @ LUT(256, 2).  Codes are length-limited
+to ≤16 bits (package-merge), so both the codeword value (<2^16) and the
+length (≤16) are exactly representable in f32 — the matmul is exact.
+The one-hot tile is built in VMEM from a broadcasted iota compare, then
+a (BLOCK, 256) × (256, 2) f32 matmul hits the systolic array.  This is
+the TPU-idiomatic form of a small LUT and the kernel the hardware
+encoder in the paper would replace.
+
+Per grid step the kernel also reduces the block's total bit count into a
+sequential accumulator block — the wire-size term the collective ledger
+needs, produced without a second pass over the data (that's the point of
+the paper: no extra scans).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+N_SYMBOLS = 256
+ROWS = 32
+LANES = 128
+BLOCK = ROWS * LANES
+
+
+def _encode_kernel(sym_ref, lut_ref, code_ref, len_ref, bits_ref):
+    """Map a (ROWS, LANES) symbol block through the codebook LUT.
+
+    sym_ref:  (ROWS, LANES) int32 — symbols
+    lut_ref:  (256, 2) f32 — [codeword, length] per symbol (≤16-bit exact)
+    code_ref: (ROWS, LANES) int32 out — codewords
+    len_ref:  (ROWS, LANES) int32 out — code lengths
+    bits_ref: (1, 1) int32 out — running total bits (sequential-grid acc)
+    """
+    sym = sym_ref[...]                                       # (R, L) int32
+    flat = sym.reshape(BLOCK, 1)
+    iota = jax.lax.broadcasted_iota(jnp.int32, (BLOCK, N_SYMBOLS), 1)
+    onehot = (flat == iota).astype(jnp.float32)              # (BLOCK, 256)
+    pair = jnp.dot(onehot, lut_ref[...],
+                   preferred_element_type=jnp.float32)       # (BLOCK, 2) MXU
+    codes = pair[:, 0].astype(jnp.int32).reshape(ROWS, LANES)
+    lens = pair[:, 1].astype(jnp.int32).reshape(ROWS, LANES)
+    code_ref[...] = codes
+    len_ref[...] = lens
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        bits_ref[...] = jnp.zeros_like(bits_ref)
+
+    bits_ref[...] += lens.sum()[None, None]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def encode_lookup_pallas(symbols: jnp.ndarray, lut: jnp.ndarray, *,
+                         interpret: bool = True
+                         ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Single-stage LUT pass: symbols (N,) uint8/int32, lut (256, 2) f32/u32.
+
+    Returns (codes (N,) uint32, lengths (N,) int32, total_bits () int32).
+    Padding symbols are 0; their contribution to total_bits is subtracted
+    exactly (pad count × len(lut[0])).
+    """
+    n = symbols.size
+    sym = symbols.reshape(-1).astype(jnp.int32)
+    n_blocks = max((n + BLOCK - 1) // BLOCK, 1)
+    pad = n_blocks * BLOCK - n
+    sym = jnp.pad(sym, (0, pad)).reshape(n_blocks * ROWS, LANES)
+    lut_f = lut.astype(jnp.float32)
+
+    codes, lens, bits = pl.pallas_call(
+        _encode_kernel,
+        grid=(n_blocks,),
+        in_specs=[
+            pl.BlockSpec((ROWS, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((N_SYMBOLS, 2), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((ROWS, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((ROWS, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_blocks * ROWS, LANES), jnp.int32),
+            jax.ShapeDtypeStruct((n_blocks * ROWS, LANES), jnp.int32),
+            jax.ShapeDtypeStruct((1, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(sym, lut_f)
+
+    total_bits = bits[0, 0] - pad * lens.reshape(-1)[-1] if pad else bits[0, 0]
+    codes = codes.reshape(-1)[:n].astype(jnp.uint32)
+    lens = lens.reshape(-1)[:n]
+    return codes, lens, total_bits

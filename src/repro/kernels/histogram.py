@@ -1,0 +1,68 @@
+"""Pallas TPU kernel: 256-bin histogram of a uint8 symbol stream.
+
+This is the *stage-1* primitive the paper keeps OFF the critical path —
+the background PMF observation that feeds the codebook registry — and the
+ledger-mode size probe (histogram · code-lengths).
+
+TPU adaptation (vs. the GPU shared-memory-atomics histogram): there are
+no atomics; instead each grid step materializes a (bins, rows, lanes)
+comparison against a broadcasted iota in VMEM and reduces with the VPU.
+The grid's last dimension iterates sequentially on a TPU core, so all
+steps accumulate into the SAME output block — the canonical TPU reduction
+pattern (`out_spec` maps every step to block 0, with a `pl.when` init).
+
+Block shape: (ROWS=32, LANES=128) int32 symbols per step → the transient
+one-hot compare tensor is 256×32×128 int8-equivalent ≈ 1 MiB of VMEM,
+comfortably within the ~16 MiB/core budget alongside the block itself.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+N_BINS = 256
+ROWS = 32
+LANES = 128
+BLOCK = ROWS * LANES
+
+
+def _histogram_kernel(sym_ref, out_ref):
+    """One grid step: histogram a (ROWS, LANES) int32 block into out (1, 256)."""
+    block = sym_ref[...]                                   # (ROWS, LANES) int32
+    bins = jax.lax.broadcasted_iota(jnp.int32, (N_BINS, ROWS, LANES), 0)
+    hits = (block[None, :, :] == bins).astype(jnp.int32)   # (256, R, L)
+    counts = hits.sum(axis=(1, 2))                         # (256,)
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] += counts[None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def histogram256_pallas(symbols: jnp.ndarray, *, interpret: bool = True
+                        ) -> jnp.ndarray:
+    """256-bin histogram of a flat uint8/int32 symbol array.
+
+    Pads to a whole number of (ROWS, LANES) blocks with symbol 0 and
+    subtracts the pad count from bin 0 — exact for any input length.
+    """
+    n = symbols.size
+    sym = symbols.reshape(-1).astype(jnp.int32)
+    n_blocks = max((n + BLOCK - 1) // BLOCK, 1)
+    pad = n_blocks * BLOCK - n
+    sym = jnp.pad(sym, (0, pad)).reshape(n_blocks * ROWS, LANES)
+
+    out = pl.pallas_call(
+        _histogram_kernel,
+        grid=(n_blocks,),
+        in_specs=[pl.BlockSpec((ROWS, LANES), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, N_BINS), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, N_BINS), jnp.int32),
+        interpret=interpret,
+    )(sym)[0]
+    return out.at[0].add(-pad)

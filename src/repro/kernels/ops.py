@@ -1,0 +1,114 @@
+"""jit'd public wrappers over the Pallas kernels.
+
+`INTERPRET` defaults to True because this container is CPU-only; on a
+real TPU deployment set ``repro.kernels.ops.INTERPRET = False`` (or the
+REPRO_PALLAS_INTERPRET env var) and the same BlockSpecs compile to
+Mosaic.  All wrappers fall back to the jnp reference implementation for
+degenerate sizes.
+"""
+from __future__ import annotations
+
+import os
+from typing import Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.codebook import Codebook
+from .encode import encode_lookup_pallas
+from .histogram import histogram256_pallas
+from . import ref as _ref
+
+INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
+
+
+def histogram256(symbols: jnp.ndarray) -> jnp.ndarray:
+    """256-bin histogram of a uint8 symbol stream (Pallas on TPU)."""
+    return histogram256_pallas(symbols, interpret=INTERPRET)
+
+
+def encode_lookup(symbols: jnp.ndarray, lut: jnp.ndarray
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Single-stage codebook lookup: (codes, lengths, total_bits)."""
+    return encode_lookup_pallas(symbols, lut, interpret=INTERPRET)
+
+
+def encode_with_book(symbols: jnp.ndarray, book: Codebook):
+    """Full single-stage encode using the Pallas LUT pass + jnp bit-pack.
+
+    Returns an EncodeResult (same contract as core.encoder).  The packing
+    prefix-sum consumes the kernel's (code, length) pairs; on real
+    hardware that stage lives in the link encoder (see DESIGN.md §3).
+    """
+    from ..core.encoder import EncodeResult, packed_words_capacity
+    import jax
+
+    codes, lens, _ = encode_lookup(symbols, jnp.asarray(book.code_lut()))
+    n = int(symbols.size)
+
+    # Bit-pack (same scheme as core.encoder.encode_jit, reusing its math).
+    l = lens.astype(jnp.uint32)
+    v = codes.astype(jnp.uint32)
+    ends = jnp.cumsum(l, dtype=jnp.uint32)
+    offs = ends - l
+    n_bits = ends[-1]
+    pos = offs & jnp.uint32(31)
+    idx = (offs >> jnp.uint32(5)).astype(jnp.int32)
+    sh = 32 - pos.astype(jnp.int32) - l.astype(jnp.int32)
+    hi = jnp.where(sh >= 0, v << jnp.clip(sh, 0, 31).astype(jnp.uint32),
+                   v >> jnp.clip(-sh, 0, 31).astype(jnp.uint32))
+    lo = jnp.where(sh < 0, v << jnp.clip(32 + sh, 0, 31).astype(jnp.uint32),
+                   jnp.uint32(0))
+    words = jnp.zeros((packed_words_capacity(n, book.max_len),), jnp.uint32)
+    words = words.at[idx].add(hi, mode="drop").at[idx + 1].add(lo, mode="drop")
+    return EncodeResult(words=words, n_bits=n_bits, n_symbols=n,
+                        book_id=book.book_id)
+
+
+def message_bits(symbols: jnp.ndarray, lengths: jnp.ndarray) -> jnp.ndarray:
+    """Ledger probe: exact encoded size via kernel histogram · lengths."""
+    hist = histogram256(symbols).astype(jnp.float32)
+    return jnp.dot(hist, jnp.asarray(lengths, jnp.float32))
+
+
+def merge_block_streams(block_words, block_bits) -> "tuple":
+    """Stitch per-block bitstreams (from pack_blocks_pallas) into one
+    contiguous MSB-first stream.  One barrel shift per block — the
+    transmit-FIFO side of the split (host/jnp; O(total words))."""
+    import numpy as np
+
+    bw = np.asarray(block_words)
+    bb = np.asarray(block_bits, dtype=np.int64)
+    total_bits = int(bb.sum())
+    out = np.zeros(total_bits // 32 + 2, dtype=np.uint32)
+    off = 0
+    for words, nbits in zip(bw, bb):
+        nbits = int(nbits)
+        if nbits == 0:
+            continue
+        nw = (nbits + 31) // 32 + 1
+        w = words[:nw].astype(np.uint64)
+        s = off & 31
+        base = off >> 5
+        if s == 0:
+            contrib = w
+        else:
+            contrib = (w >> s) | (np.concatenate(
+                [np.zeros(1, np.uint64), w[:-1]]) << (32 - s)) & 0xFFFFFFFF
+            contrib &= 0xFFFFFFFF
+            tail = (w[-1] << (32 - s)) & 0xFFFFFFFF
+            contrib = np.concatenate([contrib, tail[None]])
+        end = min(base + len(contrib), len(out))
+        out[base:end] |= contrib[: end - base].astype(np.uint32)
+        off += nbits
+    return out, off
+
+
+def pack_with_book(symbols, book):
+    """Full kernel-path encode: LUT kernel → block-pack kernel → merge.
+    Bit-exact with core.encoder.encode_jit (tested)."""
+    from .bitpack import pack_blocks_pallas
+
+    codes, lens, _ = encode_lookup(symbols, jnp.asarray(book.code_lut()))
+    words, bits = pack_blocks_pallas(codes, lens, interpret=INTERPRET)
+    return merge_block_streams(words, bits)

@@ -1,0 +1,26 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the semantics contracts: tests sweep shapes/dtypes and assert
+`assert_allclose(kernel(x), ref(x))` (exact for these integer kernels).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def histogram256_ref(symbols: jnp.ndarray) -> jnp.ndarray:
+    """256-bin histogram oracle (scatter-add)."""
+    sym = symbols.reshape(-1).astype(jnp.int32)
+    return jnp.zeros((256,), jnp.int32).at[sym].add(1)
+
+
+def encode_lookup_ref(symbols: jnp.ndarray, lut: jnp.ndarray
+                      ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """LUT oracle: plain gathers plus a length reduction."""
+    sym = symbols.reshape(-1).astype(jnp.int32)
+    codes = lut[:, 0].astype(jnp.uint32)[sym]
+    lens = lut[:, 1].astype(jnp.int32)[sym]
+    return codes, lens, lens.sum()

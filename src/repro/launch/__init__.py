@@ -1,0 +1,2 @@
+"""Launchers. NOTE: importing .dryrun sets XLA_FLAGS (512 host devices) —
+import it only in a dedicated process; mesh/train are safe to import."""

@@ -1,0 +1,280 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+"""Multi-pod dry-run: prove the distribution config is coherent.
+
+For every (architecture × input shape × mesh) combination this lowers
+and compiles the real step function — train_step for train shapes,
+forward for prefill, serve_step (1 token + deep KV cache) for decode —
+against ShapeDtypeStruct inputs on the production mesh (16×16 single
+pod; 2×16×16 multi-pod), then extracts:
+
+  * compiled.memory_analysis()  → bytes/device (does it fit?)
+  * compiled.cost_analysis()    → HLO FLOPs / bytes for §Roofline
+  * compiled.as_text()          → collective schedule + wire bytes
+
+Results append to a JSON file consumed by EXPERIMENTS.md §Dry-run and
+the roofline/§Perf iteration.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-4b --shape train_4k
+  python -m repro.launch.dryrun --sweep --out results/dryrun.json
+  python -m repro.launch.dryrun --sweep --multi-pod
+"""
+import argparse
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs import (ARCH_IDS, SHAPES, get_config, input_pspecs,
+                       input_specs, shape_plan, train_grad_accum)
+from ..models.common import Axes, ModelConfig
+from ..models.transformer import (decode_step, forward_train, model_init,
+                                  model_pspec)
+from ..optim.adamw import AdamWConfig, adamw_state_pspec
+from ..roofline.analysis import model_flops, roofline_report
+from ..roofline.analytic import analytic_terms
+from ..roofline.hlo_parse import parse_collectives_loop_aware
+from ..train.step import make_train_step, train_state_init
+from .mesh import TPU_V5E, axes_for, make_production_mesh
+
+
+def _shard(mesh, tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def active_param_count(cfg: ModelConfig, params_shapes) -> int:
+    """Total params minus the inactive routed-expert fraction (MoE)."""
+    total = 0
+    expert = 0
+    for leaf in jax.tree.leaves(params_shapes):
+        total += int(np_prod(leaf.shape))
+        if (cfg.n_experts > 1 and leaf.ndim >= 2
+                and cfg.n_experts in leaf.shape[:2]):
+            expert += int(np_prod(leaf.shape))
+    if cfg.n_experts > 1 and expert:
+        frac = cfg.experts_per_token / cfg.n_experts
+        return int(total - expert * (1.0 - frac))
+    return total
+
+
+def np_prod(shape) -> int:
+    out = 1
+    for s in shape:
+        out *= int(s)
+    return out
+
+
+def lower_combo(arch_id: str, shape_name: str, *, multi_pod: bool = False,
+                cfg_override: Optional[ModelConfig] = None,
+                grad_accum: Optional[int] = None,
+                opt_sharding: str = "mirror",      # mirror | zero1
+                param_sharding: str = "tp",        # tp | fsdp
+                verbose: bool = True) -> Dict[str, Any]:
+    """Lower + compile one combination; return the roofline record."""
+    t0 = time.time()
+    base = cfg_override or get_config(arch_id)
+    cfg, note = shape_plan(base, shape_name)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    if cfg is None:
+        return {"arch": arch_id, "shape": shape_name, "mesh": mesh_name,
+                "status": "skipped", "note": note}
+
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    axes = axes_for(mesh)
+    n_devices = np_prod(mesh.devices.shape)
+
+    params_shapes = jax.eval_shape(
+        lambda k: model_init(cfg, k, axes), jax.random.PRNGKey(0))
+    if param_sharding == "fsdp":
+        from ..models.transformer import fsdp_pspec
+        pspec = fsdp_pspec(cfg, axes,
+                           data_degree=n_devices // mesh.shape["model"])
+    elif param_sharding == "dp_only":
+        # Pure data parallelism: params replicated, batch sharded over
+        # EVERY mesh axis (the right regime for sub-1B attention-free
+        # models where TP collectives dwarf the matmuls — §Perf).
+        pspec = jax.tree.map(lambda s: P(*((None,) * len(tuple(s)))),
+                             model_pspec(cfg, axes),
+                             is_leaf=lambda x: isinstance(x, P))
+    else:
+        pspec = model_pspec(cfg, axes)
+    params_sh = _shard(mesh, pspec)
+    specs = input_specs(cfg, shape_name)
+    in_pspecs = input_pspecs(cfg, shape_name, axes)
+    if param_sharding == "dp_only":
+        all_axes = axes.extra_data + (axes.data, axes.model)
+
+        def _dp_batch(s):
+            parts = tuple(s)
+            if parts and parts[0] is not None:
+                return P(*((all_axes,) + parts[1:]))
+            return P(*parts)
+
+        in_pspecs = jax.tree.map(_dp_batch, in_pspecs,
+                                 is_leaf=lambda x: isinstance(x, P))
+    scalar_sh = NamedSharding(mesh, P())
+
+    with jax.set_mesh(mesh):
+        if shape.kind == "train":
+            ga = grad_accum if grad_accum is not None else train_grad_accum(
+                arch_id)
+            step = make_train_step(cfg, AdamWConfig(), grad_accum=ga)
+            state_shapes = jax.eval_shape(
+                lambda p: train_state_init(p), params_shapes)
+            from ..train.step import TrainState
+            if opt_sharding == "zero1":
+                from ..optim.adamw import zero1_state_pspec
+                opt_pspec = zero1_state_pspec(pspec, state_shapes.opt.m, axes)
+            else:
+                opt_pspec = adamw_state_pspec(pspec)
+            state_sh = TrainState(params=params_sh,
+                                  opt=_shard(mesh, opt_pspec))
+            fn = jax.jit(step,
+                         in_shardings=(state_sh, _shard(mesh,
+                                                        in_pspecs["batch"])),
+                         out_shardings=(state_sh, None))
+            lowered = fn.lower(state_shapes, specs["batch"])
+            n_tokens = shape.global_batch * shape.seq_len
+            mf = model_flops(active_param_count(cfg, params_shapes),
+                             n_tokens, train=True)
+        elif shape.kind == "prefill":
+            def fwd(params, batch):
+                return forward_train(params, batch, cfg)[0]
+            fn = jax.jit(fwd,
+                         in_shardings=(params_sh,
+                                       _shard(mesh, in_pspecs["batch"])))
+            lowered = fn.lower(params_shapes, specs["batch"])
+            n_tokens = shape.global_batch * shape.seq_len
+            mf = model_flops(active_param_count(cfg, params_shapes),
+                             n_tokens, train=False)
+        else:  # decode
+            def serve(params, tokens, caches, pos):
+                return decode_step(params, tokens, caches, pos, cfg)
+            fn = jax.jit(serve,
+                         in_shardings=(params_sh,
+                                       _shard(mesh, in_pspecs["tokens"]),
+                                       _shard(mesh, in_pspecs["caches"]),
+                                       scalar_sh))
+            lowered = fn.lower(params_shapes, specs["tokens"],
+                               specs["caches"], specs["pos"])
+            mf = model_flops(active_param_count(cfg, params_shapes),
+                             shape.global_batch, train=False)
+
+        compiled = lowered.compile()
+
+    cost = compiled.cost_analysis() or {}
+    mem = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    # Loop-aware collective accounting: scanned-layer collectives count
+    # once per trip (XLA's flat cost model counts while bodies once).
+    coll = parse_collectives_loop_aware(hlo, default_group=n_devices)
+    rep = roofline_report(
+        arch=arch_id, shape=shape_name, mesh_name=mesh_name,
+        n_devices=n_devices, cost=cost, mem_stats=mem, coll=coll,
+        hw=TPU_V5E, model_flops_total=mf, note=note)
+    rec = rep.to_dict()
+
+    # Analytic compute/memory terms (closed-form workload math — the HLO
+    # cost model undercounts scan bodies; see roofline/analytic.py).
+    n_params = sum(np_prod(l.shape) for l in jax.tree.leaves(params_shapes))
+    cache_bytes = 0.0
+    if shape.kind == "decode":
+        cache_bytes = sum(np_prod(l.shape) * l.dtype.itemsize
+                          for l in jax.tree.leaves(specs["caches"]))
+    ga_used = (grad_accum if grad_accum is not None
+               else train_grad_accum(arch_id)) if shape.kind == "train" else 1
+    p_shards = (n_devices if param_sharding == "fsdp"
+                else mesh.shape["model"])
+    o_shards = (n_devices if opt_sharding == "zero1" else p_shards)
+    at = analytic_terms(
+        cfg, kind=shape.kind, seq_len=shape.seq_len,
+        global_batch=shape.global_batch, n_params=n_params,
+        n_active_params=active_param_count(cfg, params_shapes),
+        n_devices=n_devices, model_shards=mesh.shape["model"],
+        data_shards=n_devices // mesh.shape["model"], hw=TPU_V5E,
+        cache_bytes_total=cache_bytes, grad_accum=ga_used,
+        param_shards=p_shards, opt_shards=o_shards)
+    rec.update(at)
+    terms = {"compute": at["analytic_compute_s"],
+             "memory": at["analytic_memory_s"],
+             "collective": rec["collective_s"]}
+    rec["bottleneck"] = max(terms, key=terms.get)
+    rec["roofline_step_s"] = max(terms.values())
+    rec.update({"status": "ok", "compile_s": round(time.time() - t0, 1),
+                "grad_accum": ga_used if shape.kind == "train" else None,
+                "n_devices": n_devices,
+                "hbm_ok": rec["bytes_per_device"]["peak_hbm_est"]
+                <= TPU_V5E.hbm_bytes})
+    if verbose:
+        print(f"[dryrun] {arch_id:<24} {shape_name:<12} {mesh_name:<8} "
+              f"compile={rec['compile_s']:>7.1f}s "
+              f"flops/dev={rec['hlo_flops']:.3e} "
+              f"wire/dev={rec['wire_bytes']:.3e}B "
+              f"bottleneck={rec['bottleneck']} {note}")
+        print(f"         memory_analysis: {mem}")
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS + ("gemma2-2b",))
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--sweep", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--grad-accum", type=int, default=None)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    combos = []
+    meshes = [args.multi_pod] if not args.both_meshes else [False, True]
+    if args.sweep:
+        for arch in ARCH_IDS:
+            for shape in SHAPES:
+                for mp in meshes:
+                    combos.append((arch, shape, mp))
+    else:
+        if not (args.arch and args.shape):
+            ap.error("need --arch and --shape (or --sweep)")
+        combos = [(args.arch, args.shape, mp) for mp in meshes]
+
+    results = []
+    if args.out and os.path.exists(args.out):
+        with open(args.out) as f:
+            results = json.load(f)
+    done = {(r["arch"], r["shape"], r["mesh"]) for r in results}
+
+    failures = 0
+    for arch, shape, mp in combos:
+        mesh_name = "2x16x16" if mp else "16x16"
+        if (arch, shape, mesh_name) in done:
+            print(f"[dryrun] {arch} {shape} {mesh_name}: cached, skipping")
+            continue
+        try:
+            rec = lower_combo(arch, shape, multi_pod=mp,
+                              grad_accum=args.grad_accum)
+        except Exception as e:  # a failure here is a bug in our sharding
+            traceback.print_exc()
+            rec = {"arch": arch, "shape": shape, "mesh": mesh_name,
+                   "status": "FAILED", "error": f"{type(e).__name__}: {e}"}
+            failures += 1
+        results.append(rec)
+        if args.out:
+            os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+            with open(args.out, "w") as f:
+                json.dump(results, f, indent=1, default=str)
+    print(f"[dryrun] finished: {len(results)} records, {failures} failures")
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

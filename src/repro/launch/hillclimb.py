@@ -1,0 +1,232 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+"""§Perf hillclimb driver: hypothesis → change → re-lower → measure.
+
+Three pairs (chosen per the brief from the baseline sweep):
+  qwen3-4b × train_4k        — most collective-bound (residual-stream
+                                all-reduces × remat recompute)
+  deepseek-v3-671b × train_4k — the paper's home turf (MoE all-to-all +
+                                DP gradients) and the memory-capacity
+                                pathology (doesn't fit without ZeRO/FSDP)
+  mamba2-780m × train_4k     — worst useful-FLOPs fraction (SSD chunk
+                                quadratic overhead)
+
+Each iteration re-lowers the full-size config on the production mesh and
+re-derives the three roofline terms.  Compression rows scale the
+collective term by the MEASURED fixed-codebook ratios from the benchmark
+suite (benchmarks/fig4: interleaved 0.822, plane-split 0.715 — see
+EXPERIMENTS.md §Paper-claims); everything else is re-compiled, not
+extrapolated.
+
+Usage:  python -m repro.launch.hillclimb [--pair qwen3] [--out results/hillclimb.json]
+"""
+import argparse
+import json
+from dataclasses import replace
+from typing import Any, Dict, List, Optional, Tuple
+
+# Measured wire-compression ratios (coded/raw) from benchmarks on the
+# Gemma SFT proxy — fig4 (paper-faithful interleaved codebook) and
+# fig4ext (beyond-paper per-byte-plane codebooks).
+RATIO_PAPER = 0.822
+RATIO_PLANE_SPLIT = 0.715
+
+
+def _apply_compression(rec: Dict[str, Any], ratio: float, label: str
+                       ) -> Dict[str, Any]:
+    out = dict(rec)
+    out["collective_s"] = rec["collective_s"] * ratio
+    out["wire_bytes"] = rec["wire_bytes"] * ratio
+    terms = {"compute": out["analytic_compute_s"],
+             "memory": out["analytic_memory_s"],
+             "collective": out["collective_s"]}
+    out["bottleneck"] = max(terms, key=terms.get)
+    out["roofline_step_s"] = max(terms.values())
+    out["note"] = (out.get("note", "") + f" +wire-compression({label}, "
+                   f"ratio={ratio})").strip()
+    return out
+
+
+def run_pair(pair: str, out_records: List[Dict[str, Any]],
+             flush=None) -> None:
+    from ..configs import get_config
+    from .dryrun import lower_combo
+
+    def go(name: str, hypothesis: str, **kw):
+        print(f"\n=== {pair} :: {name}", flush=True)
+        print(f"    hypothesis: {hypothesis}", flush=True)
+        cfg_patch = kw.pop("cfg_patch", None)
+        compress = kw.pop("compress", None)
+        base_rec = kw.pop("base_rec", None)
+        if compress is not None:
+            ratio, label = compress
+            rec = _apply_compression(base_rec, ratio, label)
+        else:
+            cfg = get_config(pair.split("/")[0])
+            if cfg_patch:
+                cfg = replace(cfg, **cfg_patch)
+            rec = lower_combo(pair.split("/")[0], pair.split("/")[1],
+                              cfg_override=cfg, verbose=False, **kw)
+        rec["iteration"] = name
+        rec["pair"] = pair
+        rec["hypothesis"] = hypothesis
+        hbm = rec.get("bytes_per_device", {}).get("peak_hbm_est", 0)
+        print(f"    compute={rec['analytic_compute_s']:.3f}s "
+              f"memory={rec['analytic_memory_s']:.3f}s "
+              f"collective={rec['collective_s']:.3f}s "
+              f"→ bottleneck={rec['bottleneck']} "
+              f"step≥{rec['roofline_step_s']:.3f}s "
+              f"hbm={hbm / 1e9:.1f}GB/dev "
+              f"(compile {rec.get('compile_s', 0)}s)", flush=True)
+        out_records.append(rec)
+        if flush is not None:
+            flush()
+        return rec
+
+    arch, shape = pair.split("/")
+
+    if arch == "qwen3-4b":
+        base = go("baseline", "paper-faithful baseline (remat=block): "
+                  "6 residual-AR sites/layer incl. remat re-forward")
+        it1 = go("remat=save_mixer_ffn",
+                 "saving post-collective mixer/ffn outputs removes the "
+                 "2 re-forward AR sites of 6 → collective −~33%",
+                 cfg_patch={"remat": "save_mixer_ffn"})
+        it2 = go("ga1",
+                 "grad_accum 2→1 halves scan trips but doubles per-trip "
+                 "payload → wire unchanged; memory term grows (activations "
+                 "×2); expect no collective win (refutation probe)",
+                 cfg_patch={"remat": "save_mixer_ffn"}, grad_accum=1)
+        best = min((base, it1), key=lambda r: r["collective_s"])
+        go("paper: fixed-codebook wire compression",
+           "paper technique on the remaining AR payloads: coded/raw = "
+           f"{RATIO_PAPER} (measured, fig4) → collective × {RATIO_PAPER}",
+           compress=(RATIO_PAPER, "paper-interleaved"), base_rec=best)
+        go("beyond-paper: plane-split codebooks",
+           "per-byte-plane books beat one interleaved book: ratio "
+           f"{RATIO_PLANE_SPLIT} (measured, fig4ext)",
+           compress=(RATIO_PLANE_SPLIT, "plane-split"), base_rec=best)
+
+    elif arch == "deepseek-v3-671b":
+        base = go("baseline", "paper-faithful baseline: params+Adam "
+                  "replicated over data → ~430 GB/device, 27× over HBM; "
+                  "scatter-MoE makes SPMD all-reduce the (E,C,d) buffers "
+                  "across data shards → collective blow-up")
+        it1 = go("moe=eshard",
+                 "expert-sharded MoE: each model shard runs its E/16 "
+                 "local experts on its data shard's tokens; one psum "
+                 "combines → MoE wire collapses from (E,C,d)-buffer ARs "
+                 "to one (tokens,d) AR per block (~100× less)",
+                 cfg_patch={"moe_impl": "eshard"})
+        it2 = go("eshard+zero1",
+                 "shard Adam m/v (f32, 8N bytes) over data(16): optimizer "
+                 "bytes /16 (params still replicated)",
+                 cfg_patch={"moe_impl": "eshard"}, opt_sharding="zero1")
+        it3 = go("eshard+zero1+fsdp",
+                 "also shard params over data (ZeRO-3): param bytes /16 → "
+                 "fits multi-pod HBM; adds per-layer all-gather wire",
+                 cfg_patch={"moe_impl": "eshard"},
+                 opt_sharding="zero1", param_sharding="fsdp")
+        it4 = go("eshard+zero1+fsdp+save_mixer_ffn",
+                 "drop remat re-forward ARs on top of FSDP",
+                 opt_sharding="zero1", param_sharding="fsdp",
+                 cfg_patch={"moe_impl": "eshard",
+                            "remat": "save_mixer_ffn"})
+        best = min((it3, it4), key=lambda r: r["roofline_step_s"])
+        go("paper: fixed-codebook wire compression",
+           "compress MoE dispatch + grad + FSDP-gather payloads: ratio "
+           f"{RATIO_PAPER} (measured)",
+           compress=(RATIO_PAPER, "paper-interleaved"), base_rec=best)
+        go("beyond-paper: plane-split codebooks",
+           f"plane-split ratio {RATIO_PLANE_SPLIT} (measured)",
+           compress=(RATIO_PLANE_SPLIT, "plane-split"), base_rec=best)
+
+    elif arch == "command-r-plus-104b":
+        base = go("baseline(ga=16)",
+                  "paper-faithful baseline: ga=16 needed for activation "
+                  "memory, but XLA reduces weight-grad partial sums per "
+                  "microbatch → wire ∝ ga (qwen3 lesson transfers?)")
+        it1 = go("ga=4",
+                 "4× fewer accumulation trips → predict wire ÷4 "
+                 "(~25.3 TB → ~6.3 TB); activation memory ×4 (watch HBM)",
+                 grad_accum=4)
+        it2 = go("ga=4+save_mixer_ffn",
+                 "drop remat re-forward AR sites on top",
+                 grad_accum=4, cfg_patch={"remat": "save_mixer_ffn"})
+        it3 = go("ga=4+save_mixer_ffn+zero1",
+                 "Adam moments over data: 397 GB/dev → ~120 GB "
+                 "(capacity move; wire unchanged)",
+                 grad_accum=4, cfg_patch={"remat": "save_mixer_ffn"},
+                 opt_sharding="zero1")
+        best = min((it1, it2, it3), key=lambda r: r["roofline_step_s"])
+        go("paper: fixed-codebook wire compression",
+           f"remaining wire × {RATIO_PAPER} (measured)",
+           compress=(RATIO_PAPER, "paper-interleaved"), base_rec=best)
+        go("beyond-paper: plane-split codebooks",
+           f"plane-split ratio {RATIO_PLANE_SPLIT}",
+           compress=(RATIO_PLANE_SPLIT, "plane-split"), base_rec=best)
+
+    elif arch == "mamba2-780m":
+        base = go("baseline(chunk=128)",
+                  "SSD intra-chunk term ∝ chunk Q per token: Q=128 "
+                  "spends 2·Q·(N+P)=~66k extra FLOPs/token vs 6·N_p=4.7M "
+                  "useful — check which term dominates")
+        it1 = go("chunk=64",
+                 "halving Q halves the intra-chunk quadratic FLOPs and "
+                 "the (B,H,C,Q,Q) decay-tensor bytes; doubles (cheap) "
+                 "inter-chunk scan steps → memory term −, compute −",
+                 cfg_patch={"ssm_chunk": 64})
+        it2 = go("chunk=256",
+                 "doubling Q: opposite direction (control arm)",
+                 cfg_patch={"ssm_chunk": 256})
+        it3 = go("dp_only",
+                 "780M params on 256 chips doesn't need TP: replicate "
+                 "params, shard batch over all 256 → the per-layer TP "
+                 "activation ARs vanish; wire = one grads AR "
+                 "(~1.5 GB × 2(n-1)/n ≈ 3 GB ≈ 0.06 s vs 1.53 s)",
+                 param_sharding="dp_only")
+        best = min((base, it1, it2, it3), key=lambda r: r["roofline_step_s"])
+        go("paper: fixed-codebook wire compression",
+           f"DP gradient all-reduce × {RATIO_PAPER} (measured)",
+           compress=(RATIO_PAPER, "paper-interleaved"), base_rec=best)
+        go("beyond-paper: plane-split codebooks",
+           f"plane-split ratio {RATIO_PLANE_SPLIT}",
+           compress=(RATIO_PLANE_SPLIT, "plane-split"), base_rec=best)
+
+
+PAIRS = ("qwen3-4b/train_4k", "deepseek-v3-671b/train_4k",
+         "mamba2-780m/train_4k", "command-r-plus-104b/train_4k")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--pair", default=None,
+                    help="substring filter, e.g. 'qwen3'")
+    ap.add_argument("--out", default="results/hillclimb.json")
+    args = ap.parse_args()
+
+    records: List[Dict[str, Any]] = []
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            records = json.load(f)
+    def flush():
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(records, f, indent=1, default=str)
+
+    for pair in PAIRS:
+        if args.pair and args.pair not in pair:
+            continue
+        n_have = sum(1 for r in records if r["pair"] == pair)
+        if n_have >= 5:
+            print(f"[hillclimb] {pair}: {n_have} cached records, skipping")
+            continue
+        records[:] = [r for r in records if r["pair"] != pair]
+        run_pair(pair, records, flush=flush)
+        flush()
+    print(f"\n[hillclimb] {len(records)} records → {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""Production mesh construction (TPU v5e pods).
+
+A FUNCTION, not a module-level constant — importing this module never
+touches jax device state.  Single pod: (data=16, model=16) over 256
+chips; multi-pod: (pod=2, data=16, model=16) over 512 chips, with `pod`
+acting as a second (outer, DCN-ish) data-parallel axis.
+"""
+from __future__ import annotations
+
+import jax
+
+from ..models.common import Axes
+
+__all__ = ["make_production_mesh", "axes_for", "HardwareSpec", "TPU_V5E"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def axes_for(mesh) -> Axes:
+    names = mesh.axis_names
+    return Axes(data="data", model="model",
+                model_size=mesh.shape["model"],
+                extra_data=("pod",) if "pod" in names else ())
+
+
+class HardwareSpec:
+    """Roofline constants for the target part."""
+
+    def __init__(self, name: str, peak_flops: float, hbm_bw: float,
+                 ici_bw: float):
+        self.name = name
+        self.peak_flops = peak_flops   # FLOP/s (bf16)
+        self.hbm_bw = hbm_bw           # bytes/s
+        self.ici_bw = ici_bw           # bytes/s per link
+        self.hbm_bytes = 16e9          # HBM capacity per chip
+
+
+TPU_V5E = HardwareSpec("tpu-v5e", peak_flops=197e12, hbm_bw=819e9,
+                       ici_bw=50e9)

@@ -1,0 +1,132 @@
+"""Training driver: end-to-end SFT/pretrain loop with the single-stage
+Huffman compression feature integrated (codebook bootstrap → ledger).
+
+CPU-friendly by design: pick a reduced arch (``--reduced``) to actually
+step; the full configs are for the dry-run.  On a real TPU fleet the
+same driver runs under `jax.distributed.initialize()` with the
+production mesh.
+
+Example:
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-4b --reduced \
+      --steps 50 --batch-size 8 --seq-len 128 --compress
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..comm.compression import CompressionSpec
+from ..comm.ledger import CollectiveLedger
+from ..configs import ARCH_IDS, get_config, train_grad_accum
+from ..core.codebook import CodebookRegistry
+from ..core.symbols import SCHEMES, bf16_planes_np
+from ..data import DataConfig, SyntheticDataset
+from ..models.transformer import model_init, param_count
+from ..optim.adamw import AdamWConfig, cosine_schedule
+from ..train.step import make_train_step, train_state_init
+from ..checkpoint import save_pytree
+
+
+def bootstrap_codebooks(state, registry: CodebookRegistry,
+                        tensor_kind: str = "grad") -> None:
+    """Paper §4: codebooks come from PREVIOUS data — here, from the
+    initial parameter distribution as the step-0 stand-in; the loop
+    re-observes real gradients and rebuilds off the critical path."""
+    sample = np.concatenate([
+        np.asarray(leaf).reshape(-1)[:65536].astype(np.float32)
+        for leaf in jax.tree.leaves(state.params)[:8]])
+    planes = bf16_planes_np(sample.astype(jnp.bfloat16))
+    for plane, sym in planes.items():
+        registry.install((tensor_kind, "bf16", plane),
+                         np.bincount(sym, minlength=256))
+
+
+def main(argv: Optional[list] = None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma2-2b",
+                    choices=ARCH_IDS + ("gemma2-2b",))
+    ap.add_argument("--reduced", action="store_true",
+                    help="train the smoke-scale variant (CPU-friendly)")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch-size", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--grad-accum", type=int, default=None)
+    ap.add_argument("--compress", action="store_true",
+                    help="enable the fixed-codebook gradient probe")
+    ap.add_argument("--rebuild-every", type=int, default=10)
+    ap.add_argument("--checkpoint", default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    ga = args.grad_accum or (1 if args.reduced else train_grad_accum(args.arch))
+
+    print(f"[train] arch={cfg.name} layers={cfg.n_layers} "
+          f"d_model={cfg.d_model} grad_accum={ga}")
+    params = model_init(cfg, jax.random.PRNGKey(args.seed))
+    print(f"[train] params: {param_count(params):,}")
+    state = train_state_init(params)
+
+    registry = CodebookRegistry()
+    comp_spec = None
+    if args.compress:
+        bootstrap_codebooks(state, registry)
+        comp_spec = CompressionSpec.from_registry(registry, "grad", "bf16",
+                                                  mode="ledger")
+
+    sched = cosine_schedule(args.lr, warmup=max(args.steps // 20, 1),
+                            total=args.steps)
+    step_fn = jax.jit(make_train_step(cfg, AdamWConfig(lr=args.lr), sched,
+                                      grad_accum=ga, comp_spec=comp_spec))
+    ds = iter(SyntheticDataset(cfg, DataConfig(args.batch_size, args.seq_len,
+                                               seed=args.seed)))
+    ledger = CollectiveLedger()
+    t0 = time.time()
+    for i in range(args.steps):
+        batch = {k: jnp.asarray(v) for k, v in next(ds).items()}
+        state, m = step_fn(state, batch)
+        if comp_spec is not None:
+            # DP all-reduce of grads: ring factor 2(n-1)/n with n = data
+            # parallelism (1 on this host; ledger keys stay meaningful).
+            ledger.record("grad/all_reduce(dp)", {
+                "raw_wire_bits": float(m["grad_raw_bits"]),
+                "coded_wire_bits": float(m["grad_coded_bits"])})
+            # Observe the real gradient PMFs (paper §4: codebooks track
+            # previous batches) and periodically rebuild off-path.
+            for plane in ("lo", "hi"):
+                registry.observe(("grad", "bf16", plane),
+                                 np.asarray(m[f"grad_hist_{plane}"]))
+            if (i + 1) % args.rebuild_every == 0:
+                registry.rebuild()
+                comp_spec = CompressionSpec.from_registry(
+                    registry, "grad", "bf16", mode="ledger")
+                step_fn = jax.jit(make_train_step(
+                    cfg, AdamWConfig(lr=args.lr), sched, grad_accum=ga,
+                    comp_spec=comp_spec))
+                print(f"[train] step {i}: codebooks rebuilt from observed "
+                      f"gradient PMFs")
+        if i % max(args.steps // 10, 1) == 0 or i == args.steps - 1:
+            print(f"[train] step {i:>4} loss={float(m['loss']):.4f} "
+                  f"ce={float(m['ce']):.4f} gnorm={float(m['grad_norm']):.3f}")
+    dt = time.time() - t0
+    print(f"[train] {args.steps} steps in {dt:.1f}s "
+          f"({args.steps / dt:.2f} steps/s)")
+    if comp_spec is not None:
+        print("[train] collective-compression ledger:")
+        print(ledger.report())
+    if args.checkpoint:
+        save_pytree(args.checkpoint, state.params,
+                    {"arch": cfg.name, "steps": args.steps})
+        print(f"[train] checkpoint → {args.checkpoint}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,11 @@
+"""Model zoo: composable blocks covering the assigned architecture pool
+(dense GQA, MLA, MoE, Mamba-2 SSM, RG-LRU hybrid, encoder-only, VLM)."""
+from .blocks import (BLOCK_KINDS, block_apply, block_cache_init,
+                     block_cache_pspec, block_decode, block_init,
+                     block_prefill, block_pspec)
+from .common import Axes, BlockGroup, ModelConfig
+from .transformer import (cache_pspec, decode_step, forward_train,
+                          init_caches, model_init, model_pspec, param_count,
+                          prefill)
+
+__all__ = [k for k in dir() if not k.startswith("_")]

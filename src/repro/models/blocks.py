@@ -1,0 +1,199 @@
+"""Block kinds: (sequence mixer + FFN) compositions behind one registry.
+
+Kinds:
+  attn        GQA attention + dense gated MLP
+  local       sliding-window attention + dense MLP
+  attn_moe    GQA attention + MoE            local_moe   windowed + MoE
+  mla         MLA attention + dense MLP      mla_moe     MLA + MoE
+  mla_local   windowed MLA + dense MLP       mla_local_moe
+  rec         RG-LRU recurrent block + dense MLP
+  mamba       Mamba-2 mixer (no separate FFN — mirrors the reference stack)
+
+Every block is pre-norm with residuals.  ``block_apply`` returns
+(x, aux) where aux is the MoE load-balance loss (0 elsewhere);
+``block_decode`` returns (x, new_cache).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import Axes, ModelConfig
+from .layers import (attn_apply, attn_cache_init, attn_cache_pspec,
+                     attn_decode, attn_init, attn_pspec, mlp_apply, mlp_init,
+                     mlp_pspec, rmsnorm_apply, rmsnorm_init, rmsnorm_pspec)
+from .mla import (mla_apply, mla_cache_init, mla_cache_pspec, mla_decode,
+                  mla_init, mla_pspec)
+from .moe import moe_apply, moe_apply_eshard, moe_init, moe_pspec
+from .rglru import (rglru_apply, rglru_cache_init, rglru_cache_pspec,
+                    rglru_decode, rglru_init, rglru_pspec)
+from .ssm import (mamba_apply, mamba_cache_init, mamba_cache_pspec,
+                  mamba_decode, mamba_init, mamba_pspec)
+
+__all__ = ["BLOCK_KINDS", "block_init", "block_pspec", "block_apply",
+           "block_cache_init", "block_cache_pspec", "block_decode"]
+
+
+def _parse(kind: str) -> Tuple[str, bool, str]:
+    """kind → (mixer, windowed, ffn) where mixer ∈ {gqa, mla, rec, mamba}."""
+    table = {
+        "attn": ("gqa", False, "dense"), "local": ("gqa", True, "dense"),
+        "attn_moe": ("gqa", False, "moe"), "local_moe": ("gqa", True, "moe"),
+        "mla": ("mla", False, "dense"), "mla_moe": ("mla", False, "moe"),
+        "mla_local": ("mla", True, "dense"),
+        "mla_local_moe": ("mla", True, "moe"),
+        "rec": ("rec", False, "dense"),
+        "mamba": ("mamba", False, "none"),
+    }
+    return table[kind]
+
+
+BLOCK_KINDS = ("attn", "local", "attn_moe", "local_moe", "mla", "mla_moe",
+               "mla_local", "mla_local_moe", "rec", "mamba")
+
+
+def _window(cfg: ModelConfig, windowed: bool) -> int:
+    return cfg.sliding_window if windowed else 0
+
+
+# ------------------------------------------------------------------ init
+def block_init(kind: str, key, cfg: ModelConfig, axes: Axes):
+    mixer, windowed, ffn = _parse(kind)
+    k1, k2 = jax.random.split(key)
+    p: Dict[str, Any] = {"norm_mix": rmsnorm_init(cfg)}
+    if mixer == "gqa":
+        p["mixer"] = attn_init(k1, cfg, axes)
+    elif mixer == "mla":
+        p["mixer"] = mla_init(k1, cfg, axes)
+    elif mixer == "rec":
+        p["mixer"] = rglru_init(k1, cfg, axes)
+    elif mixer == "mamba":
+        p["mixer"] = mamba_init(k1, cfg, axes)
+    if ffn != "none":
+        p["norm_ffn"] = rmsnorm_init(cfg)
+        p["ffn"] = (moe_init(k2, cfg, axes) if ffn == "moe"
+                    else mlp_init(k2, cfg, axes))
+    return p
+
+
+def block_pspec(kind: str, cfg: ModelConfig, axes: Axes):
+    mixer, windowed, ffn = _parse(kind)
+    p: Dict[str, Any] = {"norm_mix": rmsnorm_pspec(cfg, axes)}
+    p["mixer"] = {"gqa": attn_pspec, "mla": mla_pspec, "rec": rglru_pspec,
+                  "mamba": mamba_pspec}[mixer](cfg, axes)
+    if ffn != "none":
+        p["norm_ffn"] = rmsnorm_pspec(cfg, axes)
+        p["ffn"] = (moe_pspec(cfg, axes) if ffn == "moe"
+                    else mlp_pspec(cfg, axes))
+    return p
+
+
+# ----------------------------------------------------------------- apply
+def block_apply(kind: str, params, x, cfg: ModelConfig
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    from jax.ad_checkpoint import checkpoint_name
+
+    mixer, windowed, ffn = _parse(kind)
+    w = _window(cfg, windowed)
+    h = rmsnorm_apply(params["norm_mix"], x, cfg.norm_eps)
+    if mixer == "gqa":
+        h = attn_apply(params["mixer"], h, cfg, window=w)
+    elif mixer == "mla":
+        h = mla_apply(params["mixer"], h, cfg, window=w)
+    elif mixer == "rec":
+        h = rglru_apply(params["mixer"], h, cfg)
+    elif mixer == "mamba":
+        h = mamba_apply(params["mixer"], h, cfg)
+    # Post-collective tap: under remat="save_mixer_ffn" these named values
+    # are saved, so the remat re-forward never re-runs the TP all-reduce.
+    h = checkpoint_name(h, "mixer_out")
+    x = x + h
+    aux = jnp.zeros((), jnp.float32)
+    if ffn != "none":
+        h = rmsnorm_apply(params["norm_ffn"], x, cfg.norm_eps)
+        if ffn == "moe":
+            apply_fn = (moe_apply_eshard if cfg.moe_impl == "eshard"
+                        else moe_apply)
+            h, aux = apply_fn(params["ffn"], h, cfg)
+        else:
+            h = mlp_apply(params["ffn"], h, cfg)
+        h = checkpoint_name(h, "ffn_out")
+        x = x + h
+    return x, aux
+
+
+# ----------------------------------------------------------------- cache
+def block_cache_init(kind: str, cfg: ModelConfig, batch: int, cache_len: int,
+                     dtype=None):
+    mixer, windowed, _ = _parse(kind)
+    w = _window(cfg, windowed)
+    if mixer == "gqa":
+        return attn_cache_init(cfg, batch, cache_len, window=w, dtype=dtype)
+    if mixer == "mla":
+        return mla_cache_init(cfg, batch, cache_len, window=w, dtype=dtype)
+    if mixer == "rec":
+        return rglru_cache_init(cfg, batch, dtype=dtype)
+    if mixer == "mamba":
+        return mamba_cache_init(cfg, batch, dtype=dtype)
+    raise ValueError(kind)
+
+
+def block_cache_pspec(kind: str, cfg: ModelConfig, axes: Axes):
+    mixer, _, _ = _parse(kind)
+    return {"gqa": attn_cache_pspec, "mla": mla_cache_pspec,
+            "rec": rglru_cache_pspec,
+            "mamba": mamba_cache_pspec}[mixer](cfg, axes)
+
+
+def block_decode(kind: str, params, x, cache, pos, cfg: ModelConfig):
+    mixer, windowed, ffn = _parse(kind)
+    w = _window(cfg, windowed)
+    h = rmsnorm_apply(params["norm_mix"], x, cfg.norm_eps)
+    if mixer == "gqa":
+        h, cache = attn_decode(params["mixer"], h, cache, pos, cfg, window=w)
+    elif mixer == "mla":
+        h, cache = mla_decode(params["mixer"], h, cache, pos, cfg, window=w)
+    elif mixer == "rec":
+        h, cache = rglru_decode(params["mixer"], h, cache, pos, cfg)
+    elif mixer == "mamba":
+        h, cache = mamba_decode(params["mixer"], h, cache, pos, cfg)
+    x = x + h
+    if ffn != "none":
+        h = rmsnorm_apply(params["norm_ffn"], x, cfg.norm_eps)
+        if ffn == "moe":
+            h, _ = moe_apply(params["ffn"], h, cfg)
+        else:
+            h = mlp_apply(params["ffn"], h, cfg)
+        x = x + h
+    return x, cache
+
+
+def block_prefill(kind: str, params, x, cfg: ModelConfig, cache_len: int):
+    """Full-sequence forward that also materializes the block's cache."""
+    from .layers import attn_prefill
+    from .mla import mla_prefill
+    from .rglru import rglru_prefill
+    from .ssm import mamba_prefill
+
+    mixer, windowed, ffn = _parse(kind)
+    w = _window(cfg, windowed)
+    h = rmsnorm_apply(params["norm_mix"], x, cfg.norm_eps)
+    if mixer == "gqa":
+        h, cache = attn_prefill(params["mixer"], h, cfg, cache_len, window=w)
+    elif mixer == "mla":
+        h, cache = mla_prefill(params["mixer"], h, cfg, cache_len, window=w)
+    elif mixer == "rec":
+        h, cache = rglru_prefill(params["mixer"], h, cfg, cache_len)
+    elif mixer == "mamba":
+        h, cache = mamba_prefill(params["mixer"], h, cfg, cache_len)
+    x = x + h
+    if ffn != "none":
+        h = rmsnorm_apply(params["norm_ffn"], x, cfg.norm_eps)
+        if ffn == "moe":
+            h, _ = moe_apply(params["ffn"], h, cfg)
+        else:
+            h = mlp_apply(params["ffn"], h, cfg)
+        x = x + h
+    return x, cache

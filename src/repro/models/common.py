@@ -1,0 +1,212 @@
+"""Model configuration and parameter/sharding utilities.
+
+One `ModelConfig` describes any architecture in the assigned pool: dense
+GQA transformers, MLA (DeepSeek), MoE, Mamba-2 SSM, RG-LRU hybrids,
+encoder-only audio backbones and VLM decoders.  A config's layer stack is
+a list of ``BlockGroup``s — (pattern of block kinds, repeat count) — so
+heterogeneous stacks (RecurrentGemma's rec/rec/attn period, DeepSeek's
+dense prefix) scan over their repeats with compact HLO.
+
+Sharding follows Megatron TP on the `model` mesh axis + DP on `data`
+(`pod` is a second DP axis in the multi-pod mesh).  `shard_or_replicate`
+falls back to replication when a dimension doesn't divide the axis (e.g.
+8 KV heads on a 16-way model axis) — recorded per tensor so the dry-run
+report can show it.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+__all__ = ["BlockGroup", "ModelConfig", "Axes", "shard_or_replicate",
+           "param_dtype", "truncated_normal_init"]
+
+
+@dataclass(frozen=True)
+class BlockGroup:
+    """A scanned group: ``pattern`` applied ``repeats`` times in sequence."""
+    pattern: Tuple[str, ...]       # e.g. ("rec", "rec", "attn")
+    repeats: int
+
+    @property
+    def n_layers(self) -> int:
+        return len(self.pattern) * self.repeats
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    arch_type: str                 # dense | moe | ssm | hybrid | audio | vlm
+    d_model: int
+    vocab_size: int
+    blocks: Tuple[BlockGroup, ...]
+    # ---- attention (gqa / local / mla) ----
+    n_heads: int = 0
+    n_kv_heads: int = 0
+    head_dim: int = 0
+    qk_norm: bool = False
+    logit_softcap: float = 0.0
+    rope_theta: float = 10_000.0
+    sliding_window: int = 0        # >0 → windowed attention for "local" kind
+    causal: bool = True            # False → encoder-only (hubert)
+    # ---- ffn ----
+    d_ff: int = 0
+    ffn_activation: str = "silu"   # silu (gated) | gelu (gated)
+    # ---- moe ----
+    n_experts: int = 0
+    experts_per_token: int = 0
+    n_shared_experts: int = 0
+    moe_d_ff: int = 0
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 0.001
+    # "scatter": capacity buffers via global scatter (naive; XLA SPMD
+    #   all-reduces the (E,C,d) buffers across data shards — the measured
+    #   baseline pathology).
+    # "eshard": shard_map expert-sharded compute — every model shard runs
+    #   its local experts over its data shard's tokens and a single psum
+    #   combines (§Perf lever; needs a ("data","model") mesh in context).
+    moe_impl: str = "scatter"
+    # ---- mla (deepseek) ----
+    use_mla: bool = False
+    q_lora_rank: int = 0
+    kv_lora_rank: int = 0
+    qk_nope_head_dim: int = 0
+    qk_rope_head_dim: int = 0
+    v_head_dim: int = 0
+    # ---- ssm (mamba2) ----
+    ssm_state: int = 0
+    ssm_conv: int = 4
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_n_groups: int = 1
+    ssm_chunk: int = 128           # SSD chunk length (§Perf lever)
+    # ---- rg-lru (recurrentgemma) ----
+    lru_width: int = 0
+    conv_width: int = 4
+    # ---- multimodal front-end stubs ----
+    prefix_len: int = 0            # VLM patch slots / audio frames
+    prefix_only: bool = False      # True → inputs are embeddings (audio)
+    # ---- misc ----
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+    dtype: Any = jnp.bfloat16
+    # KV-cache storage dtype (None → dtype).  float8_e4m3fn halves decode
+    # HBM traffic; values dequantize to compute dtype on read (§Perf).
+    kv_cache_dtype: Any = None
+    # remat policy for train:
+    #   "none"          — save everything
+    #   "block"         — full per-block remat (recomputes TP collectives!)
+    #   "save_mixer_ffn"— per-block remat but the post-collective mixer/ffn
+    #                     outputs are saved, so the remat re-forward never
+    #                     re-runs an all-reduce (§Perf lever)
+    remat: str = "block"
+    source: str = ""               # citation (paper / model card)
+
+    # ------------------------------------------------------------------
+    @property
+    def n_layers(self) -> int:
+        return sum(g.n_layers for g in self.blocks)
+
+    @property
+    def layer_kinds(self) -> Tuple[str, ...]:
+        kinds: Tuple[str, ...] = ()
+        for g in self.blocks:
+            kinds = kinds + g.pattern * g.repeats
+        return kinds
+
+    @property
+    def is_decoder(self) -> bool:
+        return self.causal
+
+    def has_kind(self, *needles: str) -> bool:
+        return any(any(n in k for n in needles) for k in self.layer_kinds)
+
+    @property
+    def supports_long_context(self) -> bool:
+        """Sub-quadratic sequence mixing for every layer kind?"""
+        full_attn = {"attn", "attn_moe", "mla", "mla_moe"}
+        return all(k not in full_attn for k in self.layer_kinds)
+
+    def with_sliding_window(self, window: int) -> "ModelConfig":
+        """The SWA long-context variant: every full-attention kind becomes
+        its windowed twin (noted as variant=swa in the dry-run table)."""
+        def swa(kind: str) -> str:
+            return {"attn": "local", "attn_moe": "local_moe",
+                    "mla": "mla_local", "mla_moe": "mla_local_moe"}.get(kind, kind)
+        new_blocks = tuple(BlockGroup(tuple(swa(k) for k in g.pattern),
+                                      g.repeats) for g in self.blocks)
+        return replace(self, blocks=new_blocks, sliding_window=window,
+                       name=self.name + "+swa")
+
+    def reduced(self, **overrides) -> "ModelConfig":
+        """The ≤2-layer, d_model≤512 smoke variant of the same family."""
+        short = []
+        for g in self.blocks:
+            if sum(b.n_layers for b in short) >= 2:
+                break
+            short.append(BlockGroup(g.pattern[:2] if g.repeats == 1 else g.pattern,
+                                    1))
+        d = min(self.d_model, 256)
+        hd = 32
+        nh = max(d // 64, 2)
+        nkv = max(min(self.n_kv_heads, nh) if self.n_kv_heads else nh, 1)
+        if self.n_kv_heads == 1:
+            nkv = 1
+        defaults = dict(
+            name=self.name + "-smoke", blocks=tuple(short), d_model=d,
+            n_heads=nh if self.n_heads else 0,
+            n_kv_heads=nkv if self.n_kv_heads else 0,
+            head_dim=hd if self.head_dim else 0,
+            d_ff=min(self.d_ff, 512) if self.d_ff else 0,
+            vocab_size=min(self.vocab_size, 512),
+            n_experts=min(self.n_experts, 4) if self.n_experts else 0,
+            experts_per_token=min(self.experts_per_token, 2)
+            if self.experts_per_token else 0,
+            moe_d_ff=min(self.moe_d_ff, 256) if self.moe_d_ff else 0,
+            q_lora_rank=min(self.q_lora_rank, 64) if self.q_lora_rank else 0,
+            kv_lora_rank=min(self.kv_lora_rank, 32) if self.kv_lora_rank else 0,
+            qk_nope_head_dim=32 if self.qk_nope_head_dim else 0,
+            qk_rope_head_dim=16 if self.qk_rope_head_dim else 0,
+            v_head_dim=32 if self.v_head_dim else 0,
+            ssm_state=min(self.ssm_state, 32) if self.ssm_state else 0,
+            ssm_head_dim=32 if self.ssm_state else 64,
+            lru_width=d if self.lru_width else 0,
+            sliding_window=min(self.sliding_window, 64)
+            if self.sliding_window else 0,
+            prefix_len=min(self.prefix_len, 16) if self.prefix_len else 0,
+            remat="none",
+        )
+        defaults.update(overrides)
+        return replace(self, **defaults)
+
+
+@dataclass(frozen=True)
+class Axes:
+    """Mesh axis names + sizes the pspec builders need."""
+    data: str = "data"
+    model: str = "model"
+    model_size: int = 1
+    extra_data: Tuple[str, ...] = ()   # ("pod",) in the multi-pod mesh
+
+    @property
+    def data_axes(self):
+        return self.extra_data + (self.data,)
+
+
+def shard_or_replicate(n: int, axes: Axes) -> Optional[str]:
+    """Model-axis name if ``n`` divides it, else None (replicate)."""
+    return axes.model if axes.model_size and n % axes.model_size == 0 else None
+
+
+def param_dtype(cfg: ModelConfig):
+    return cfg.dtype
+
+
+def truncated_normal_init(key, shape, dtype, scale: float):
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * scale).astype(dtype)

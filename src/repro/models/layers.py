@@ -1,0 +1,289 @@
+"""Shared neural layers: RMSNorm, rotary embeddings, GQA attention
+(full / sliding-window, train + cached decode), gated MLP, embeddings.
+
+Convention: every layer exposes
+  <layer>_init(key, cfg, axes)   -> params (nested dict of arrays)
+  <layer>_pspec(cfg, axes)       -> PartitionSpec tree mirroring params
+  <layer>_apply(...)             -> activations
+Cached decode variants return (y, new_cache).  All math runs in
+cfg.dtype (bf16) with f32 softmax/norm accumulators.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .common import Axes, ModelConfig, shard_or_replicate, truncated_normal_init
+
+# ---------------------------------------------------------------- RMSNorm
+def rmsnorm_init(cfg: ModelConfig, width: Optional[int] = None):
+    return {"scale": jnp.zeros((width or cfg.d_model,), jnp.float32)}
+
+
+def rmsnorm_pspec(cfg: ModelConfig, axes: Axes):
+    return {"scale": P(None)}
+
+
+def rmsnorm_apply(params, x, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps) * (1.0 + params["scale"])
+    return y.astype(x.dtype)
+
+
+# ------------------------------------------------------------------ RoPE
+def rope_angles(positions: jnp.ndarray, dim: int, theta: float):
+    """positions (...,) int32 → (cos, sin) of shape (..., dim/2)."""
+    freqs = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def rope_apply(x: jnp.ndarray, positions: jnp.ndarray, theta: float):
+    """x: (B, S, H, D) with positions (B, S) or (S,)."""
+    d = x.shape[-1]
+    cos, sin = rope_angles(positions, d, theta)       # (B, S, d/2)
+    cos = cos[..., None, :].astype(x.dtype)           # (B, S, 1, d/2)
+    sin = sin[..., None, :].astype(x.dtype)
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+# ----------------------------------------------------------- GQA attention
+def attn_init(key, cfg: ModelConfig, axes: Axes):
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    s_in = d ** -0.5
+    s_out = (h * hd) ** -0.5
+    p = {
+        "wq": truncated_normal_init(ks[0], (d, h, hd), cfg.dtype, s_in),
+        "wk": truncated_normal_init(ks[1], (d, kv, hd), cfg.dtype, s_in),
+        "wv": truncated_normal_init(ks[2], (d, kv, hd), cfg.dtype, s_in),
+        "wo": truncated_normal_init(ks[3], (h, hd, d), cfg.dtype, s_out),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = rmsnorm_init(cfg, hd)
+        p["k_norm"] = rmsnorm_init(cfg, hd)
+    return p
+
+
+def attn_pspec(cfg: ModelConfig, axes: Axes):
+    mh = shard_or_replicate(cfg.n_heads, axes)
+    mkv = shard_or_replicate(cfg.n_kv_heads, axes)
+    p = {
+        "wq": P(None, mh, None),
+        "wk": P(None, mkv, None),
+        "wv": P(None, mkv, None),
+        "wo": P(mh, None, None),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = rmsnorm_pspec(cfg, axes)
+        p["k_norm"] = rmsnorm_pspec(cfg, axes)
+    return p
+
+
+def _qkv(params, x, cfg: ModelConfig, positions):
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    if cfg.qk_norm:
+        q = rmsnorm_apply(params["q_norm"], q, cfg.norm_eps)
+        k = rmsnorm_apply(params["k_norm"], k, cfg.norm_eps)
+    q = rope_apply(q, positions, cfg.rope_theta)
+    k = rope_apply(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _sdpa(q, k, v, mask, cfg: ModelConfig):
+    """q (B,S,H,hd), k/v (B,T,KV,hd), mask (S,T) or (B,S,T) bool."""
+    b, s, h, hd = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    q = q.reshape(b, s, kvh, g, hd)
+    logits = jnp.einsum("bskgd,btkd->bkgst", q, k).astype(jnp.float32)
+    logits *= hd ** -0.5
+    if cfg.logit_softcap > 0:
+        logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
+    neg = jnp.finfo(jnp.float32).min
+    if mask.ndim == 2:
+        mask = mask[None, None, None, :, :]
+    else:
+        mask = mask[:, None, None, :, :]
+    logits = jnp.where(mask, logits, neg)
+    w = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", w, v)
+    return out.reshape(b, s, h, hd)
+
+
+def causal_mask(s: int, window: int = 0):
+    i = jnp.arange(s)[:, None]
+    j = jnp.arange(s)[None, :]
+    m = j <= i
+    if window > 0:
+        m = m & (i - j < window)
+    return m
+
+
+def full_mask(s: int):
+    return jnp.ones((s, s), bool)
+
+
+def attn_apply(params, x, cfg: ModelConfig, *, window: int = 0):
+    """Full-sequence attention (train / prefill).  window>0 → sliding."""
+    b, s, _ = x.shape
+    positions = jnp.arange(s)[None, :]
+    q, k, v = _qkv(params, x, cfg, positions)
+    mask = causal_mask(s, window) if cfg.causal else full_mask(s)
+    out = _sdpa(q, k, v, mask, cfg)
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+
+
+# ------------------------------------------------- cached decode (1 token)
+def attn_cache_init(cfg: ModelConfig, batch: int, cache_len: int,
+                    window: int = 0, dtype=None):
+    """window>0 → ring buffer of that many slots, else full cache_len."""
+    slots = min(window, cache_len) if window > 0 else cache_len
+    dt = dtype or cfg.kv_cache_dtype or cfg.dtype
+    return {
+        "k": jnp.zeros((batch, slots, cfg.n_kv_heads, cfg.head_dim), dt),
+        "v": jnp.zeros((batch, slots, cfg.n_kv_heads, cfg.head_dim), dt),
+        "pos": jnp.zeros((slots,), jnp.int32) - 1,   # absolute positions
+    }
+
+
+def attn_cache_pspec(cfg: ModelConfig, axes: Axes):
+    mkv = shard_or_replicate(cfg.n_kv_heads, axes)
+    return {"k": P(axes.data_axes, None, mkv, None),
+            "v": P(axes.data_axes, None, mkv, None),
+            "pos": P(None)}
+
+
+def attn_decode(params, x, cache, pos, cfg: ModelConfig, *, window: int = 0):
+    """x: (B, 1, d) new token at absolute position ``pos`` (scalar int32)."""
+    b = x.shape[0]
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    if cfg.qk_norm:
+        q = rmsnorm_apply(params["q_norm"], q, cfg.norm_eps)
+        k = rmsnorm_apply(params["k_norm"], k, cfg.norm_eps)
+    q = rope_apply(q, positions, cfg.rope_theta)
+    k = rope_apply(k, positions, cfg.rope_theta)
+
+    slots = cache["k"].shape[1]
+    cdt = cache["k"].dtype
+    slot = jnp.where(window > 0, pos % slots, jnp.minimum(pos, slots - 1))
+    ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cdt),
+                                      (0, slot, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cdt),
+                                      (0, slot, 0, 0))
+    cpos = jax.lax.dynamic_update_slice(cache["pos"],
+                                        pos[None].astype(jnp.int32), (slot,))
+    valid = (cpos >= 0) & (cpos <= pos)
+    if window > 0:
+        valid = valid & (pos - cpos < window)
+    mask = jnp.broadcast_to(valid[None, None, :], (b, 1, slots))
+
+    kvh = ck.shape[2]
+    g = cfg.n_heads // kvh
+    qh = q.reshape(b, 1, kvh, g, cfg.head_dim)
+    ckq = ck.astype(q.dtype)                 # dequantize fp8 cache on read
+    cvq = cv.astype(q.dtype)
+    logits = jnp.einsum("bskgd,btkd->bkgst", qh, ckq).astype(jnp.float32)
+    logits *= cfg.head_dim ** -0.5
+    if cfg.logit_softcap > 0:
+        logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
+    logits = jnp.where(mask[:, None, None, :, :],
+                       logits, jnp.finfo(jnp.float32).min)
+    w = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", w, cvq).reshape(b, 1, cfg.n_heads,
+                                                          cfg.head_dim)
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    return y, {"k": ck, "v": cv, "pos": cpos}
+
+
+# ------------------------------------------------------------- gated MLP
+def mlp_init(key, cfg: ModelConfig, axes: Axes, d_ff: Optional[int] = None):
+    d, ff = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": truncated_normal_init(ks[0], (d, ff), cfg.dtype, d ** -0.5),
+        "w_up": truncated_normal_init(ks[1], (d, ff), cfg.dtype, d ** -0.5),
+        "w_down": truncated_normal_init(ks[2], (ff, d), cfg.dtype, ff ** -0.5),
+    }
+
+
+def mlp_pspec(cfg: ModelConfig, axes: Axes, d_ff: Optional[int] = None):
+    m = shard_or_replicate(d_ff or cfg.d_ff, axes)
+    return {"w_gate": P(None, m), "w_up": P(None, m), "w_down": P(m, None)}
+
+
+def mlp_apply(params, x, cfg: ModelConfig):
+    act = jax.nn.silu if cfg.ffn_activation == "silu" else jax.nn.gelu
+    h = act(x @ params["w_gate"]) * (x @ params["w_up"])
+    return h @ params["w_down"]
+
+
+# ------------------------------------------------------------ embeddings
+def embed_init(key, cfg: ModelConfig, axes: Axes):
+    # Table scaled d^-1/2 so the sqrt(d) embed multiplier yields unit-scale
+    # activations AND tied-unembed logits stay O(1).
+    p = {"table": truncated_normal_init(key, (cfg.vocab_size, cfg.d_model),
+                                        cfg.dtype, cfg.d_model ** -0.5)}
+    if not cfg.tie_embeddings:
+        p["head"] = truncated_normal_init(
+            jax.random.fold_in(key, 1), (cfg.d_model, cfg.vocab_size),
+            cfg.dtype, cfg.d_model ** -0.5)
+    return p
+
+
+def embed_pspec(cfg: ModelConfig, axes: Axes):
+    mv = shard_or_replicate(cfg.vocab_size, axes)
+    p = {"table": P(mv, None)}
+    if not cfg.tie_embeddings:
+        p["head"] = P(None, mv)
+    return p
+
+
+def embed_apply(params, tokens):
+    return params["table"][tokens]
+
+
+def unembed_apply(params, x, cfg: ModelConfig):
+    if cfg.tie_embeddings:
+        return jnp.einsum("bsd,vd->bsv", x, params["table"])
+    return jnp.einsum("bsd,dv->bsv", x, params["head"])
+
+
+# ------------------------------------------------------------- prefill
+def attn_prefill(params, x, cfg: ModelConfig, cache_len: int, *,
+                 window: int = 0):
+    """Full-sequence attention that also materializes the KV cache.
+
+    Returns (y, cache).  Ring caches keep the last ``window`` tokens in
+    their slot positions (pos % window); full caches are right-padded to
+    ``cache_len`` slots.
+    """
+    b, s, _ = x.shape
+    positions = jnp.arange(s)[None, :]
+    q, k, v = _qkv(params, x, cfg, positions)
+    mask = causal_mask(s, window) if cfg.causal else full_mask(s)
+    out = _sdpa(q, k, v, mask, cfg)
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+
+    slots = min(window, cache_len) if window > 0 else cache_len
+    cdt = cfg.kv_cache_dtype or cfg.dtype
+    ck = jnp.zeros((b, slots, cfg.n_kv_heads, cfg.head_dim), cdt)
+    cv = jnp.zeros_like(ck)
+    cpos = jnp.zeros((slots,), jnp.int32) - 1
+    take = min(s, slots)
+    src = jnp.arange(take) + (s - take)              # absolute positions kept
+    dst = src % slots if window > 0 else src
+    ck = ck.at[:, dst].set(k[:, s - take:].astype(ck.dtype))
+    cv = cv.at[:, dst].set(v[:, s - take:].astype(cv.dtype))
+    cpos = cpos.at[dst].set(src)
+    return y, {"k": ck, "v": cv, "pos": cpos}

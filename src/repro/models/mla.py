@@ -1,0 +1,187 @@
+"""Multi-head Latent Attention (DeepSeek-V3, arXiv:2412.19437).
+
+Queries and keys/values are produced through low-rank bottlenecks; the KV
+cache stores only the compressed latent ``c_kv`` (kv_lora_rank) plus a
+small shared rotary key — the cache is ~(512+64) per token instead of
+2·H·head_dim.  Decode uses *weight absorption*: the k-projection is folded
+into the query (q_nope @ W_uk), so attention scores are taken directly
+against the cached latent and the value projection happens once per step.
+
+Training/prefill uses the expanded form (materialize per-head k, v).
+The rotary part is decoupled: a single shared rope-key per token.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .common import Axes, ModelConfig, shard_or_replicate, truncated_normal_init
+from .layers import rmsnorm_apply, rmsnorm_init, rmsnorm_pspec, rope_apply
+
+__all__ = ["mla_init", "mla_pspec", "mla_apply", "mla_cache_init",
+           "mla_cache_pspec", "mla_decode"]
+
+
+def _dims(cfg: ModelConfig):
+    return (cfg.n_heads, cfg.q_lora_rank, cfg.kv_lora_rank,
+            cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim)
+
+
+def mla_init(key, cfg: ModelConfig, axes: Axes):
+    h, qr, kvr, dn, dr, dv = _dims(cfg)
+    d = cfg.d_model
+    ks = jax.random.split(key, 6)
+    return {
+        "wq_a": truncated_normal_init(ks[0], (d, qr), cfg.dtype, d ** -0.5),
+        "q_norm": rmsnorm_init(cfg, qr),
+        "wq_b": truncated_normal_init(ks[1], (qr, h, dn + dr), cfg.dtype,
+                                      qr ** -0.5),
+        "wkv_a": truncated_normal_init(ks[2], (d, kvr + dr), cfg.dtype,
+                                       d ** -0.5),
+        "kv_norm": rmsnorm_init(cfg, kvr),
+        "wk_b": truncated_normal_init(ks[3], (kvr, h, dn), cfg.dtype,
+                                      kvr ** -0.5),
+        "wv_b": truncated_normal_init(ks[4], (kvr, h, dv), cfg.dtype,
+                                      kvr ** -0.5),
+        "wo": truncated_normal_init(ks[5], (h, dv, d), cfg.dtype,
+                                    (h * dv) ** -0.5),
+    }
+
+
+def mla_pspec(cfg: ModelConfig, axes: Axes):
+    mh = shard_or_replicate(cfg.n_heads, axes)
+    return {
+        "wq_a": P(None, None),
+        "q_norm": rmsnorm_pspec(cfg, axes),
+        "wq_b": P(None, mh, None),
+        "wkv_a": P(None, None),
+        "kv_norm": rmsnorm_pspec(cfg, axes),
+        "wk_b": P(None, mh, None),
+        "wv_b": P(None, mh, None),
+        "wo": P(mh, None, None),
+    }
+
+
+def _project_q(params, x, cfg: ModelConfig, positions):
+    h, qr, kvr, dn, dr, dv = _dims(cfg)
+    cq = rmsnorm_apply(params["q_norm"], x @ params["wq_a"], cfg.norm_eps)
+    q = jnp.einsum("bsq,qhk->bshk", cq, params["wq_b"])
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = rope_apply(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _project_kv_latent(params, x, cfg: ModelConfig, positions):
+    h, qr, kvr, dn, dr, dv = _dims(cfg)
+    kv = x @ params["wkv_a"]                                   # (B,S,kvr+dr)
+    c_kv = rmsnorm_apply(params["kv_norm"], kv[..., :kvr], cfg.norm_eps)
+    k_rope = rope_apply(kv[..., None, kvr:], positions,
+                        cfg.rope_theta)[:, :, 0, :]            # (B,S,dr) shared
+    return c_kv, k_rope
+
+
+def mla_apply(params, x, cfg: ModelConfig, *, window: int = 0):
+    """Expanded-form attention for train/prefill; window>0 → sliding."""
+    b, s, _ = x.shape
+    h, qr, kvr, dn, dr, dv = _dims(cfg)
+    positions = jnp.arange(s)[None, :]
+    q_nope, q_rope = _project_q(params, x, cfg, positions)
+    c_kv, k_rope = _project_kv_latent(params, x, cfg, positions)
+    k_nope = jnp.einsum("bsc,chk->bshk", c_kv, params["wk_b"])
+    v = jnp.einsum("bsc,chk->bshk", c_kv, params["wv_b"])
+
+    scale = (dn + dr) ** -0.5
+    logits = (jnp.einsum("bshk,bthk->bhst", q_nope, k_nope)
+              + jnp.einsum("bshk,btk->bhst", q_rope, k_rope)
+              ).astype(jnp.float32) * scale
+    i = jnp.arange(s)[:, None]
+    j = jnp.arange(s)[None, :]
+    mask = (j <= i) if cfg.causal else jnp.ones((s, s), bool)
+    if window > 0:
+        mask = mask & (i - j < window)
+    logits = jnp.where(mask[None, None], logits, jnp.finfo(jnp.float32).min)
+    w = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bhst,bthk->bshk", w, v)
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+
+
+# -------------------------------------------------------------- decode
+def mla_cache_init(cfg: ModelConfig, batch: int, cache_len: int,
+                   window: int = 0, dtype=None):
+    slots = min(window, cache_len) if window > 0 else cache_len
+    dt = dtype or cfg.kv_cache_dtype or cfg.dtype
+    return {
+        "ckv": jnp.zeros((batch, slots, cfg.kv_lora_rank), dt),
+        "krope": jnp.zeros((batch, slots, cfg.qk_rope_head_dim), dt),
+        "pos": jnp.zeros((slots,), jnp.int32) - 1,
+    }
+
+
+def mla_cache_pspec(cfg: ModelConfig, axes: Axes):
+    # The latent cache is NOT head-sharded — that's MLA's memory win;
+    # it is replicated across the model axis and sharded on batch.
+    return {"ckv": P(axes.data_axes, None, None),
+            "krope": P(axes.data_axes, None, None),
+            "pos": P(None)}
+
+
+def mla_decode(params, x, cache, pos, cfg: ModelConfig, *, window: int = 0):
+    """Absorbed-form single-token decode against the latent cache."""
+    b = x.shape[0]
+    h, qr, kvr, dn, dr, dv = _dims(cfg)
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    q_nope, q_rope = _project_q(params, x, cfg, positions)      # (B,1,H,·)
+    c_kv, k_rope = _project_kv_latent(params, x, cfg, positions)
+
+    slots = cache["ckv"].shape[1]
+    cdt = cache["ckv"].dtype
+    slot = jnp.where(window > 0, pos % slots, jnp.minimum(pos, slots - 1))
+    ckv = jax.lax.dynamic_update_slice(cache["ckv"], c_kv.astype(cdt),
+                                       (0, slot, 0))
+    krope = jax.lax.dynamic_update_slice(cache["krope"],
+                                         k_rope.astype(cdt), (0, slot, 0))
+    cpos = jax.lax.dynamic_update_slice(cache["pos"],
+                                        pos[None].astype(jnp.int32), (slot,))
+    valid = (cpos >= 0) & (cpos <= pos)
+    if window > 0:
+        valid = valid & (pos - cpos < window)
+
+    # Weight absorption: fold W_uk into the query once per step.
+    q_abs = jnp.einsum("bshk,chk->bshc", q_nope, params["wk_b"])  # (B,1,H,kvr)
+    scale = (dn + dr) ** -0.5
+    ckvq = ckv.astype(x.dtype)               # dequantize fp8 cache on read
+    kropeq = krope.astype(x.dtype)
+    logits = (jnp.einsum("bshc,btc->bhst", q_abs, ckvq)
+              + jnp.einsum("bshk,btk->bhst", q_rope, kropeq)
+              ).astype(jnp.float32) * scale
+    logits = jnp.where(valid[None, None, None, :], logits,
+                       jnp.finfo(jnp.float32).min)
+    w = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
+    o_c = jnp.einsum("bhst,btc->bshc", w, ckvq)                 # (B,1,H,kvr)
+    out = jnp.einsum("bshc,chk->bshk", o_c, params["wv_b"])     # (B,1,H,dv)
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    return y, {"ckv": ckv, "krope": krope, "pos": cpos}
+
+
+def mla_prefill(params, x, cfg: ModelConfig, cache_len: int, *,
+                window: int = 0):
+    """Full-sequence MLA that also materializes the latent cache."""
+    b, s, _ = x.shape
+    y = mla_apply(params, x, cfg, window=window)
+    positions = jnp.arange(s)[None, :]
+    c_kv, k_rope = _project_kv_latent(params, x, cfg, positions)
+    slots = min(window, cache_len) if window > 0 else cache_len
+    cdt = cfg.kv_cache_dtype or cfg.dtype
+    ckv = jnp.zeros((b, slots, cfg.kv_lora_rank), cdt)
+    krope = jnp.zeros((b, slots, cfg.qk_rope_head_dim), cdt)
+    cpos = jnp.zeros((slots,), jnp.int32) - 1
+    take = min(s, slots)
+    src = jnp.arange(take) + (s - take)
+    dst = src % slots if window > 0 else src
+    ckv = ckv.at[:, dst].set(c_kv[:, s - take:].astype(cdt))
+    krope = krope.at[:, dst].set(k_rope[:, s - take:].astype(cdt))
+    cpos = cpos.at[dst].set(src)
+    return y, {"ckv": ckv, "krope": krope, "pos": cpos}

@@ -1,0 +1,196 @@
+"""Mixture-of-Experts FFN with top-k routing and capacity-bounded
+scatter dispatch (DeepSeek-V3-style shared+routed experts; Llama-4-Scout
+top-1 routing is the k=1 special case).
+
+Dispatch strategy (TPU/pjit-native): tokens are scattered into per-expert
+capacity buffers ``(E, C, d)`` with a cumsum-derived position, experts run
+as one batched einsum over their buffer, and results gather-combine back
+with routing weights.  Under pjit the expert axis is sharded on `model`,
+so XLA materializes the dispatch as the MoE all-to-all — the collective
+the paper's encoder compresses hardest (FFN activations).  Tokens beyond
+an expert's capacity are dropped (standard capacity-factor semantics);
+their residual path passes through unchanged.
+
+The router runs in f32 with a load-balance auxiliary loss (Switch-style).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .common import Axes, ModelConfig, shard_or_replicate, truncated_normal_init
+from .layers import mlp_apply, mlp_init, mlp_pspec
+
+__all__ = ["moe_init", "moe_pspec", "moe_apply", "moe_capacity"]
+
+
+def moe_capacity(n_tokens: int, cfg: ModelConfig) -> int:
+    cap = math.ceil(n_tokens * cfg.experts_per_token / cfg.n_experts
+                    * cfg.capacity_factor)
+    return max(4, -(-cap // 4) * 4)          # round up to a multiple of 4
+
+
+def moe_init(key, cfg: ModelConfig, axes: Axes):
+    e, d, ff = cfg.n_experts, cfg.d_model, cfg.moe_d_ff
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": truncated_normal_init(ks[0], (d, e), jnp.float32, d ** -0.5),
+        "w_gate": truncated_normal_init(ks[1], (e, d, ff), cfg.dtype, d ** -0.5),
+        "w_up": truncated_normal_init(ks[2], (e, d, ff), cfg.dtype, d ** -0.5),
+        "w_down": truncated_normal_init(ks[3], (e, ff, d), cfg.dtype, ff ** -0.5),
+    }
+    if cfg.n_shared_experts > 0:
+        p["shared"] = mlp_init(ks[4], cfg, axes,
+                               d_ff=cfg.moe_d_ff * cfg.n_shared_experts)
+    return p
+
+
+def moe_pspec(cfg: ModelConfig, axes: Axes):
+    me = shard_or_replicate(cfg.n_experts, axes)
+    p = {
+        "router": P(None, None),
+        "w_gate": P(me, None, None),
+        "w_up": P(me, None, None),
+        "w_down": P(me, None, None),
+    }
+    if cfg.n_shared_experts > 0:
+        p["shared"] = mlp_pspec(cfg, axes,
+                                d_ff=cfg.moe_d_ff * cfg.n_shared_experts)
+    return p
+
+
+def moe_apply(params, x, cfg: ModelConfig) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, d) → (y, aux_loss).  Routed top-k + optional shared expert."""
+    b, s, d = x.shape
+    n = b * s
+    k = cfg.experts_per_token
+    e = cfg.n_experts
+    cap = moe_capacity(n, cfg)
+    xf = x.reshape(n, d)
+
+    # ---- routing (f32) ----
+    logits = (xf.astype(jnp.float32) @ params["router"])         # (N, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    topw, topi = jax.lax.top_k(probs, k)                         # (N, k)
+    topw = topw / jnp.maximum(topw.sum(-1, keepdims=True), 1e-9)
+
+    # Switch-style load-balance loss.
+    frac_routed = jnp.zeros((e,), jnp.float32).at[topi.reshape(-1)].add(
+        1.0 / (n * k))
+    aux = cfg.router_aux_weight * e * jnp.sum(frac_routed * probs.mean(0))
+
+    # ---- dispatch: position of each (token, slot) within its expert ----
+    flat_e = topi.reshape(-1)                                    # (N*k,)
+    onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)          # (N*k, E)
+    pos = (jnp.cumsum(onehot, axis=0) * onehot).sum(-1) - 1      # (N*k,)
+    keep = pos < cap
+    pos_c = jnp.clip(pos, 0, cap - 1)
+
+    tok_idx = jnp.repeat(jnp.arange(n), k)
+    xd = xf[tok_idx] * keep[:, None].astype(xf.dtype)            # (N*k, d)
+    buf = jnp.zeros((e, cap, d), xf.dtype).at[flat_e, pos_c].add(
+        xd, mode="drop")                                         # (E, C, d)
+
+    # ---- experts: batched gated-MLP einsum ----
+    act = jax.nn.silu if cfg.ffn_activation == "silu" else jax.nn.gelu
+    h = act(jnp.einsum("ecd,edf->ecf", buf, params["w_gate"]))
+    h = h * jnp.einsum("ecd,edf->ecf", buf, params["w_up"])
+    out_buf = jnp.einsum("ecf,efd->ecd", h, params["w_down"])    # (E, C, d)
+
+    # ---- combine ----
+    yd = out_buf[flat_e, pos_c] * keep[:, None].astype(xf.dtype)
+    yd = yd * topw.reshape(-1)[:, None].astype(xf.dtype)
+    y = jnp.zeros((n, d), xf.dtype).at[tok_idx].add(yd)
+
+    if cfg.n_shared_experts > 0:
+        y = y + mlp_apply(params["shared"], xf, cfg)
+    return y.reshape(b, s, d), aux
+
+
+def moe_apply_eshard(params, x, cfg: ModelConfig
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Expert-sharded MoE (§Perf lever): each model shard computes its
+    local E/TP experts over the tokens of its data shard and one psum
+    over the model axis combines the outputs.
+
+    Wire per block: a single (tokens_local, d) all-reduce — the same
+    traffic as a dense TP FFN — versus the scatter path's (E, C, d)
+    buffer reduction across data shards.  Requires the ambient mesh to
+    carry ("data", "model") axes (pjit context); capacity bounds are per
+    LOCAL expert, so drops match the scatter path in distribution.
+    """
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or "model" not in mesh.axis_names:
+        return moe_apply(params, x, cfg)        # single-device fallback
+
+    b, s, d = x.shape
+    e = cfg.n_experts
+    k = cfg.experts_per_token
+    tp = mesh.shape["model"]
+    e_local = e // tp
+    data_axes = tuple(a for a in mesh.axis_names if a != "model")
+    dp = 1
+    for a in data_axes:
+        dp *= mesh.shape[a]
+    n_local = (b // dp) * s
+    cap = moe_capacity(n_local, cfg)
+
+    def local_ffn(xs, router, wg, wu, wd):
+        # xs: (B/dp, S, d) local tokens; wg/wu/wd: (E/tp, …) local experts
+        xf = xs.reshape(-1, d)
+        logits = xf.astype(jnp.float32) @ router            # (n, E) global E
+        probs = jax.nn.softmax(logits, axis=-1)
+        topw, topi = jax.lax.top_k(probs, k)
+        topw = topw / jnp.maximum(topw.sum(-1, keepdims=True), 1e-9)
+
+        frac = jnp.zeros((e,), jnp.float32).at[topi.reshape(-1)].add(
+            1.0 / (n_local * k))
+        aux_local = cfg.router_aux_weight * e * jnp.sum(frac * probs.mean(0))
+        aux = jax.lax.pmean(aux_local, "model")
+        for a in data_axes:
+            aux = jax.lax.pmean(aux, a)
+
+        # local expert ids: e_global - shard_offset ∈ [0, e_local)
+        off = jax.lax.axis_index("model") * e_local
+        flat_e = topi.reshape(-1) - off                      # (n·k,)
+        mine = (flat_e >= 0) & (flat_e < e_local)
+        flat_ec = jnp.clip(flat_e, 0, e_local - 1)
+        onehot = jax.nn.one_hot(flat_ec, e_local, dtype=jnp.int32
+                                ) * mine[:, None].astype(jnp.int32)
+        pos = (jnp.cumsum(onehot, axis=0) * onehot).sum(-1) - 1
+        keep = mine & (pos >= 0) & (pos < cap)
+        pos_c = jnp.clip(pos, 0, cap - 1)
+
+        tok_idx = jnp.repeat(jnp.arange(n_local), k)
+        xd = xf[tok_idx] * keep[:, None].astype(xf.dtype)
+        buf = jnp.zeros((e_local, cap, d), xf.dtype).at[
+            flat_ec, pos_c].add(xd, mode="drop")
+
+        act = jax.nn.silu if cfg.ffn_activation == "silu" else jax.nn.gelu
+        h = act(jnp.einsum("ecd,edf->ecf", buf, wg))
+        h = h * jnp.einsum("ecd,edf->ecf", buf, wu)
+        out_buf = jnp.einsum("ecf,efd->ecd", h, wd)
+
+        yd = out_buf[flat_ec, pos_c] * keep[:, None].astype(xf.dtype)
+        yd = yd * topw.reshape(-1)[:, None].astype(xf.dtype)
+        y = jnp.zeros((n_local, d), xf.dtype).at[tok_idx].add(yd)
+        y = jax.lax.psum(y, "model")                         # combine experts
+        return y.reshape(xs.shape), aux
+
+    dspec = P(data_axes if len(data_axes) > 1 else data_axes[0], None, None)
+    y, aux = jax.shard_map(
+        local_ffn,
+        in_specs=(dspec, P(None, None), P("model", None, None),
+                  P("model", None, None), P("model", None, None)),
+        out_specs=(dspec, P()),
+    )(x, params["router"], params["w_gate"], params["w_up"],
+      params["w_down"])
+
+    if cfg.n_shared_experts > 0:
+        y = y + mlp_apply(params["shared"], x.reshape(-1, d), cfg
+                          ).reshape(x.shape)
+    return y, aux

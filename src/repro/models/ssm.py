@@ -1,0 +1,313 @@
+"""Mamba-2 block via SSD — state-space duality (arXiv:2405.21060).
+
+Training/prefill uses the chunked SSD algorithm: quadratic attention-like
+math inside fixed-size chunks (MXU-friendly (Q×Q) blocks), a sequential
+`lax.scan` over chunk states for the inter-chunk linear recurrence
+(compact HLO, O(L) work), and a decayed readout.  Decode is the O(1)
+recurrent update on the (B, H, P, N) state.
+
+Projections are kept un-fused (separate z/x/B/C/dt matrices) so each can
+carry its own PartitionSpec — heads shard on the model axis; the state
+dim N and groups stay replicated.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .common import Axes, ModelConfig, shard_or_replicate, truncated_normal_init
+from .layers import rmsnorm_apply, rmsnorm_init, rmsnorm_pspec
+
+__all__ = ["mamba_init", "mamba_pspec", "mamba_apply", "mamba_cache_init",
+           "mamba_cache_pspec", "mamba_decode", "ssd_chunked"]
+
+_CHUNK = 128
+
+
+def _hp(cfg: ModelConfig) -> Tuple[int, int]:
+    d_inner = cfg.ssm_expand * cfg.d_model
+    heads = d_inner // cfg.ssm_head_dim
+    return heads, cfg.ssm_head_dim
+
+
+def mamba_init(key, cfg: ModelConfig, axes: Axes):
+    d = cfg.d_model
+    h, p_ = _hp(cfg)
+    g, n = cfg.ssm_n_groups, cfg.ssm_state
+    cw = cfg.ssm_conv
+    ks = jax.random.split(key, 8)
+    s = d ** -0.5
+    return {
+        "wz": truncated_normal_init(ks[0], (d, h, p_), cfg.dtype, s),
+        "wx": truncated_normal_init(ks[1], (d, h, p_), cfg.dtype, s),
+        "wB": truncated_normal_init(ks[2], (d, g, n), cfg.dtype, s),
+        "wC": truncated_normal_init(ks[3], (d, g, n), cfg.dtype, s),
+        "wdt": truncated_normal_init(ks[4], (d, h), cfg.dtype, s),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, h, dtype=jnp.float32)),
+        "D": jnp.ones((h,), jnp.float32),
+        "conv_x": truncated_normal_init(ks[5], (cw, h, p_), cfg.dtype,
+                                        cw ** -0.5),
+        "conv_B": truncated_normal_init(ks[6], (cw, g, n), cfg.dtype,
+                                        cw ** -0.5),
+        "conv_C": truncated_normal_init(ks[7], (cw, g, n), cfg.dtype,
+                                        cw ** -0.5),
+        "norm": rmsnorm_init(cfg, h * p_),
+        "out_proj": truncated_normal_init(jax.random.fold_in(key, 9),
+                                          (h, p_, d), cfg.dtype,
+                                          (h * p_) ** -0.5),
+    }
+
+
+def mamba_pspec(cfg: ModelConfig, axes: Axes):
+    h, _ = _hp(cfg)
+    mh = shard_or_replicate(h, axes)
+    return {
+        "wz": P(None, mh, None), "wx": P(None, mh, None),
+        "wB": P(None, None, None), "wC": P(None, None, None),
+        "wdt": P(None, mh), "dt_bias": P(mh),
+        "A_log": P(mh), "D": P(mh),
+        "conv_x": P(None, mh, None), "conv_B": P(None, None, None),
+        "conv_C": P(None, None, None),
+        "norm": rmsnorm_pspec(cfg, axes),
+        "out_proj": P(mh, None, None),
+    }
+
+
+def _causal_conv(x, w):
+    """Depthwise causal conv along axis 1.  x: (B, L, *ch), w: (CW, *ch)."""
+    cw = w.shape[0]
+    pad = [(0, 0), (cw - 1, 0)] + [(0, 0)] * (x.ndim - 2)
+    xp = jnp.pad(x, pad)
+    out = jnp.zeros_like(x)
+    for i in range(cw):
+        out = out + xp[:, i:i + x.shape[1]] * w[i]
+    return out
+
+
+def _segsum(a):
+    """a: (..., T) → (..., T, T) lower-tri segment sums Σ_{j<i≤k} a_k."""
+    t = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    seg = cs[..., :, None] - cs[..., None, :]
+    i = jnp.arange(t)[:, None]
+    j = jnp.arange(t)[None, :]
+    return jnp.where(i >= j, seg, -jnp.inf)
+
+
+def ssd_chunked(x, dt, a_neg, b, c, chunk: int = _CHUNK,
+                return_final_state: bool = False):
+    """SSD forward.  x: (B,L,H,P), dt: (B,L,H) (post-softplus),
+    a_neg: (H,) negative decay rates, b/c: (B,L,H,N) (groups pre-broadcast).
+    Returns y: (B,L,H,P), optionally with the final (B,H,P,N) state.
+    L must divide by ``chunk`` (callers pad).
+    """
+    bsz, l, h, p_ = x.shape
+    n = b.shape[-1]
+    nc = l // chunk
+    # dt-premultiplied input and per-step log decay
+    xdt = (x * dt[..., None]).astype(jnp.float32)
+    da = (dt * a_neg[None, None, :]).astype(jnp.float32)     # (B,L,H) ≤ 0
+
+    xc = xdt.reshape(bsz, nc, chunk, h, p_)
+    bc_ = b.astype(jnp.float32).reshape(bsz, nc, chunk, h, n)
+    cc = c.astype(jnp.float32).reshape(bsz, nc, chunk, h, n)
+    dac = da.reshape(bsz, nc, chunk, h).transpose(0, 3, 1, 2)  # (B,H,C,Q)
+    da_cum = jnp.cumsum(dac, axis=-1)                          # (B,H,C,Q)
+
+    # 1. intra-chunk (quadratic within the chunk — MXU block)
+    ldec = jnp.exp(_segsum(dac))                               # (B,H,C,Q,Q)
+    y_diag = jnp.einsum("bcqhn,bcshn,bhcqs,bcshp->bcqhp", cc, bc_, ldec, xc)
+
+    # 2. per-chunk terminal states
+    decay_states = jnp.exp(da_cum[..., -1:] - da_cum)          # (B,H,C,Q)
+    states = jnp.einsum("bcshn,bhcs,bcshp->bchpn", bc_, decay_states, xc)
+
+    # 3. inter-chunk recurrence (sequential scan over chunks)
+    chunk_decay = jnp.exp(da_cum[..., -1])                     # (B,H,C)
+
+    def step(carry, inp):
+        s_c, g_c = inp                                         # (B,H,P,N),(B,H)
+        new = carry * g_c[..., None, None] + s_c
+        return new, carry                                      # emit entering state
+
+    init = jnp.zeros((bsz, h, p_, n), jnp.float32)
+    final, entering = jax.lax.scan(
+        step, init, (states.transpose(1, 0, 2, 3, 4),
+                     chunk_decay.transpose(2, 0, 1)))
+    entering = entering.transpose(1, 0, 2, 3, 4)               # (B,C,H,P,N)
+
+    # 4. state → output readout with intra-chunk decay
+    out_decay = jnp.exp(da_cum)                                # (B,H,C,Q)
+    y_off = jnp.einsum("bcqhn,bchpn,bhcq->bcqhp", cc, entering, out_decay)
+
+    y = (y_diag + y_off).reshape(bsz, l, h, p_)
+    return (y, final) if return_final_state else y
+
+
+def mamba_apply(params, u, cfg: ModelConfig):
+    """u: (B, L, d) → (B, L, d).  Full-sequence SSD path."""
+    bsz, l, d = u.shape
+    h, p_ = _hp(cfg)
+    g, n = cfg.ssm_n_groups, cfg.ssm_state
+
+    z = jnp.einsum("bld,dhp->blhp", u, params["wz"])
+    x = jnp.einsum("bld,dhp->blhp", u, params["wx"])
+    b = jnp.einsum("bld,dgn->blgn", u, params["wB"])
+    c = jnp.einsum("bld,dgn->blgn", u, params["wC"])
+    dt = jax.nn.softplus(
+        jnp.einsum("bld,dh->blh", u, params["wdt"]).astype(jnp.float32)
+        + params["dt_bias"])
+
+    x = jax.nn.silu(_causal_conv(x, params["conv_x"]))
+    b = jax.nn.silu(_causal_conv(b, params["conv_B"]))
+    c = jax.nn.silu(_causal_conv(c, params["conv_C"]))
+
+    # broadcast groups → heads
+    rep = h // g
+    bh = jnp.repeat(b, rep, axis=2)
+    ch = jnp.repeat(c, rep, axis=2)
+
+    chunk = cfg.ssm_chunk or _CHUNK
+    pad = (-l) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        bh = jnp.pad(bh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        ch = jnp.pad(ch, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+
+    a_neg = -jnp.exp(params["A_log"])
+    y = ssd_chunked(x, dt, a_neg, bh, ch, chunk=chunk)[:, :l]
+    y = y + params["D"][None, None, :, None] * x[:, :l]
+
+    y = (y.astype(cfg.dtype) * jax.nn.silu(z)).reshape(bsz, l, h * p_)
+    y = rmsnorm_apply(params["norm"], y, cfg.norm_eps)
+    return jnp.einsum("blhp,hpd->bld", y.reshape(bsz, l, h, p_),
+                      params["out_proj"])
+
+
+# ---------------------------------------------------------------- decode
+def mamba_cache_init(cfg: ModelConfig, batch: int, cache_len: int = 0,
+                     dtype=None):
+    h, p_ = _hp(cfg)
+    g, n = cfg.ssm_n_groups, cfg.ssm_state
+    cw = cfg.ssm_conv
+    dt = dtype or cfg.dtype
+    return {
+        "state": jnp.zeros((batch, h, p_, n), jnp.float32),
+        "conv_x": jnp.zeros((batch, cw - 1, h, p_), dt),
+        "conv_B": jnp.zeros((batch, cw - 1, g, n), dt),
+        "conv_C": jnp.zeros((batch, cw - 1, g, n), dt),
+    }
+
+
+def mamba_cache_pspec(cfg: ModelConfig, axes: Axes):
+    h, _ = _hp(cfg)
+    mh = shard_or_replicate(h, axes)
+    return {"state": P(axes.data_axes, mh, None, None),
+            "conv_x": P(axes.data_axes, None, mh, None),
+            "conv_B": P(axes.data_axes, None, None, None),
+            "conv_C": P(axes.data_axes, None, None, None)}
+
+
+def _conv_step(cache, xt, w):
+    """cache: (B, CW-1, *ch), xt: (B, *ch) → (out (B,*ch), new cache)."""
+    full = jnp.concatenate([cache, xt[:, None]], axis=1)       # (B, CW, *ch)
+    out = (full * w[None]).sum(axis=1)
+    return out, full[:, 1:]
+
+
+def mamba_decode(params, u, cache, pos, cfg: ModelConfig):
+    """u: (B, 1, d) single step; O(1) recurrent update."""
+    bsz = u.shape[0]
+    h, p_ = _hp(cfg)
+    g, n = cfg.ssm_n_groups, cfg.ssm_state
+    ut = u[:, 0]
+
+    z = jnp.einsum("bd,dhp->bhp", ut, params["wz"])
+    x = jnp.einsum("bd,dhp->bhp", ut, params["wx"])
+    b = jnp.einsum("bd,dgn->bgn", ut, params["wB"])
+    c = jnp.einsum("bd,dgn->bgn", ut, params["wC"])
+    dt = jax.nn.softplus(
+        jnp.einsum("bd,dh->bh", ut, params["wdt"]).astype(jnp.float32)
+        + params["dt_bias"])
+
+    x, ncx = _conv_step(cache["conv_x"], x, params["conv_x"])
+    b, ncb = _conv_step(cache["conv_B"], b, params["conv_B"])
+    c, ncc = _conv_step(cache["conv_C"], c, params["conv_C"])
+    x, b, c = jax.nn.silu(x), jax.nn.silu(b), jax.nn.silu(c)
+
+    rep = h // g
+    bh = jnp.repeat(b, rep, axis=1).astype(jnp.float32)        # (B,H,N)
+    ch = jnp.repeat(c, rep, axis=1).astype(jnp.float32)
+
+    a_neg = -jnp.exp(params["A_log"])
+    da = jnp.exp(dt * a_neg[None, :])                          # (B,H)
+    xf = x.astype(jnp.float32)
+    state = (cache["state"] * da[..., None, None]
+             + dt[..., None, None] * xf[..., :, None] * bh[:, :, None, :])
+    y = (state * ch[:, :, None, :]).sum(-1)                    # (B,H,P)
+    y = y + params["D"][None, :, None] * xf
+
+    y = (y.astype(cfg.dtype) * jax.nn.silu(z)).reshape(bsz, h * p_)
+    y = rmsnorm_apply(params["norm"], y, cfg.norm_eps)
+    out = jnp.einsum("bhp,hpd->bd", y.reshape(bsz, h, p_), params["out_proj"])
+    return out[:, None], {"state": state, "conv_x": ncx, "conv_B": ncb,
+                          "conv_C": ncc}
+
+
+def mamba_prefill(params, u, cfg: ModelConfig, cache_len: int = 0):
+    """Full-sequence forward that also returns the recurrent cache
+    (final SSD state + conv tails) for subsequent decode steps."""
+    bsz, l, d = u.shape
+    h, p_ = _hp(cfg)
+    g, n = cfg.ssm_n_groups, cfg.ssm_state
+    cw = cfg.ssm_conv
+
+    z = jnp.einsum("bld,dhp->blhp", u, params["wz"])
+    x_raw = jnp.einsum("bld,dhp->blhp", u, params["wx"])
+    b_raw = jnp.einsum("bld,dgn->blgn", u, params["wB"])
+    c_raw = jnp.einsum("bld,dgn->blgn", u, params["wC"])
+    dt = jax.nn.softplus(
+        jnp.einsum("bld,dh->blh", u, params["wdt"]).astype(jnp.float32)
+        + params["dt_bias"])
+
+    x = jax.nn.silu(_causal_conv(x_raw, params["conv_x"]))
+    b = jax.nn.silu(_causal_conv(b_raw, params["conv_B"]))
+    c = jax.nn.silu(_causal_conv(c_raw, params["conv_C"]))
+
+    rep = h // g
+    bh = jnp.repeat(b, rep, axis=2)
+    ch = jnp.repeat(c, rep, axis=2)
+
+    chunk = cfg.ssm_chunk or _CHUNK
+    pad = (-l) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        bh = jnp.pad(bh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        ch = jnp.pad(ch, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+
+    a_neg = -jnp.exp(params["A_log"])
+    y, state = ssd_chunked(x, dt, a_neg, bh, ch, chunk=chunk,
+                           return_final_state=True)
+    y = y[:, :l] + params["D"][None, None, :, None] * x[:, :l]
+
+    y = (y.astype(cfg.dtype) * jax.nn.silu(z)).reshape(bsz, l, h * p_)
+    y = rmsnorm_apply(params["norm"], y, cfg.norm_eps)
+    out = jnp.einsum("blhp,hpd->bld", y.reshape(bsz, l, h, p_),
+                     params["out_proj"])
+
+    def tail(v):
+        """Last cw-1 raw pre-conv values, zero-left-padded for short seqs."""
+        vp = jnp.pad(v, ((0, 0), (cw - 1, 0)) + ((0, 0),) * (v.ndim - 2))
+        return vp[:, l:l + cw - 1]
+
+    cache = {"state": state,
+             "conv_x": tail(x_raw).astype(cfg.dtype),
+             "conv_B": tail(b_raw).astype(cfg.dtype),
+             "conv_C": tail(c_raw).astype(cfg.dtype)}
+    return out, cache

@@ -1,0 +1,234 @@
+"""Model assembly: scanned layer stacks, embeddings, train/prefill/decode.
+
+Layers stack per ``BlockGroup``: params carry a leading (repeats,) axis
+and the group applies with ``jax.lax.scan`` — HLO stays one block per
+group regardless of depth (61-layer DeepSeek compiles like 1 layer).
+Heterogeneous periods (RecurrentGemma's rec/rec/attn) scan over whole
+periods; the remainder forms its own group.
+
+API (all pure functions over a params pytree):
+  model_init(cfg, key, axes)       → params
+  model_pspec(cfg, axes)           → PartitionSpec tree
+  forward_train(params, batch, cfg)→ (logits, aux)
+  init_caches(cfg, batch, cache_len[, axes]) → caches (+pspec variant)
+  prefill(params, batch, cfg, cache_len) → (logits, caches)
+  decode_step(params, tokens, caches, pos, cfg) → (logits, caches)
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .blocks import (block_apply, block_cache_init, block_cache_pspec,
+                     block_decode, block_init, block_prefill, block_pspec)
+from .common import Axes, ModelConfig
+from .layers import (embed_apply, embed_init, embed_pspec, rmsnorm_apply,
+                     rmsnorm_init, rmsnorm_pspec, unembed_apply)
+
+__all__ = ["model_init", "model_pspec", "forward_train", "init_caches",
+           "cache_pspec", "prefill", "decode_step", "param_count"]
+
+
+# ------------------------------------------------------------------ init
+def model_init(cfg: ModelConfig, key, axes: Optional[Axes] = None):
+    axes = axes or Axes()
+    keys = jax.random.split(key, len(cfg.blocks) + 1)
+    groups = []
+    for gi, bg in enumerate(cfg.blocks):
+        gkey = keys[gi]
+        subs = []
+        for si, kind in enumerate(bg.pattern):
+            skey = jax.random.fold_in(gkey, si)
+            rkeys = jax.random.split(skey, bg.repeats)
+            stacked = jax.vmap(
+                lambda k, kind=kind: block_init(kind, k, cfg, axes))(rkeys)
+            subs.append(stacked)
+        groups.append(tuple(subs))
+    return {
+        "embed": embed_init(keys[-1], cfg, axes),
+        "groups": tuple(groups),
+        "final_norm": rmsnorm_init(cfg),
+    }
+
+
+def _prepend_axis(tree):
+    return jax.tree.map(
+        lambda spec: P(*((None,) + tuple(spec))), tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def model_pspec(cfg: ModelConfig, axes: Optional[Axes] = None):
+    axes = axes or Axes()
+    groups = []
+    for bg in cfg.blocks:
+        subs = tuple(_prepend_axis(block_pspec(kind, cfg, axes))
+                     for kind in bg.pattern)
+        groups.append(subs)
+    return {
+        "embed": embed_pspec(cfg, axes),
+        "groups": tuple(groups),
+        "final_norm": rmsnorm_pspec(cfg, axes),
+    }
+
+
+def param_count(params) -> int:
+    return sum(x.size for x in jax.tree.leaves(params))
+
+
+# ----------------------------------------------------------------- train
+def _group_apply(pattern, stacked_subs, x, cfg: ModelConfig):
+    def body(carry, layer_subs):
+        x = carry
+        aux = jnp.zeros((), jnp.float32)
+        for i, kind in enumerate(pattern):
+            x, a = block_apply(kind, layer_subs[i], x, cfg)
+            aux = aux + a
+        return x, aux
+
+    if cfg.remat == "block":
+        body = jax.checkpoint(body)
+    elif cfg.remat == "save_mixer_ffn":
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.save_only_these_names(
+                "mixer_out", "ffn_out"))
+    x, auxs = jax.lax.scan(body, x, stacked_subs)
+    return x, auxs.sum()
+
+
+def _embed_inputs(params, batch: Dict[str, jnp.ndarray], cfg: ModelConfig):
+    """Assemble the input sequence: [prefix embeddings] + [token embeddings].
+
+    batch keys: "tokens" (B, S) int32 and/or "prefix_embeds" (B, Pfx, d).
+    The modality front-end (ViT / audio codec) is stubbed per the brief —
+    prefix embeddings arrive precomputed.
+    """
+    parts = []
+    if "prefix_embeds" in batch:
+        parts.append(batch["prefix_embeds"].astype(cfg.dtype))
+    if "tokens" in batch:
+        parts.append(embed_apply(params["embed"], batch["tokens"]))
+    x = parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=1)
+    return x * jnp.asarray(cfg.d_model ** 0.5, cfg.dtype)
+
+
+def forward_train(params, batch: Dict[str, jnp.ndarray], cfg: ModelConfig
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Full-sequence forward.  Returns (logits over token positions, aux)."""
+    x = _embed_inputs(params, batch, cfg)
+    aux = jnp.zeros((), jnp.float32)
+    for bg, subs in zip(cfg.blocks, params["groups"]):
+        x, a = _group_apply(bg.pattern, subs, x, cfg)
+        aux = aux + a
+    x = rmsnorm_apply(params["final_norm"], x, cfg.norm_eps)
+    if "prefix_embeds" in batch and "tokens" in batch:
+        x = x[:, batch["prefix_embeds"].shape[1]:]
+    logits = unembed_apply(params["embed"], x, cfg)
+    return logits, aux
+
+
+# ----------------------------------------------------------------- cache
+def init_caches(cfg: ModelConfig, batch: int, cache_len: int, dtype=None):
+    """Zero caches, stacked with a leading (repeats,) axis per group-sub."""
+    groups = []
+    for bg in cfg.blocks:
+        subs = []
+        for kind in bg.pattern:
+            single = block_cache_init(kind, cfg, batch, cache_len, dtype=dtype)
+            # Broadcast (not zero-fill!) so sentinel values like pos = -1
+            # survive the stacking.
+            stacked = jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (bg.repeats,) + a.shape), single)
+            subs.append(stacked)
+        groups.append(tuple(subs))
+    return tuple(groups)
+
+
+def cache_pspec(cfg: ModelConfig, axes: Optional[Axes] = None):
+    axes = axes or Axes()
+    groups = []
+    for bg in cfg.blocks:
+        subs = tuple(_prepend_axis(block_cache_pspec(kind, cfg, axes))
+                     for kind in bg.pattern)
+        groups.append(subs)
+    return tuple(groups)
+
+
+# --------------------------------------------------------------- prefill
+def prefill(params, batch: Dict[str, jnp.ndarray], cfg: ModelConfig,
+            cache_len: int):
+    """Full-sequence forward that materializes every block's cache."""
+    x = _embed_inputs(params, batch, cfg)
+    caches = []
+    for bg, subs in zip(cfg.blocks, params["groups"]):
+        def body(carry, layer_subs):
+            x = carry
+            layer_caches = []
+            for i, kind in enumerate(bg.pattern):
+                x, c = block_prefill(kind, layer_subs[i], x, cfg, cache_len)
+                layer_caches.append(c)
+            return x, tuple(layer_caches)
+
+        x, group_caches = jax.lax.scan(body, x, subs)
+        caches.append(group_caches)
+    x = rmsnorm_apply(params["final_norm"], x, cfg.norm_eps)
+    if "prefix_embeds" in batch and "tokens" in batch:
+        x = x[:, batch["prefix_embeds"].shape[1]:]
+    logits = unembed_apply(params["embed"], x, cfg)
+    return logits, tuple(caches)
+
+
+# ---------------------------------------------------------------- decode
+def decode_step(params, tokens, caches, pos, cfg: ModelConfig):
+    """One autoregressive step.  tokens: (B, 1) int32, pos: scalar int32
+    (absolute position of the new token).  Returns (logits, new caches)."""
+    x = embed_apply(params["embed"], tokens)
+    x = x * jnp.asarray(cfg.d_model ** 0.5, cfg.dtype)
+    new_caches = []
+    for bg, subs, gcaches in zip(cfg.blocks, params["groups"], caches):
+        def body(carry, layer):
+            x = carry
+            layer_subs, layer_caches = layer
+            new = []
+            for i, kind in enumerate(bg.pattern):
+                x, nc = block_decode(kind, layer_subs[i], x, layer_caches[i],
+                                     pos, cfg)
+                new.append(nc)
+            return x, tuple(new)
+
+        x, ng = jax.lax.scan(body, x, (subs, gcaches))
+        new_caches.append(ng)
+    x = rmsnorm_apply(params["final_norm"], x, cfg.norm_eps)
+    logits = unembed_apply(params["embed"], x, cfg)
+    return logits, tuple(new_caches)
+
+
+def fsdp_pspec(cfg: ModelConfig, axes: Optional[Axes] = None,
+               data_degree: int = 16):
+    """Fully-sharded (ZeRO-3-style) parameter PartitionSpecs: in addition
+    to the TP axes, the first unsharded-and-divisible dimension of every
+    parameter is sharded over the data axis.  XLA inserts the per-layer
+    all-gather; with scanned stacks the gather overlaps the layer compute.
+    The 671B config only fits HBM this way (EXPERIMENTS.md §Perf).
+    """
+    axes = axes or Axes()
+    base = model_pspec(cfg, axes)
+    shapes = jax.eval_shape(lambda k: model_init(cfg, k, axes),
+                            jax.random.PRNGKey(0))
+    data_axes = axes.extra_data + (axes.data,)
+    tag = data_axes if len(data_axes) > 1 else data_axes[0]
+
+    def shard_leaf(spec, shape):
+        parts = list(tuple(spec))
+        while len(parts) < len(shape.shape):
+            parts.append(None)
+        for i, (p, d) in enumerate(zip(parts, shape.shape)):
+            if p is None and d % data_degree == 0 and d >= data_degree:
+                parts[i] = tag
+                break
+        return P(*parts)
+
+    return jax.tree.map(shard_leaf, base, shapes,
+                        is_leaf=lambda x: isinstance(x, P))

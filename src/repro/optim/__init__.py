@@ -1,0 +1,4 @@
+from .adamw import (AdamWConfig, AdamWState, adamw_init, adamw_state_pspec,
+                    adamw_update, cosine_schedule, global_norm)
+
+__all__ = [k for k in dir() if not k.startswith("_")]

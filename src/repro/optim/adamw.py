@@ -1,0 +1,133 @@
+"""AdamW optimizer in pure JAX (pytree-structured, shard-friendly).
+
+State mirrors the param tree (m, v in f32) so every optimizer buffer
+inherits the param PartitionSpec; `zero1=True` additionally shards the
+f32 state over the data axis (ZeRO-1) for the 100B+ configs — the pspec
+helper handles that by prepending the data axis to the largest dim.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+__all__ = ["AdamWConfig", "AdamWState", "adamw_init", "adamw_update",
+           "adamw_state_pspec", "cosine_schedule"]
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    grad_clip: float = 1.0
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    m: Any
+    v: Any
+
+
+def adamw_init(params) -> AdamWState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return AdamWState(step=jnp.zeros((), jnp.int32), m=zeros,
+                      v=jax.tree.map(jnp.copy, zeros))
+
+
+def adamw_state_pspec(param_pspec) -> AdamWState:
+    return AdamWState(step=P(), m=param_pspec,
+                      v=jax.tree.map(lambda s: s, param_pspec,
+                                     is_leaf=lambda x: isinstance(x, P)))
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def adamw_update(grads, state: AdamWState, params, cfg: AdamWConfig,
+                 lr_scale: jnp.ndarray = 1.0):
+    """One AdamW step.  Returns (new_params, new_state, metrics)."""
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+    step = state.step + 1
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+    lr = cfg.lr * lr_scale
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32) * clip
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * g * g
+        mh = m / b1c
+        vh = v / b2c
+        delta = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * p.astype(
+            jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.m)
+    flat_v = treedef.flatten_up_to(state.v)
+    out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v,
+                                                 flat_p)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_p, AdamWState(step=step, m=new_m, v=new_v), metrics
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int
+                    ) -> Callable[[jnp.ndarray], jnp.ndarray]:
+    def fn(step):
+        step = step.astype(jnp.float32)
+        warm = jnp.minimum(step / jnp.maximum(warmup, 1), 1.0)
+        prog = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1),
+                        0.0, 1.0)
+        return warm * (0.5 * (1 + jnp.cos(jnp.pi * prog)))
+    return fn
+
+
+def zero1_state_pspec(param_pspec, params_shapes, axes) -> "AdamWState":
+    """ZeRO-1: shard the f32 m/v optimizer moments over the data axis
+    too (on the first dimension that is unsharded and divisible).  Cuts
+    optimizer-state HBM by the data-parallel degree at the cost of a
+    gather in the update — the standard memory lever for 100B+ configs.
+    """
+    data_axes = axes.extra_data + (axes.data,)
+    data_size = 1
+    # mesh sizes are not carried on Axes; callers pass effective sizes via
+    # axes.model_size convention — derive data degree from names at use
+    # site instead; here we only need divisibility against a nominal 16.
+
+    def has_data_axis(parts) -> bool:
+        for p in parts:
+            names = p if isinstance(p, tuple) else (p,)
+            if any(n in data_axes for n in names if n):
+                return True
+        return False
+
+    def shard_leaf(spec, shape):
+        parts = list(tuple(spec))
+        while len(parts) < len(shape.shape):
+            parts.append(None)
+        if has_data_axis(parts):       # already data-sharded (e.g. FSDP)
+            return P(*parts)
+        for i, (p, d) in enumerate(zip(parts, shape.shape)):
+            if p is None and d % 16 == 0:
+                parts[i] = data_axes if len(data_axes) > 1 else data_axes[0]
+                break
+        return P(*parts)
+
+    m = jax.tree.map(shard_leaf, param_pspec, params_shapes,
+                     is_leaf=lambda x: isinstance(x, P))
+    return AdamWState(step=P(), m=m, v=jax.tree.map(lambda s: s, m,
+                      is_leaf=lambda x: isinstance(x, P)))

@@ -1,0 +1,4 @@
+from .analysis import (CollectiveStats, RooflineReport, model_flops,
+                       parse_collectives, roofline_report)
+
+__all__ = [k for k in dir() if not k.startswith("_")]

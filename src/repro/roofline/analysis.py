@@ -1,0 +1,175 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Three terms per (arch × shape × mesh), in seconds:
+    compute    = HLO_FLOPs / (peak_FLOP/s)          [per device]
+    memory     = HLO_bytes / HBM_bw                 [per device]
+    collective = wire_bytes / ICI_bw                [per device]
+
+HLO_FLOPs / HLO_bytes come from ``compiled.cost_analysis()`` (already
+per-partition under SPMD).  Collective wire bytes are NOT in
+cost_analysis: we parse the post-partitioning HLO text, take each
+collective's RESULT shape and apply ring-algorithm egress factors with
+the op's replica-group size:
+
+    all-reduce          2(n-1)/n × result_bytes
+    all-gather           (n-1)/n × result_bytes   (result = gathered)
+    reduce-scatter       (n-1)   × result_bytes   (result = shard)
+    all-to-all           (n-1)/n × result_bytes
+    collective-permute         1 × result_bytes
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+__all__ = ["CollectiveStats", "parse_collectives", "RooflineReport",
+           "roofline_report", "model_flops"]
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+# e.g.  %all-gather.3 = bf16[2,4096,512]{2,1,0} all-gather(...)
+#       ROOT %tuple ... (f32[8], f32[8]) all-reduce(...)
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*(\([^)]*\)|\S+)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_GROUPS_RE = re.compile(r"replica_groups=(\{\{[^}]*\}[^=]*\}|\[\d+,\d+\]<=\[\d+\])")
+
+_FACTORS = {
+    "all-reduce": lambda n: 2.0 * (n - 1) / max(n, 1),
+    "all-gather": lambda n: (n - 1) / max(n, 1),
+    "reduce-scatter": lambda n: float(n - 1),
+    "all-to-all": lambda n: (n - 1) / max(n, 1),
+    "collective-permute": lambda n: 1.0,
+}
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Total bytes of one shape expr or a tuple of shape exprs."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_RE.search(line)
+    if not m:
+        return default
+    expr = m.group(1)
+    if expr.startswith("{{"):
+        first = expr[2:].split("}")[0]
+        return max(len([t for t in first.split(",") if t.strip() != ""]), 1)
+    m2 = re.match(r"\[(\d+),(\d+)\]<=\[(\d+)\]", expr)
+    if m2:
+        return int(m2.group(2))           # [groups, group_size] <= [total]
+    return default
+
+
+@dataclass
+class CollectiveStats:
+    counts: Dict[str, int] = field(default_factory=dict)
+    payload_bytes: Dict[str, float] = field(default_factory=dict)
+    wire_bytes: Dict[str, float] = field(default_factory=dict)
+
+    @property
+    def total_wire_bytes(self) -> float:
+        return sum(self.wire_bytes.values())
+
+    def to_dict(self) -> Dict:
+        return {"counts": self.counts, "payload_bytes": self.payload_bytes,
+                "wire_bytes": self.wire_bytes,
+                "total_wire_bytes": self.total_wire_bytes}
+
+
+def parse_collectives(hlo_text: str, default_group: int) -> CollectiveStats:
+    """Scan (post-SPMD) HLO for collective ops and account wire bytes."""
+    st = CollectiveStats()
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        shape_str, op = m.group(1), m.group(2)
+        if "-start" in line and f"{op}-done" in line:
+            continue
+        b = _shape_bytes(shape_str)
+        n = _group_size(line, default_group)
+        st.counts[op] = st.counts.get(op, 0) + 1
+        st.payload_bytes[op] = st.payload_bytes.get(op, 0.0) + b
+        st.wire_bytes[op] = (st.wire_bytes.get(op, 0.0)
+                             + b * _FACTORS[op](n))
+    return st
+
+
+def model_flops(n_params_active: int, n_tokens: int, train: bool) -> float:
+    """MODEL_FLOPS = 6·N·D for training, 2·N·D for inference forward."""
+    return (6.0 if train else 2.0) * n_params_active * n_tokens
+
+
+@dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    hlo_flops: float               # per device
+    hlo_bytes: float               # per device
+    wire_bytes: float              # per device
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    model_flops_total: float
+    useful_flops_ratio: float
+    bytes_per_device: Dict[str, float]
+    collectives: Dict
+    note: str = ""
+
+    def to_dict(self) -> Dict:
+        return dict(self.__dict__)
+
+
+def roofline_report(*, arch: str, shape: str, mesh_name: str, n_devices: int,
+                    cost: Dict, mem_stats, coll: CollectiveStats,
+                    hw, model_flops_total: float, note: str = ""
+                    ) -> RooflineReport:
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    wire = coll.total_wire_bytes
+    compute_s = flops / hw.peak_flops
+    memory_s = byts / hw.hbm_bw
+    collective_s = wire / hw.ici_bw
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+    per_dev_flops_total = flops * n_devices
+    ratio = (model_flops_total / per_dev_flops_total
+             if per_dev_flops_total else 0.0)
+    mem = {
+        "argument_bytes": float(mem_stats.argument_size_in_bytes),
+        "output_bytes": float(mem_stats.output_size_in_bytes),
+        "temp_bytes": float(mem_stats.temp_size_in_bytes),
+        "alias_bytes": float(mem_stats.alias_size_in_bytes),
+        "peak_hbm_est": float(mem_stats.argument_size_in_bytes
+                              + mem_stats.temp_size_in_bytes),
+    }
+    return RooflineReport(
+        arch=arch, shape=shape, mesh=mesh_name, hlo_flops=flops,
+        hlo_bytes=byts, wire_bytes=wire, compute_s=compute_s,
+        memory_s=memory_s, collective_s=collective_s, bottleneck=bottleneck,
+        model_flops_total=model_flops_total, useful_flops_ratio=ratio,
+        bytes_per_device=mem, collectives=coll.to_dict(), note=note)

@@ -1,0 +1,129 @@
+"""Loop-aware HLO collective accounting.
+
+``compiled.cost_analysis()`` and a flat text scan both count a while-loop
+body ONCE — but `lax.scan` over 61 layers executes its body 61 times, so
+flat parsing undercounts scanned collectives by the trip count.  This
+parser rebuilds the computation graph from the HLO text:
+
+  1. split the module into computations,
+  2. find `while` ops, resolve their body/condition computations,
+  3. read the trip count from the condition's comparison constant,
+  4. recursively accumulate collective payload × multiplier.
+
+Trip counts for `lax.scan`/grad-accum loops are compile-time constants
+on this path, so the accounting is exact for our models.  Unknown-bound
+whiles conservatively count once.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from .analysis import (_FACTORS, _GROUPS_RE, _OP_RE, _SHAPE_RE,
+                       CollectiveStats, _group_size, _shape_bytes)
+
+__all__ = ["parse_collectives_loop_aware"]
+
+# computation header:  %name (args...) -> type {   OR   ENTRY %name ...
+# (args may contain nested tuple parens — do not try to match them)
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(")
+_WHILE_RE = re.compile(
+    r"while\(.*?\),\s*condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)")
+_CONST_RE = re.compile(r"=\s*s32\[\]\s+constant\((\d+)\)")
+
+
+def _split_computations(hlo: str) -> Tuple[Dict[str, List[str]], Optional[str]]:
+    comps: Dict[str, List[str]] = {}
+    entry = None
+    cur: Optional[str] = None
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        if cur is None:
+            m = _COMP_RE.match(line)
+            if m and line.rstrip().endswith("{"):
+                cur = m.group(1)
+                comps[cur] = []
+                if line.startswith("ENTRY"):
+                    entry = cur
+        else:
+            if stripped == "}":
+                cur = None
+            else:
+                comps[cur].append(line)
+    return comps, entry
+
+
+def _trip_count(cond_lines: List[str]) -> int:
+    consts = [int(m.group(1)) for l in cond_lines
+              for m in _CONST_RE.finditer(l)]
+    # the loop bound is the (max) s32 constant the condition compares to
+    return max(consts) if consts else 1
+
+
+_F32_SHAPE_RE = re.compile(r"f32\[([\d,]*)\]")
+_WIRE_DTYPE_BYTES = 2          # logical wire dtype of activations/grads
+_CORRECT_THRESHOLD = 1 << 18   # only correct payloads > 256 KiB
+
+
+def _corrected_bytes(shape_str: str) -> float:
+    """Payload bytes with the CPU-backend f32-promotion artifact undone.
+
+    The CPU backend upcasts bf16 matmuls (and therefore the partial sums
+    that collectives carry) to f32; on the TPU target these tensors cross
+    the wire in bf16.  Large f32 payloads are therefore charged at 2
+    bytes/element.  Genuine small f32 traffic (norm-scale grads, router
+    logits, loss scalars) is below the threshold and stays at 4.
+    """
+    total = _shape_bytes(shape_str)
+    for m in _F32_SHAPE_RE.finditer(shape_str):
+        dims = m.group(1)
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        if n * 4 > _CORRECT_THRESHOLD:
+            total -= n * (4 - _WIRE_DTYPE_BYTES)
+    return total
+
+
+def parse_collectives_loop_aware(hlo_text: str,
+                                 default_group: int) -> CollectiveStats:
+    comps, entry = _split_computations(hlo_text)
+    if entry is None:
+        # fall back to flat parse via analysis.parse_collectives
+        from .analysis import parse_collectives
+        return parse_collectives(hlo_text, default_group)
+
+    st = CollectiveStats()
+
+    def visit(comp: str, mult: float, seen: Tuple[str, ...] = ()) -> None:
+        if comp not in comps or comp in seen:
+            return
+        for line in comps[comp]:
+            wm = _WHILE_RE.search(line)
+            if wm:
+                cond, body = wm.group(1), wm.group(2)
+                trips = _trip_count(comps.get(cond, []))
+                visit(body, mult * trips, seen + (comp,))
+                continue
+            m = _OP_RE.search(line)
+            if m:
+                shape_str, op = m.group(1), m.group(2)
+                b = _corrected_bytes(shape_str)
+                n = _group_size(line, default_group)
+                st.counts[op] = st.counts.get(op, 0) + int(round(mult))
+                st.payload_bytes[op] = (st.payload_bytes.get(op, 0.0)
+                                        + b * mult)
+                st.wire_bytes[op] = (st.wire_bytes.get(op, 0.0)
+                                     + b * mult * _FACTORS[op](n))
+                continue
+            # calls into sub-computations (fusions never hold collectives,
+            # but custom-calls/called computations might): conservative —
+            # only recurse through explicit `call(` ops.
+            cm = re.search(r"\scall\(.*to_apply=%?([\w.\-]+)", line)
+            if cm:
+                visit(cm.group(1), mult, seen + (comp,))
+
+    visit(entry, 1.0)
+    return st

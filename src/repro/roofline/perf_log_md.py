@@ -1,0 +1,40 @@
+"""Render results/hillclimb.json into the EXPERIMENTS.md §Perf-log."""
+from __future__ import annotations
+
+import json
+import sys
+
+from .report_md import fmt_s
+
+
+def perf_log(records) -> str:
+    out = []
+    pairs = []
+    for r in records:
+        if r["pair"] not in pairs:
+            pairs.append(r["pair"])
+    for pair in pairs:
+        rows = [r for r in records if r["pair"] == pair]
+        base = rows[0]
+        out.append(f"\n### {pair}\n")
+        out.append("| iteration | compute | memory | collective | "
+                   "step ≥ | HBM/dev | Δstep vs baseline | verdict |")
+        out.append("|---|---|---|---|---|---|---|---|")
+        for r in rows:
+            hbm = r["bytes_per_device"]["peak_hbm_est"] / 1e9
+            speedup = base["roofline_step_s"] / r["roofline_step_s"]
+            out.append(
+                f"| {r['iteration']} | {fmt_s(r['analytic_compute_s'])} "
+                f"| {fmt_s(r['analytic_memory_s'])} "
+                f"| {fmt_s(r['collective_s'])} "
+                f"| {fmt_s(r['roofline_step_s'])} | {hbm:.0f} GB "
+                f"| {speedup:.2f}× | {r['bottleneck']}-bound |")
+        out.append("\nhypothesis log:")
+        for r in rows:
+            out.append(f"* **{r['iteration']}** — {r['hypothesis']}")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    records = json.load(open(sys.argv[1]))
+    print(perf_log(records))

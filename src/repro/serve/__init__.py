@@ -1,0 +1,3 @@
+from .engine import Engine, ServeConfig, make_serve_step
+
+__all__ = ["Engine", "ServeConfig", "make_serve_step"]

@@ -1,0 +1,4 @@
+from .step import (TrainState, cross_entropy_loss, grad_payload_stats,
+                   make_train_step, train_state_init)
+
+__all__ = [k for k in dir() if not k.startswith("_")]

@@ -1,0 +1,135 @@
+"""Training step: loss, gradient accumulation, AdamW, and the
+fixed-codebook compression probe on the gradient all-reduce payload.
+
+With ``grad_accum > 1`` the global batch is split into microbatches and
+scanned — this is what keeps the MoE dispatch buffers (E, C, d) inside
+HBM for the 671B config (see DESIGN.md §5) and is a first-class §Perf
+lever.
+
+When a CompressionSpec is supplied, the step computes the exact coded
+size of the gradient payload under the fixed codebook (histogram ·
+lengths per leaf — the same probe a hardware encoder gets for free) and
+returns it in the metrics; the host ledger scales the DP all-reduce
+bytes by it.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..comm.compression import CompressionSpec, payload_stats
+from ..models.common import ModelConfig
+from ..models.transformer import forward_train
+from ..optim.adamw import (AdamWConfig, AdamWState, adamw_init, adamw_update)
+
+__all__ = ["TrainState", "train_state_init", "make_train_step",
+           "cross_entropy_loss", "grad_payload_stats"]
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: AdamWState
+
+
+def train_state_init(params) -> TrainState:
+    return TrainState(params=params, opt=adamw_init(params))
+
+
+def cross_entropy_loss(logits, labels, mask=None):
+    """Mean token cross-entropy in f32."""
+    logits = logits.astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    if mask is None:
+        return -ll.mean()
+    return -(ll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def grad_payload_stats(grads, spec: Optional[CompressionSpec]
+                       ) -> Dict[str, jnp.ndarray]:
+    """Exact coded size of the (bf16) gradient payload under the fixed
+    codebook — summed per leaf, no giant concat.  Also returns the
+    per-plane symbol histograms so the host registry can keep observing
+    real gradient PMFs and rebuild codebooks off the critical path
+    (paper §4 lifecycle)."""
+    if spec is None or not spec.enabled:
+        z = jnp.zeros((), jnp.float32)
+        return {"raw_bits": z, "coded_bits": z}
+    from ..comm.compression import histogram256_xla
+    from ..core.symbols import bf16_planes_jnp
+    raw = jnp.zeros((), jnp.float32)
+    coded = jnp.zeros((), jnp.float32)
+    hists = {p: jnp.zeros((256,), jnp.int32) for p in spec.scheme.planes}
+    for leaf in jax.tree.leaves(grads):
+        if leaf.dtype != jnp.bfloat16:
+            leaf = leaf.astype(jnp.bfloat16)   # what rides the DP wire
+        raw = raw + jnp.float32(leaf.size * 16)
+        for plane, sym in bf16_planes_jnp(leaf).items():
+            h = histogram256_xla(sym)
+            hists[plane] = hists[plane] + h
+            lens = jnp.asarray(spec.lengths_for(plane), jnp.float32)
+            coded = coded + jnp.dot(h.astype(jnp.float32), lens)
+    out = {"raw_bits": raw, "coded_bits": coded}
+    for p, h in hists.items():
+        out[f"hist_{p}"] = h
+    return out
+
+
+def make_train_step(model_cfg: ModelConfig, opt_cfg: AdamWConfig,
+                    schedule_fn: Optional[Callable] = None,
+                    grad_accum: int = 1,
+                    comp_spec: Optional[CompressionSpec] = None):
+    """Build the jit-able train step: (state, batch) → (state, metrics).
+
+    Batch leaves are (B, ...) global arrays; with grad_accum=A they are
+    reshaped to (A, B/A, ...) and scanned.
+    """
+
+    def loss_fn(params, micro):
+        logits, aux = forward_train(params, micro, model_cfg)
+        mask = micro.get("loss_mask")
+        ce = cross_entropy_loss(logits, micro["labels"], mask)
+        return ce + aux, (ce, aux)
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def step(state: TrainState, batch: Dict[str, jnp.ndarray]):
+        if grad_accum == 1:
+            (loss, (ce, aux)), grads = grad_fn(state.params, batch)
+        else:
+            micro_batches = jax.tree.map(
+                lambda x: x.reshape((grad_accum, x.shape[0] // grad_accum)
+                                    + x.shape[1:]), batch)
+
+            def micro_step(carry, micro):
+                g_acc, l_acc, ce_acc, aux_acc = carry
+                (l, (ce, aux)), g = grad_fn(state.params, micro)
+                g_acc = jax.tree.map(jnp.add, g_acc, g)
+                return (g_acc, l_acc + l, ce_acc + ce, aux_acc + aux), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+            (grads, loss, ce, aux), _ = jax.lax.scan(
+                micro_step, (zeros, 0.0, 0.0, 0.0), micro_batches)
+            inv = 1.0 / grad_accum
+            grads = jax.tree.map(lambda g: g * inv, grads)
+            loss, ce, aux = loss * inv, ce * inv, aux * inv
+
+        comp = grad_payload_stats(grads, comp_spec)
+        lr_scale = (schedule_fn(state.opt.step) if schedule_fn is not None
+                    else jnp.float32(1.0))
+        params, opt, om = adamw_update(grads, state.opt, state.params,
+                                       opt_cfg, lr_scale)
+        metrics = {"loss": loss, "ce": ce, "aux": aux,
+                   "grad_raw_bits": comp["raw_bits"],
+                   "grad_coded_bits": comp["coded_bits"], **om}
+        for k, v in comp.items():
+            if k.startswith("hist_"):
+                metrics[f"grad_{k}"] = v
+        return TrainState(params=params, opt=opt), metrics
+
+    return step

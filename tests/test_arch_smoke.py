@@ -1,0 +1,123 @@
+"""Per-architecture smoke tests: a REDUCED variant of each assigned family
+(≤2 layers, d_model ≤ 512, ≤4 experts) runs one forward + one train step
+on CPU; output shapes and finiteness are asserted.  Full-size configs are
+exercised only by the dry-run (ShapeDtypeStruct, no allocation).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, EXTRA_IDS, get_config, input_specs, SHAPES
+from repro.data import DataConfig, SyntheticDataset
+from repro.models import (forward_train, init_caches, decode_step,
+                          model_init, model_pspec, param_count)
+from repro.optim import AdamWConfig
+from repro.train import make_train_step, train_state_init
+
+ALL_IDS = ARCH_IDS + EXTRA_IDS
+
+
+@pytest.fixture(scope="module", params=ALL_IDS)
+def arch(request):
+    full = get_config(request.param)
+    cfg = full.reduced()
+    params = model_init(cfg, jax.random.PRNGKey(0))
+    return request.param, full, cfg, params
+
+
+def _batch(cfg, b=2, s=16, seed=0):
+    ds = iter(SyntheticDataset(cfg, DataConfig(batch_size=b, seq_len=s,
+                                               seed=seed)))
+    return {k: jnp.asarray(v) for k, v in next(ds).items()}
+
+
+class TestSmoke:
+    def test_reduced_is_small(self, arch):
+        _, full, cfg, params = arch
+        assert cfg.n_layers <= 3
+        assert cfg.d_model <= 512
+        assert cfg.n_experts <= 4
+        assert param_count(params) < 50_000_000
+
+    def test_forward_shapes_and_finite(self, arch):
+        _, full, cfg, params = arch
+        batch = _batch(cfg)
+        logits, aux = forward_train(params, batch, cfg)
+        n_tok = batch["labels"].shape[1]
+        assert logits.shape == (2, n_tok, cfg.vocab_size)
+        assert bool(jnp.isfinite(logits.astype(jnp.float32)).all())
+        assert bool(jnp.isfinite(aux))
+
+    def test_one_train_step(self, arch):
+        _, full, cfg, params = arch
+        state = train_state_init(params)
+        step = jax.jit(make_train_step(cfg, AdamWConfig(lr=1e-3)))
+        batch = _batch(cfg, b=4, s=16)
+        state2, metrics = step(state, batch)
+        assert bool(jnp.isfinite(metrics["loss"]))
+        assert bool(jnp.isfinite(metrics["grad_norm"]))
+        # params must actually move
+        delta = sum(float(jnp.abs(a.astype(jnp.float32)
+                                  - b.astype(jnp.float32)).sum())
+                    for a, b in zip(jax.tree.leaves(state.params),
+                                    jax.tree.leaves(state2.params)))
+        assert delta > 0
+
+    def test_decode_step_if_decoder(self, arch):
+        arch_id, full, cfg, params = arch
+        if not cfg.is_decoder:
+            pytest.skip("encoder-only: no decode step (recorded in DESIGN.md)")
+        caches = init_caches(cfg, 2, 32)
+        tok = jnp.zeros((2, 1), jnp.int32)
+        logits, new_caches = decode_step(params, tok, caches, jnp.int32(0),
+                                         cfg)
+        assert logits.shape == (2, 1, cfg.vocab_size)
+        assert bool(jnp.isfinite(logits.astype(jnp.float32)).all())
+
+    def test_pspec_tree_matches_params(self, arch):
+        _, full, cfg, params = arch
+        pspec = model_pspec(cfg)
+        jax.tree.map(lambda p, s: None, params, pspec)   # structure match
+
+    def test_full_config_matches_assignment(self, arch):
+        arch_id, full, cfg, params = arch
+        expect = {
+            "recurrentgemma-9b": (38, 4096, 16, 1, 12288, 256000),
+            "deepseek-v3-671b": (61, 7168, 128, 128, None, 129280),
+            "mamba2-780m": (48, 1536, 0, 0, 0, 50280),
+            "command-r-35b": (40, 8192, 64, 8, 22528, 256000),
+            "qwen3-4b": (36, 2560, 32, 8, 9728, 151936),
+            "codeqwen1.5-7b": (32, 4096, 32, 32, 13440, 92416),
+            "command-r-plus-104b": (64, 12288, 96, 8, 33792, 256000),
+            "hubert-xlarge": (48, 1280, 16, 16, 5120, 504),
+            "internvl2-26b": (48, 6144, 48, 8, 16384, 92553),
+            "llama4-scout-17b-a16e": (48, 5120, 40, 8, 8192, 202048),
+        }.get(arch_id)
+        if expect is None:
+            return
+        layers, d, h, kv, ff, vocab = expect
+        assert full.n_layers == layers
+        assert full.d_model == d
+        assert full.n_heads == h
+        assert full.n_kv_heads == kv
+        if ff:
+            assert ff in (full.d_ff, full.moe_d_ff)
+        assert full.vocab_size == vocab
+
+
+class TestInputSpecs:
+    @pytest.mark.parametrize("shape_name", list(SHAPES))
+    @pytest.mark.parametrize("arch_id", ALL_IDS)
+    def test_specs_build_without_allocation(self, arch_id, shape_name):
+        cfg = get_config(arch_id)
+        specs = input_specs(cfg, shape_name)
+        for leaf in jax.tree.leaves(
+                specs, is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct)):
+            assert isinstance(leaf, jax.ShapeDtypeStruct)
+
+    def test_moe_config_counts(self):
+        ds = get_config("deepseek-v3-671b")
+        assert ds.n_experts == 256 and ds.experts_per_token == 8
+        l4 = get_config("llama4-scout-17b-a16e")
+        assert l4.n_experts == 16 and l4.experts_per_token == 1

@@ -1,0 +1,66 @@
+"""Checkpointing: raw and Huffman-compressed roundtrips."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import (load_compressed, load_pytree, save_compressed,
+                              save_pytree)
+from repro.models import BlockGroup, ModelConfig, model_init
+
+
+@pytest.fixture(scope="module")
+def params():
+    cfg = ModelConfig(name="c", arch_type="dense", d_model=128,
+                      vocab_size=512, blocks=(BlockGroup(("attn",), 2),),
+                      n_heads=4, n_kv_heads=2, head_dim=32, d_ff=256)
+    return model_init(cfg, jax.random.PRNGKey(3))
+
+
+def _trees_equal(a, b):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        assert x.shape == y.shape and x.dtype == y.dtype
+        assert (np.asarray(x) == np.asarray(y)).all()
+
+
+class TestRawCheckpoint:
+    def test_roundtrip(self, params, tmp_path):
+        p = str(tmp_path / "raw.npz")
+        save_pytree(p, params, {"step": 7})
+        back, extra = load_pytree(p, like=params)
+        _trees_equal(params, back)
+        assert extra == {"step": 7}
+
+    def test_mismatch_raises(self, params, tmp_path):
+        p = str(tmp_path / "raw.npz")
+        save_pytree(p, params)
+        with pytest.raises(ValueError):
+            load_pytree(p, like={"only": jnp.zeros(3)})
+
+
+class TestCompressedCheckpoint:
+    def test_bit_exact_roundtrip(self, params, tmp_path):
+        p = str(tmp_path / "c.npz")
+        stats = save_compressed(p, params, {"arch": "c"})
+        back, extra = load_compressed(p, like=params)
+        _trees_equal(params, back)
+        assert extra == {"arch": "c"}
+        # trained-ish bf16 weights must actually compress
+        assert stats["ratio"] < 0.95, stats
+
+    def test_mixed_dtype_tree(self, tmp_path):
+        tree = {"w": jnp.asarray(np.random.default_rng(0).normal(
+                    size=(64, 64)), jnp.bfloat16),
+                "scale": jnp.ones((16,), jnp.float32),
+                "step": jnp.zeros((), jnp.int32)}
+        p = str(tmp_path / "m.npz")
+        save_compressed(p, tree)
+        back, _ = load_compressed(p, like=tree)
+        _trees_equal(tree, back)
+
+    def test_small_bf16_leaf_stored_raw(self, tmp_path):
+        tree = {"tiny": jnp.ones((4,), jnp.bfloat16)}
+        p = str(tmp_path / "t.npz")
+        save_compressed(p, tree)
+        back, _ = load_compressed(p, like=tree)
+        _trees_equal(tree, back)

@@ -1,0 +1,23 @@
+"""Runner for the multi-device compressed-collective suite.
+
+The suite needs 8 forced host devices, which must be set before jax
+initializes — so it runs in a subprocess (the main pytest process keeps
+the real 1-device view, per the project convention).
+"""
+import os
+import pathlib
+import subprocess
+import sys
+
+SUITE = pathlib.Path(__file__).parent / "_comm_suite.py"
+
+
+def test_comm_suite_8_devices():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + " --xla_force_host_platform_device_count=8").strip()
+    env["PYTHONPATH"] = str(pathlib.Path(__file__).parents[1] / "src")
+    proc = subprocess.run([sys.executable, str(SUITE)], env=env,
+                          capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, (
+        f"comm suite failed\nstdout:\n{proc.stdout}\nstderr:\n{proc.stderr}")

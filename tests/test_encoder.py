@@ -1,0 +1,141 @@
+"""Roundtrip and cross-implementation tests for the single-stage encoder."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.codebook import build_codebook, CodebookRegistry
+from repro.core.encoder import (decode_np, decode_with_book, encode_jit,
+                                encode_np, encoded_size_bits,
+                                packed_words_capacity, single_stage_encode,
+                                three_stage_encode)
+
+
+def _data(seed, n, skew=0.05):
+    rng = np.random.default_rng(seed)
+    p = rng.dirichlet(np.full(256, skew))
+    return rng.choice(256, size=n, p=p).astype(np.uint8)
+
+
+def _book_for(data):
+    return build_codebook(np.bincount(data, minlength=256))
+
+
+class TestRoundtrip:
+    def test_jit_encode_np_decode(self):
+        data = _data(0, 4096)
+        book = _book_for(data)
+        words, n_bits = encode_jit(jnp.asarray(data), jnp.asarray(book.codes),
+                                   jnp.asarray(book.lengths))
+        out = decode_np(np.asarray(words), len(data), book)
+        assert (out == data).all()
+
+    def test_jit_encode_jit_decode(self):
+        data = _data(1, 4096)
+        book = _book_for(data)
+        words, _ = encode_jit(jnp.asarray(data), jnp.asarray(book.codes),
+                              jnp.asarray(book.lengths))
+        out = decode_with_book(words, book, len(data))
+        assert (np.asarray(out) == data).all()
+
+    def test_jit_matches_numpy_reference_bitstream(self):
+        data = _data(2, 513)  # odd size: exercises word-boundary spill
+        book = _book_for(data)
+        words_j, nbits_j = encode_jit(jnp.asarray(data), jnp.asarray(book.codes),
+                                      jnp.asarray(book.lengths))
+        words_n, nbits_n = encode_np(data, book.codes, book.lengths)
+        assert int(nbits_j) == nbits_n
+        nw = (nbits_n + 31) // 32
+        assert (np.asarray(words_j)[:nw] == words_n[:nw]).all()
+
+    def test_foreign_codebook_roundtrip(self):
+        # The paper's scenario: encode with a book built from OTHER data.
+        train = _data(3, 1 << 14)
+        book = _book_for(train)
+        data = _data(4, 2048)
+        res = single_stage_encode(jnp.asarray(data), book)
+        out = decode_np(np.asarray(res.words), len(data), book)
+        assert (out == data).all()
+
+    def test_exact_size_matches_ledger(self):
+        data = _data(5, 8192)
+        book = _book_for(data)
+        res = single_stage_encode(jnp.asarray(data), book)
+        counts = np.bincount(data, minlength=256)
+        assert int(res.n_bits) == book.encoded_bits(counts)
+        assert int(res.n_bits) == int(encoded_size_bits(counts, book.lengths))
+
+    @given(st.integers(0, 2**32 - 1), st.integers(1, 700),
+           st.floats(0.02, 5.0))
+    @settings(max_examples=30, deadline=None)
+    def test_property_roundtrip(self, seed, n, skew):
+        data = _data(seed, n, skew)
+        book = _book_for(data)
+        words, n_bits = encode_jit(jnp.asarray(data), jnp.asarray(book.codes),
+                                   jnp.asarray(book.lengths))
+        assert int(n_bits) <= n * book.max_len
+        assert (decode_np(np.asarray(words), n, book) == data).all()
+        out = decode_with_book(words, book, n)
+        assert (np.asarray(out) == data).all()
+
+    def test_capacity_bound(self):
+        assert packed_words_capacity(100, 16) >= (100 * 16) // 32 + 1
+
+    def test_constant_input(self):
+        data = np.full(1000, 42, dtype=np.uint8)
+        book = _book_for(data)
+        res = single_stage_encode(jnp.asarray(data), book)
+        # Constant data: dominant symbol gets a 1-bit code.
+        assert int(res.n_bits) == 1000
+        out = decode_np(np.asarray(res.words), 1000, book)
+        assert (out == data).all()
+
+
+class TestThreeStageBaseline:
+    def test_three_stage_wire_includes_codebook(self):
+        data = _data(6, 4096)
+        res, book, stages = three_stage_encode(data)
+        assert stages["wire_bits"] == int(res.n_bits) + 8 * 256
+        assert stages["freq_scan_s"] >= 0 and stages["tree_build_s"] > 0
+
+    def test_single_stage_matches_three_stage_when_book_is_own(self):
+        data = _data(7, 4096)
+        res3, book, _ = three_stage_encode(data)
+        res1 = single_stage_encode(jnp.asarray(data), book)
+        assert int(res1.n_bits) == int(res3.n_bits)
+
+
+class TestRegistry:
+    def test_select_best_picks_matching_book(self):
+        reg = CodebookRegistry()
+        peaked = np.zeros(256); peaked[:8] = 1000
+        flat = np.ones(256) * 40
+        reg.install(("ffn1_act", "bf16", "hi"), peaked)
+        reg.install(("ffn1_act", "bf16", "lo"), flat)
+        msg = np.zeros(256, dtype=np.int64); msg[:8] = 500
+        bid, ebits = reg.select_best(msg)
+        assert reg.by_id(bid).key == ("ffn1_act", "bf16", "hi")
+        assert ebits < 8.0
+
+    def test_registry_roundtrip_via_save_load(self, tmp_path):
+        reg = CodebookRegistry()
+        data = _data(8, 1 << 14)
+        reg.install(("grad", "bf16", "hi"), np.bincount(data, minlength=256))
+        p = str(tmp_path / "books.npz")
+        reg.save(p)
+        reg2 = CodebookRegistry.load(p)
+        b1, b2 = reg.by_id(0), reg2.by_id(0)
+        assert (b1.lengths == b2.lengths).all()
+        assert b1.key == b2.key
+
+    def test_ema_tracks_distribution_shift(self):
+        reg = CodebookRegistry(ema=0.5)
+        key = ("act", "bf16", "hi")
+        a = np.zeros(256); a[0] = 1000
+        b = np.zeros(256); b[255] = 1000
+        reg.observe(key, a)
+        for _ in range(8):
+            reg.observe(key, b)
+        reg.rebuild([key])
+        book = reg.get(key)
+        assert book.lengths[255] < book.lengths[0]

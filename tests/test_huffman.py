@@ -1,0 +1,129 @@
+"""Unit + property tests for Huffman construction and canonical codes."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.huffman import (MAX_CODE_LEN, canonical_codes,
+                                canonical_decode_tables, huffman_code_lengths,
+                                kraft_sum, package_merge_lengths,
+                                validate_prefix_free)
+from repro.core.entropy import (expected_code_length, pmf_from_counts,
+                                shannon_entropy, kl_divergence,
+                                compressibility)
+
+
+def _counts(seed, n=256, scale=10_000):
+    rng = np.random.default_rng(seed)
+    p = rng.dirichlet(np.full(n, 0.05))
+    return np.maximum((p * scale).astype(np.int64), 1)
+
+
+class TestHuffmanLengths:
+    def test_kraft_equality_complete_code(self):
+        c = _counts(0)
+        for lengths in (huffman_code_lengths(c), package_merge_lengths(c)):
+            assert kraft_sum(lengths) == pytest.approx(1.0)
+
+    def test_optimality_vs_entropy(self):
+        # Huffman is within 1 bit of entropy.
+        c = _counts(1)
+        h = shannon_entropy(c)
+        for lengths in (huffman_code_lengths(c), package_merge_lengths(c)):
+            ecl = expected_code_length(c, lengths)
+            assert h <= ecl + 1e-9
+            assert ecl < h + 1.0
+
+    def test_package_merge_respects_limit(self):
+        # Exponential counts force long unbounded codes.
+        c = np.array([1] * 200 + [2 ** i for i in range(56)], dtype=np.int64)
+        unb = huffman_code_lengths(c)
+        assert unb.max() > 16
+        lim = package_merge_lengths(c, max_len=16)
+        assert lim.max() <= 16
+        assert kraft_sum(lim) == pytest.approx(1.0)
+
+    def test_package_merge_matches_huffman_when_unconstrained(self):
+        c = _counts(2, scale=2000)
+        unb = huffman_code_lengths(c)
+        if unb.max() <= MAX_CODE_LEN:
+            lim = package_merge_lengths(c, max_len=MAX_CODE_LEN)
+            assert expected_code_length(c, lim) == pytest.approx(
+                expected_code_length(c, unb))
+
+    def test_degenerate_single_symbol(self):
+        c = np.zeros(256, dtype=np.int64)
+        c[7] = 100
+        for fn in (huffman_code_lengths, package_merge_lengths):
+            lengths = fn(c)
+            assert lengths[7] == 1
+            assert (np.delete(lengths, 7) == 0).all()
+
+    def test_two_symbols(self):
+        c = np.zeros(256, dtype=np.int64)
+        c[3], c[250] = 5, 100
+        lengths = package_merge_lengths(c)
+        assert lengths[3] == lengths[250] == 1
+
+    @given(st.integers(0, 2**32 - 1), st.integers(2, 256))
+    @settings(max_examples=25, deadline=None)
+    def test_property_kraft_and_optimality(self, seed, n_alive):
+        rng = np.random.default_rng(seed)
+        c = np.zeros(256, dtype=np.int64)
+        alive = rng.choice(256, size=n_alive, replace=False)
+        c[alive] = rng.integers(1, 10_000, size=n_alive)
+        lengths = package_merge_lengths(c, max_len=MAX_CODE_LEN)
+        assert kraft_sum(lengths) <= 1.0 + 1e-12
+        assert (lengths[alive] >= 1).all()
+        assert lengths.max() <= MAX_CODE_LEN
+        h = shannon_entropy(c)
+        assert expected_code_length(c, lengths) < h + 1.0 + 1e-9
+
+
+class TestCanonical:
+    def test_codes_are_prefix_free(self):
+        c = _counts(3)
+        lengths = package_merge_lengths(c)
+        codes = canonical_codes(lengths)
+        entries = sorted(
+            (format(int(codes[s]), f"0{lengths[s]}b") for s in range(256)
+             if lengths[s] > 0))
+        for a, b in zip(entries, entries[1:]):
+            assert not b.startswith(a), f"{a} prefixes {b}"
+
+    def test_decode_tables_roundtrip_symbol_lookup(self):
+        c = _counts(4)
+        lengths = package_merge_lengths(c)
+        codes = canonical_codes(lengths)
+        t = canonical_decode_tables(lengths)
+        for s in range(256):
+            l = lengths[s]
+            off = int(codes[s]) - int(t.first_code[l])
+            assert 0 <= off < int(t.num_codes[l])
+            assert t.sorted_symbols[int(t.base_index[l]) + off] == s
+
+    def test_validate_prefix_free_raises(self):
+        with pytest.raises(ValueError):
+            validate_prefix_free(np.array([1, 1, 1]))
+
+
+class TestEntropy:
+    def test_uniform_entropy(self):
+        assert shannon_entropy(np.ones(256)) == pytest.approx(8.0)
+
+    def test_kl_nonnegative_zero_iff_equal(self):
+        p = _counts(5)
+        q = _counts(6)
+        assert kl_divergence(p, p) == pytest.approx(0.0, abs=1e-12)
+        assert kl_divergence(p, q) > 0
+
+    def test_compressibility_paper_example(self):
+        # Paper: entropy 6.25 bits on 8-bit symbols → ~21.9 %.
+        assert compressibility(6.25, 8) == pytest.approx(0.21875)
+
+    def test_pmf_normalizes(self):
+        p = pmf_from_counts(_counts(7))
+        assert p.sum() == pytest.approx(1.0)
+
+    def test_empty_counts_uniform(self):
+        p = pmf_from_counts(np.zeros(16))
+        assert np.allclose(p, 1 / 16)

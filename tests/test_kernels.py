@@ -1,0 +1,129 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret mode) vs jnp oracle."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from repro.core.codebook import build_codebook
+from repro.core.encoder import decode_np
+from repro.kernels import ops, ref
+from repro.kernels.encode import encode_lookup_pallas
+from repro.kernels.histogram import histogram256_pallas
+
+SIZES = [1, 7, 128, 4096, 4097, 12_288, 65_536 + 3]
+DTYPES = [jnp.uint8, jnp.int32]
+
+
+def _sym(seed, n, dtype=jnp.uint8, skew=0.05):
+    rng = np.random.default_rng(seed)
+    p = rng.dirichlet(np.full(256, skew))
+    return jnp.asarray(rng.choice(256, size=n, p=p), dtype=dtype)
+
+
+def _lut(seed):
+    rng = np.random.default_rng(seed)
+    counts = np.maximum(rng.integers(0, 1000, size=256), 1)
+    book = build_codebook(counts)
+    return book, jnp.asarray(book.code_lut())
+
+
+class TestHistogramKernel:
+    @pytest.mark.parametrize("n", SIZES)
+    @pytest.mark.parametrize("dtype", DTYPES)
+    def test_matches_ref(self, n, dtype):
+        sym = _sym(n, n, dtype)
+        got = histogram256_pallas(sym, interpret=True)
+        want = ref.histogram256_ref(sym)
+        assert_allclose(np.asarray(got), np.asarray(want))
+
+    def test_total_is_n(self):
+        sym = _sym(0, 5000)
+        assert int(histogram256_pallas(sym, interpret=True).sum()) == 5000
+
+    @given(st.integers(0, 2**31 - 1), st.integers(1, 3000))
+    @settings(max_examples=10, deadline=None)
+    def test_property(self, seed, n):
+        sym = _sym(seed, n)
+        got = histogram256_pallas(sym, interpret=True)
+        want = np.bincount(np.asarray(sym), minlength=256)
+        assert (np.asarray(got) == want).all()
+
+
+class TestEncodeKernel:
+    @pytest.mark.parametrize("n", SIZES)
+    def test_matches_ref(self, n):
+        sym = _sym(n + 1, n)
+        _, lut = _lut(n)
+        gc, gl, gb = encode_lookup_pallas(sym, lut, interpret=True)
+        wc, wl, wb = ref.encode_lookup_ref(sym, lut)
+        assert (np.asarray(gc) == np.asarray(wc)).all()
+        assert (np.asarray(gl) == np.asarray(wl)).all()
+        assert int(gb) == int(wb)
+
+    def test_all_symbols_exact(self):
+        # Every symbol value through the MXU one-hot path, exactly.
+        sym = jnp.arange(256, dtype=jnp.uint8)
+        book, lut = _lut(9)
+        gc, gl, gb = encode_lookup_pallas(sym, lut, interpret=True)
+        assert (np.asarray(gc) == book.codes).all()
+        assert (np.asarray(gl) == book.lengths).all()
+
+    def test_kernel_pack_roundtrips(self):
+        sym = _sym(5, 2048)
+        book, _ = _lut(5)
+        res = ops.encode_with_book(sym, book)
+        out = decode_np(np.asarray(res.words), 2048, book)
+        assert (out == np.asarray(sym)).all()
+
+    def test_kernel_pack_matches_core_encoder(self):
+        from repro.core.encoder import encode_jit
+        sym = _sym(6, 1536)
+        book, _ = _lut(6)
+        res = ops.encode_with_book(sym, book)
+        words, n_bits = encode_jit(sym, jnp.asarray(book.codes),
+                                   jnp.asarray(book.lengths))
+        assert int(res.n_bits) == int(n_bits)
+        assert (np.asarray(res.words) == np.asarray(words)).all()
+
+    def test_message_bits_matches_exact(self):
+        sym = _sym(7, 10_000)
+        book, _ = _lut(7)
+        got = ops.message_bits(sym, book.lengths)
+        want = book.encoded_bits(np.bincount(np.asarray(sym), minlength=256))
+        assert int(got) == want
+
+
+class TestBitpackKernel:
+    @pytest.mark.parametrize("n", [1, 100, 2048, 2049, 5000, 16384])
+    def test_block_pack_merge_matches_encoder(self, n):
+        from repro.core.encoder import encode_jit
+        sym = _sym(n + 40, n)
+        book, _ = _lut(n + 40)
+        got_words, got_bits = ops.pack_with_book(sym, book)
+        want_words, want_bits = encode_jit(sym, jnp.asarray(book.codes),
+                                           jnp.asarray(book.lengths))
+        assert int(got_bits) == int(want_bits)
+        nw = (int(want_bits) + 31) // 32
+        assert (np.asarray(got_words)[:nw]
+                == np.asarray(want_words)[:nw]).all()
+
+    def test_block_pack_roundtrips_via_decoder(self):
+        sym = _sym(77, 6000)
+        book, _ = _lut(77)
+        words, bits = ops.pack_with_book(sym, book)
+        out = decode_np(np.asarray(words), 6000, book)
+        assert (out == np.asarray(sym)).all()
+
+    @given(st.integers(0, 2**31 - 1), st.integers(1, 700))
+    @settings(max_examples=10, deadline=None)
+    def test_property_block_pack(self, seed, n):
+        from repro.core.encoder import encode_jit
+        sym = _sym(seed, n)
+        book, _ = _lut(seed)
+        got_words, got_bits = ops.pack_with_book(sym, book)
+        _, want_bits = encode_jit(sym, jnp.asarray(book.codes),
+                                  jnp.asarray(book.lengths))
+        assert int(got_bits) == int(want_bits)
+        out = decode_np(np.asarray(got_words), n, book)
+        assert (out == np.asarray(sym)).all()

@@ -1,0 +1,245 @@
+"""Model-zoo correctness: decode ≡ train forward, prefill ≡ decode handoff,
+SSD chunked ≡ naive recurrence, MoE routing invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import (BlockGroup, ModelConfig, decode_step, forward_train,
+                          init_caches, model_init, prefill)
+from repro.models.ssm import ssd_chunked
+from repro.models.moe import moe_apply, moe_capacity, moe_init
+from repro.models.common import Axes
+
+KIND_CASES = [
+    (("attn",), {}),
+    (("local",), dict(sliding_window=8)),
+    (("attn_moe",), dict(n_experts=4, experts_per_token=2, moe_d_ff=64,
+                         n_shared_experts=1)),
+    (("mla",), dict(q_lora_rank=32, kv_lora_rank=16, qk_nope_head_dim=16,
+                    qk_rope_head_dim=8, v_head_dim=16)),
+    (("rec",), dict(lru_width=128)),
+    (("mamba",), dict(ssm_state=16, ssm_head_dim=32)),
+    (("rec", "rec", "local"), dict(lru_width=128, sliding_window=8)),
+]
+
+
+def _cfg(kinds, extra):
+    return ModelConfig(name="t", arch_type="x", d_model=128, vocab_size=256,
+                       blocks=(BlockGroup(kinds, 2),), n_heads=4,
+                       n_kv_heads=2, head_dim=32, d_ff=256, remat="none",
+                       dtype=jnp.float32, **extra)
+
+
+class TestDecodeEquivalence:
+    @pytest.mark.parametrize("kinds,extra", KIND_CASES,
+                             ids=[str(k) for k, _ in KIND_CASES])
+    def test_decode_matches_forward(self, kinds, extra):
+        cfg = _cfg(kinds, extra)
+        key = jax.random.PRNGKey(0)
+        params = model_init(cfg, key)
+        tok = jax.random.randint(key, (2, 12), 0, 256)
+        logits, _ = forward_train(params, {"tokens": tok}, cfg)
+        caches = init_caches(cfg, 2, 32)
+        outs = []
+        for t in range(12):
+            lg, caches = decode_step(params, tok[:, t:t + 1], caches,
+                                     jnp.int32(t), cfg)
+            outs.append(lg)
+        dec = jnp.concatenate(outs, axis=1)
+        rel = float(jnp.abs(dec - logits).max()
+                    / (jnp.abs(logits).max() + 1e-9))
+        assert rel < 1e-4, f"decode diverges from forward: {rel}"
+
+    @pytest.mark.parametrize("kinds,extra", KIND_CASES[:4],
+                             ids=[str(k) for k, _ in KIND_CASES[:4]])
+    def test_prefill_handoff(self, kinds, extra):
+        cfg = _cfg(kinds, extra)
+        key = jax.random.PRNGKey(1)
+        params = model_init(cfg, key)
+        tok = jax.random.randint(key, (2, 12), 0, 256)
+        logits, _ = forward_train(params, {"tokens": tok}, cfg)
+        _, caches = prefill(params, {"tokens": tok[:, :8]}, cfg, cache_len=32)
+        outs = []
+        for t in range(8, 12):
+            lg, caches = decode_step(params, tok[:, t:t + 1], caches,
+                                     jnp.int32(t), cfg)
+            outs.append(lg)
+        dec = jnp.concatenate(outs, axis=1)
+        rel = float(jnp.abs(dec - logits[:, 8:]).max()
+                    / (jnp.abs(logits).max() + 1e-9))
+        assert rel < 1e-4
+
+    def test_vlm_prefix_path(self):
+        cfg = _cfg(("attn",), {})
+        from dataclasses import replace
+        cfg = replace(cfg, prefix_len=4)
+        params = model_init(cfg, jax.random.PRNGKey(2))
+        tok = jax.random.randint(jax.random.PRNGKey(3), (2, 8), 0, 256)
+        pfx = jax.random.normal(jax.random.PRNGKey(4), (2, 4, 128))
+        logits, _ = forward_train(params, {"tokens": tok,
+                                           "prefix_embeds": pfx}, cfg)
+        assert logits.shape == (2, 8, 256)   # prefix positions sliced off
+
+    def test_encoder_only_path(self):
+        from dataclasses import replace
+        cfg = replace(_cfg(("attn",), {}), causal=False, prefix_only=True)
+        params = model_init(cfg, jax.random.PRNGKey(5))
+        emb = jax.random.normal(jax.random.PRNGKey(6), (2, 10, 128))
+        logits, _ = forward_train(params, {"prefix_embeds": emb}, cfg)
+        assert logits.shape == (2, 10, 256)
+
+
+class TestSSD:
+    def test_chunked_matches_naive_recurrence(self):
+        rng = np.random.default_rng(0)
+        b, l, h, p, n = 2, 256, 3, 8, 4
+        x = jnp.asarray(rng.normal(size=(b, l, h, p)), jnp.float32)
+        dt = jnp.asarray(rng.uniform(0.01, 0.5, size=(b, l, h)), jnp.float32)
+        a_neg = jnp.asarray(-rng.uniform(0.5, 2.0, size=(h,)), jnp.float32)
+        bb = jnp.asarray(rng.normal(size=(b, l, h, n)), jnp.float32)
+        cc = jnp.asarray(rng.normal(size=(b, l, h, n)), jnp.float32)
+
+        y = ssd_chunked(x, dt, a_neg, bb, cc, chunk=64)
+
+        # naive O(L) recurrence oracle
+        state = np.zeros((b, h, p, n))
+        ys = np.zeros((b, l, h, p))
+        xn, dtn, bn, cn = map(np.asarray, (x, dt, bb, cc))
+        an = np.asarray(a_neg)
+        for t in range(l):
+            da = np.exp(dtn[:, t] * an[None, :])              # (b,h)
+            state = (state * da[..., None, None]
+                     + dtn[:, t][..., None, None]
+                     * xn[:, t][..., :, None] * bn[:, t][:, :, None, :])
+            ys[:, t] = (state * cn[:, t][:, :, None, :]).sum(-1)
+        np.testing.assert_allclose(np.asarray(y), ys, rtol=2e-4, atol=2e-4)
+
+    def test_final_state_matches(self):
+        rng = np.random.default_rng(1)
+        b, l, h, p, n = 1, 128, 2, 4, 4
+        x = jnp.asarray(rng.normal(size=(b, l, h, p)), jnp.float32)
+        dt = jnp.asarray(rng.uniform(0.01, 0.5, size=(b, l, h)), jnp.float32)
+        a_neg = jnp.asarray(-rng.uniform(0.5, 2.0, size=(h,)), jnp.float32)
+        bb = jnp.asarray(rng.normal(size=(b, l, h, n)), jnp.float32)
+        cc = jnp.asarray(rng.normal(size=(b, l, h, n)), jnp.float32)
+        _, final = ssd_chunked(x, dt, a_neg, bb, cc, chunk=32,
+                               return_final_state=True)
+        state = np.zeros((b, h, p, n))
+        xn, dtn, bn = map(np.asarray, (x, dt, bb))
+        an = np.asarray(a_neg)
+        for t in range(l):
+            da = np.exp(dtn[:, t] * an[None, :])
+            state = (state * da[..., None, None]
+                     + dtn[:, t][..., None, None]
+                     * xn[:, t][..., :, None] * bn[:, t][:, :, None, :])
+        np.testing.assert_allclose(np.asarray(final), state, rtol=2e-4,
+                                   atol=2e-4)
+
+
+class TestMoE:
+    def _cfg(self, **kw):
+        base = dict(name="m", arch_type="moe", d_model=64, vocab_size=128,
+                    blocks=(BlockGroup(("attn_moe",), 1),), n_heads=2,
+                    n_kv_heads=2, head_dim=32, d_ff=128, n_experts=4,
+                    experts_per_token=2, moe_d_ff=32, dtype=jnp.float32)
+        base.update(kw)
+        return ModelConfig(**base)
+
+    def test_capacity_formula(self):
+        cfg = self._cfg(capacity_factor=1.25)
+        c = moe_capacity(1024, cfg)
+        assert c >= 1024 * 2 / 4 and c % 4 == 0
+
+    def test_moe_output_finite_and_routed(self):
+        cfg = self._cfg()
+        params = moe_init(jax.random.PRNGKey(0), cfg, Axes())
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 64))
+        y, aux = moe_apply(params, x, cfg)
+        assert y.shape == x.shape
+        assert bool(jnp.isfinite(y).all()) and float(aux) > 0
+
+    def test_moe_with_huge_capacity_matches_dense_expert_sum(self):
+        # With capacity >> tokens nothing drops: y must equal the direct
+        # per-token weighted expert computation.
+        cfg = self._cfg(capacity_factor=50.0)
+        params = moe_init(jax.random.PRNGKey(2), cfg, Axes())
+        x = jax.random.normal(jax.random.PRNGKey(3), (1, 8, 64))
+        y, _ = moe_apply(params, x, cfg)
+
+        xf = x.reshape(-1, 64)
+        logits = xf @ params["router"]
+        probs = jax.nn.softmax(logits, -1)
+        topw, topi = jax.lax.top_k(probs, 2)
+        topw = topw / topw.sum(-1, keepdims=True)
+        want = np.zeros((8, 64), np.float32)
+        for t in range(8):
+            for j in range(2):
+                e = int(topi[t, j])
+                h = jax.nn.silu(xf[t] @ params["w_gate"][e]) * (
+                    xf[t] @ params["w_up"][e])
+                want[t] += float(topw[t, j]) * np.asarray(h @ params["w_down"][e])
+        got = np.asarray(y.reshape(-1, 64))
+        np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+
+    def test_top1_routing(self):
+        cfg = self._cfg(experts_per_token=1, capacity_factor=4.0)
+        params = moe_init(jax.random.PRNGKey(4), cfg, Axes())
+        x = jax.random.normal(jax.random.PRNGKey(5), (2, 8, 64))
+        y, aux = moe_apply(params, x, cfg)
+        assert bool(jnp.isfinite(y).all())
+
+
+class TestFp8KvCache:
+    def test_fp8_cache_decode_close_to_bf16(self):
+        from dataclasses import replace
+        cfg = _cfg(("attn",), {})
+        cfg8 = replace(cfg, kv_cache_dtype=jnp.float8_e4m3fn)
+        key = jax.random.PRNGKey(9)
+        params = model_init(cfg, key)
+        tok = jax.random.randint(key, (2, 10), 0, 256)
+
+        def run(c):
+            caches = init_caches(c, 2, 32)
+            outs = []
+            for t in range(10):
+                lg, caches = decode_step(params, tok[:, t:t + 1], caches,
+                                         jnp.int32(t), c)
+                outs.append(lg)
+            return jnp.concatenate(outs, axis=1)
+
+        full = run(cfg)
+        quant = run(cfg8)
+        rel = float(jnp.abs(full - quant).max()
+                    / (jnp.abs(full).max() + 1e-9))
+        assert rel < 0.15, f"fp8 cache drift too large: {rel}"
+        # and the cache really is fp8
+        caches = init_caches(cfg8, 2, 32)
+        assert caches[0][0]["k"].dtype == jnp.float8_e4m3fn
+
+    def test_fp8_cache_mla(self):
+        from dataclasses import replace
+        cfg = _cfg(("mla",), dict(q_lora_rank=32, kv_lora_rank=16,
+                                  qk_nope_head_dim=16, qk_rope_head_dim=8,
+                                  v_head_dim=16))
+        cfg8 = replace(cfg, kv_cache_dtype=jnp.float8_e4m3fn)
+        params = model_init(cfg, jax.random.PRNGKey(10))
+        tok = jax.random.randint(jax.random.PRNGKey(11), (1, 8), 0, 256)
+        caches = init_caches(cfg8, 1, 16)
+        assert caches[0][0]["ckv"].dtype == jnp.float8_e4m3fn
+        for t in range(8):
+            lg, caches = decode_step(params, tok[:, t:t + 1], caches,
+                                     jnp.int32(t), cfg8)
+        assert bool(jnp.isfinite(lg).all())
+
+    def test_fp8_prefill_handoff(self):
+        from dataclasses import replace
+        cfg8 = replace(_cfg(("attn",), {}),
+                       kv_cache_dtype=jnp.float8_e4m3fn)
+        params = model_init(cfg8, jax.random.PRNGKey(12))
+        tok = jax.random.randint(jax.random.PRNGKey(13), (2, 12), 0, 256)
+        _, caches = prefill(params, {"tokens": tok[:, :8]}, cfg8,
+                            cache_len=32)
+        assert caches[0][0]["k"].dtype == jnp.float8_e4m3fn
+        lg, _ = decode_step(params, tok[:, 8:9], caches, jnp.int32(8), cfg8)
+        assert bool(jnp.isfinite(lg).all())

@@ -1,0 +1,157 @@
+"""Unit tests for roofline machinery: loop-aware HLO collective parsing,
+shape/byte accounting, ring factors, analytic terms."""
+import numpy as np
+import pytest
+
+from repro.launch.mesh import TPU_V5E
+from repro.roofline.analysis import (CollectiveStats, _group_size,
+                                     _shape_bytes, parse_collectives)
+from repro.roofline.hlo_parse import (_split_computations, _trip_count,
+                                      parse_collectives_loop_aware)
+
+FLAT_HLO = """
+ENTRY %main.1 (p0: f32[16,64]) -> f32[16,64] {
+  %p0 = f32[16,64]{1,0} parameter(0)
+  %ar = f32[16,64]{1,0} all-reduce(%p0), replica_groups=[16,16]<=[256]
+  ROOT %out = f32[16,64]{1,0} add(%ar, %p0)
+}
+"""
+
+LOOPED_HLO = """
+%wrapped_cmp (a: s32[], b: s32[]) -> pred[] {
+  %a = s32[] parameter(0)
+  %c5 = s32[] constant(5)
+  ROOT %lt = pred[] compare(%a, %c5), direction=LT
+}
+
+%body.2 (t: (s32[], bf16[8,128])) -> (s32[], bf16[8,128]) {
+  %t = (s32[], bf16[8,128]) parameter(0)
+  %x = bf16[8,128]{1,0} get-tuple-element(%t), index=1
+  %ag = bf16[32,128]{1,0} all-gather(%x), replica_groups={{0,1,2,3}}
+  %ar2 = bf16[8,128]{1,0} all-reduce(%x), replica_groups={{0,1,2,3}}
+  ROOT %r = (s32[], bf16[8,128]) tuple(%t)
+}
+
+%cond.2 (t: (s32[], bf16[8,128])) -> pred[] {
+  %t = (s32[], bf16[8,128]) parameter(0)
+  %i = s32[] get-tuple-element(%t), index=0
+  %c5 = s32[] constant(5)
+  ROOT %lt = pred[] compare(%i, %c5), direction=LT
+}
+
+ENTRY %main.2 (p0: bf16[8,128]) -> bf16[8,128] {
+  %p0 = bf16[8,128]{1,0} parameter(0)
+  %w = (s32[], bf16[8,128]) while(%t0), condition=%cond.2, body=%body.2
+  %big = f32[1024,1024]{1,0} all-reduce(%x2), replica_groups={{0,1}}
+  ROOT %o = bf16[8,128]{1,0} copy(%p0)
+}
+"""
+
+
+class TestShapeBytes:
+    def test_simple(self):
+        assert _shape_bytes("f32[16,64]") == 16 * 64 * 4
+        assert _shape_bytes("bf16[8,128]{1,0}") == 8 * 128 * 2
+
+    def test_tuple(self):
+        assert _shape_bytes("(f32[4,4], bf16[2,2])") == 64 + 8
+
+    def test_scalar(self):
+        assert _shape_bytes("f32[]") == 4
+
+    def test_group_size_iota(self):
+        assert _group_size("replica_groups=[16,16]<=[256]", 1) == 16
+
+    def test_group_size_explicit(self):
+        assert _group_size("replica_groups={{0,1,2,3},{4,5,6,7}}", 1) == 4
+
+
+class TestFlatParse:
+    def test_flat_counts_and_factor(self):
+        st = parse_collectives(FLAT_HLO, default_group=256)
+        assert st.counts["all-reduce"] == 1
+        payload = 16 * 64 * 4
+        assert st.payload_bytes["all-reduce"] == payload
+        # ring all-reduce with n=16: 2*(15)/16
+        assert st.wire_bytes["all-reduce"] == pytest.approx(
+            payload * 2 * 15 / 16)
+
+
+class TestLoopAware:
+    def test_split_computations(self):
+        comps, entry = _split_computations(LOOPED_HLO)
+        assert entry == "main.2"
+        assert "body.2" in comps and "cond.2" in comps
+
+    def test_trip_count(self):
+        comps, _ = _split_computations(LOOPED_HLO)
+        assert _trip_count(comps["cond.2"]) == 5
+
+    def test_loop_multiplied_collectives(self):
+        st = parse_collectives_loop_aware(LOOPED_HLO, default_group=4)
+        # body runs 5×: all-gather and all-reduce each count 5
+        assert st.counts["all-gather"] == 5
+        assert st.counts["all-reduce"] == 6       # 5 in loop + 1 in entry
+        ag_payload = 32 * 128 * 2 * 5
+        assert st.payload_bytes["all-gather"] == pytest.approx(ag_payload)
+
+    def test_f32_promotion_correction(self):
+        # the 1024×1024 f32 AR (4 MiB > 256 KiB) is charged 2 B/element
+        st = parse_collectives_loop_aware(LOOPED_HLO, default_group=4)
+        big = 1024 * 1024 * 2            # corrected bytes
+        small = 8 * 128 * 2 * 5          # bf16 in-loop ARs
+        assert st.payload_bytes["all-reduce"] == pytest.approx(big + small)
+
+
+class TestAnalyticTerms:
+    def test_decode_memory_includes_cache(self):
+        from repro.models.common import BlockGroup, ModelConfig
+        from repro.roofline.analytic import analytic_terms
+        cfg = ModelConfig(name="a", arch_type="dense", d_model=1024,
+                          vocab_size=32000,
+                          blocks=(BlockGroup(("attn",), 8),), n_heads=8,
+                          n_kv_heads=8, head_dim=128, d_ff=4096)
+        t = analytic_terms(cfg, kind="decode", seq_len=32768,
+                           global_batch=64, n_params=int(1e9),
+                           n_active_params=int(1e9), n_devices=256,
+                           model_shards=16, data_shards=16, hw=TPU_V5E,
+                           cache_bytes_total=1e12)
+        base = analytic_terms(cfg, kind="decode", seq_len=32768,
+                              global_batch=64, n_params=int(1e9),
+                              n_active_params=int(1e9), n_devices=256,
+                              model_shards=16, data_shards=16, hw=TPU_V5E,
+                              cache_bytes_total=0.0)
+        assert t["analytic_bytes"] > base["analytic_bytes"]
+
+    def test_train_flops_scale_with_tokens_and_params(self):
+        from repro.models.common import BlockGroup, ModelConfig
+        from repro.roofline.analytic import analytic_flops_per_device
+        cfg = ModelConfig(name="a", arch_type="dense", d_model=512,
+                          vocab_size=1000,
+                          blocks=(BlockGroup(("attn",), 4),), n_heads=8,
+                          n_kv_heads=8, head_dim=64, d_ff=2048)
+        f1 = analytic_flops_per_device(cfg, kind="train", seq_len=1024,
+                                       global_batch=8,
+                                       n_active_params=int(1e8),
+                                       n_devices=16)
+        f2 = analytic_flops_per_device(cfg, kind="train", seq_len=1024,
+                                       global_batch=16,
+                                       n_active_params=int(1e8),
+                                       n_devices=16)
+        assert f2 == pytest.approx(2 * f1, rel=0.01)
+
+    def test_zero1_fsdp_reduce_memory_term(self):
+        from repro.models.common import BlockGroup, ModelConfig
+        from repro.roofline.analytic import analytic_hbm_bytes_per_device
+        cfg = ModelConfig(name="a", arch_type="dense", d_model=512,
+                          vocab_size=1000,
+                          blocks=(BlockGroup(("attn",), 4),), n_heads=8,
+                          n_kv_heads=8, head_dim=64, d_ff=2048)
+        kw = dict(kind="train", seq_len=128, global_batch=16,
+                  n_params=int(1e9), n_devices=256, model_shards=16,
+                  data_shards=16)
+        base = analytic_hbm_bytes_per_device(cfg, **kw)
+        zed = analytic_hbm_bytes_per_device(cfg, opt_shards=256, **kw)
+        fsdp = analytic_hbm_bytes_per_device(cfg, param_shards=256,
+                                             opt_shards=256, **kw)
+        assert zed < base and fsdp < zed

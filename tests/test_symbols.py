@@ -1,0 +1,92 @@
+"""Tests for dtype → symbol-stream extraction (incl. sub-byte eXmY emulation)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.symbols import (SCHEMES, bf16_planes_jnp, bf16_planes_np,
+                                exmy_dequantize, exmy_quantize, exmy_values,
+                                scheme_for_dtype)
+
+
+class TestBf16Planes:
+    def test_np_jnp_agree(self):
+        rng = np.random.default_rng(0)
+        x = rng.normal(size=4096).astype(jnp.bfloat16)
+        a = bf16_planes_np(x)
+        b = bf16_planes_jnp(jnp.asarray(x))
+        for p in ("lo", "hi"):
+            assert (a[p] == np.asarray(b[p])).all()
+
+    def test_planes_reconstruct(self):
+        rng = np.random.default_rng(1)
+        x = rng.normal(size=1000).astype(jnp.bfloat16)
+        pl = bf16_planes_np(x)
+        u16 = pl["lo"].astype(np.uint16) | (pl["hi"].astype(np.uint16) << 8)
+        assert (u16.view(jnp.bfloat16) == x).all()
+
+    def test_hi_plane_is_structured(self):
+        # Sign+exponent byte of Gaussian data concentrates: far below 8 bits.
+        from repro.core.entropy import shannon_entropy
+        rng = np.random.default_rng(2)
+        x = rng.normal(size=1 << 16).astype(jnp.bfloat16)
+        pl = bf16_planes_np(x)
+        h_hi = shannon_entropy(np.bincount(pl["hi"], minlength=256))
+        h_lo = shannon_entropy(np.bincount(pl["lo"], minlength=256))
+        assert h_hi < 6.0       # structured
+        assert h_lo > 7.5       # mantissa ~ uniform
+
+
+class TestExmy:
+    @pytest.mark.parametrize("e,m", [(2, 1), (2, 3), (3, 2), (4, 3)])
+    def test_code_space_size(self, e, m):
+        vals = exmy_values(e, m)
+        assert vals.shape[0] == 1 << (1 + e + m)
+
+    @pytest.mark.parametrize("e,m", [(2, 1), (2, 3), (3, 2)])
+    def test_representable_roundtrip_exact(self, e, m):
+        vals = np.unique(exmy_values(e, m))
+        codes = exmy_quantize(vals, e, m)
+        back = exmy_dequantize(codes, e, m)
+        assert np.allclose(back, vals)
+
+    @given(st.integers(0, 2**31 - 1))
+    @settings(max_examples=20, deadline=None)
+    def test_quantize_is_nearest(self, seed):
+        rng = np.random.default_rng(seed)
+        x = rng.normal(size=128)
+        codes = exmy_quantize(x, 2, 3)
+        got = exmy_dequantize(codes, 2, 3)
+        vals = exmy_values(2, 3)
+        lo, hi = vals.min(), vals.max()
+        xc = np.clip(x, lo, hi)
+        best = np.abs(xc[:, None] - vals[None, :]).min(axis=1)
+        assert np.allclose(np.abs(got - xc), best, atol=1e-12)
+
+    def test_e2m1_is_fp4(self):
+        vals = np.unique(np.abs(exmy_values(2, 1)))
+        # OCP MX FP4 (E2M1): 0, 0.5, 1, 1.5, 2, 3, 4, 6.
+        assert set(np.round(vals, 3)) == {0.0, 0.5, 1.0, 1.5, 2.0, 3.0,
+                                          4.0, 6.0}
+
+
+class TestSchemes:
+    def test_scheme_lookup(self):
+        assert scheme_for_dtype(jnp.bfloat16).name == "bf16"
+        assert scheme_for_dtype(jnp.float8_e4m3fn).name == "e4m3"
+
+    def test_all_schemes_produce_uint8_planes(self):
+        rng = np.random.default_rng(3)
+        x = rng.normal(size=512).astype(np.float32)
+        for name, sc in SCHEMES.items():
+            planes = sc.to_symbols(x)
+            assert set(planes) == set(sc.planes)
+            for p, sym in planes.items():
+                assert sym.dtype == np.uint8
+                assert sym.max() < sc.n_symbols
+
+    def test_fp8_symbols_match_cast(self):
+        x = np.linspace(-3, 3, 257).astype(np.float32)
+        sym = SCHEMES["e4m3"].to_symbols(x)["b0"]
+        expect = np.asarray(jnp.asarray(x, jnp.float8_e4m3fn)).view(np.uint8)
+        assert (sym == expect).all()

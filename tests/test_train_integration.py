@@ -1,0 +1,114 @@
+"""Integration: training loop convergence, compression lifecycle,
+grad-accum equivalence, checkpoint roundtrip."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.comm import CompressionSpec
+from repro.core.codebook import CodebookRegistry
+from repro.data import DataConfig, SyntheticDataset
+from repro.models import BlockGroup, ModelConfig, model_init
+from repro.optim import AdamWConfig, cosine_schedule
+from repro.train import make_train_step, train_state_init
+
+
+def _cfg(**kw):
+    base = dict(name="t", arch_type="dense", d_model=128, vocab_size=512,
+                blocks=(BlockGroup(("attn",), 2),), n_heads=4, n_kv_heads=2,
+                head_dim=32, d_ff=256, remat="block")
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+def _run(cfg, steps, step_fn, seed=0):
+    state = train_state_init(model_init(cfg, jax.random.PRNGKey(seed)))
+    ds = iter(SyntheticDataset(cfg, DataConfig(batch_size=8, seq_len=32,
+                                               seed=seed)))
+    losses, metrics = [], None
+    for _ in range(steps):
+        batch = {k: jnp.asarray(v) for k, v in next(ds).items()}
+        state, metrics = step_fn(state, batch)
+        losses.append(float(metrics["loss"]))
+    return state, losses, metrics
+
+
+class TestTraining:
+    def test_loss_decreases(self):
+        cfg = _cfg()
+        step = jax.jit(make_train_step(cfg, AdamWConfig(lr=3e-3),
+                                       cosine_schedule(3e-3, 2, 500)))
+        _, losses, _ = _run(cfg, 30, step)
+        assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.5
+
+    def test_grad_accum_equivalent(self):
+        # grad_accum=2 must match grad_accum=1 on the same global batch.
+        cfg = _cfg(dtype=jnp.float32)
+        s1 = make_train_step(cfg, AdamWConfig(lr=1e-3))
+        s2 = make_train_step(cfg, AdamWConfig(lr=1e-3), grad_accum=2)
+        params = model_init(cfg, jax.random.PRNGKey(1))
+        ds = iter(SyntheticDataset(cfg, DataConfig(batch_size=8, seq_len=32)))
+        batch = {k: jnp.asarray(v) for k, v in next(ds).items()}
+        st1, m1 = jax.jit(s1)(train_state_init(params), batch)
+        st2, m2 = jax.jit(s2)(train_state_init(params), batch)
+        assert float(m1["loss"]) == pytest.approx(float(m2["loss"]),
+                                                  rel=1e-5)
+        for a, b in zip(jax.tree.leaves(st1.params),
+                        jax.tree.leaves(st2.params)):
+            np.testing.assert_allclose(np.asarray(a, np.float32),
+                                       np.asarray(b, np.float32),
+                                       rtol=1e-4, atol=1e-5)
+
+    def test_compression_lifecycle(self):
+        """Paper §4: bootstrap books → observe grad PMFs → rebuild →
+        better compression."""
+        cfg = _cfg()
+        registry = CodebookRegistry()
+        # deliberately-bad bootstrap: uniform PMF (8 bits/symbol books)
+        registry.install(("grad", "bf16", "lo"), np.ones(256))
+        registry.install(("grad", "bf16", "hi"), np.ones(256))
+        spec = CompressionSpec.from_registry(registry, "grad", "bf16",
+                                             "ledger")
+        step = jax.jit(make_train_step(cfg, AdamWConfig(lr=1e-3),
+                                       comp_spec=spec))
+        state, _, m = _run(cfg, 3, step)
+        ratio_boot = float(m["grad_coded_bits"]) / float(m["grad_raw_bits"])
+        assert ratio_boot == pytest.approx(1.0, abs=1e-6)  # uniform book
+
+        for plane in ("lo", "hi"):
+            registry.observe(("grad", "bf16", plane),
+                             np.asarray(m[f"grad_hist_{plane}"]))
+        registry.rebuild()
+        spec2 = CompressionSpec.from_registry(registry, "grad", "bf16",
+                                              "ledger")
+        step2 = jax.jit(make_train_step(cfg, AdamWConfig(lr=1e-3),
+                                        comp_spec=spec2))
+        _, _, m2 = _run(cfg, 3, step2)
+        ratio_obs = float(m2["grad_coded_bits"]) / float(m2["grad_raw_bits"])
+        # Rebuilt books must strictly improve on the uniform bootstrap and
+        # actually compress (margin depends on the toy model's gradient
+        # entropy, so assert direction + a conservative bound).
+        assert ratio_obs < ratio_boot - 0.02
+        assert ratio_obs < 0.97, f"rebuilt books must compress: {ratio_obs}"
+
+    def test_histograms_count_every_grad_byte(self):
+        cfg = _cfg()
+        registry = CodebookRegistry()
+        registry.install(("grad", "bf16", "lo"), np.ones(256))
+        registry.install(("grad", "bf16", "hi"), np.ones(256))
+        spec = CompressionSpec.from_registry(registry, "grad", "bf16",
+                                             "ledger")
+        step = jax.jit(make_train_step(cfg, AdamWConfig(lr=1e-3),
+                                       comp_spec=spec))
+        state, _, m = _run(cfg, 1, step)
+        n_param = sum(l.size for l in jax.tree.leaves(state.params))
+        assert int(np.asarray(m["grad_hist_lo"]).sum()) == n_param
+        assert float(m["grad_raw_bits"]) == 16.0 * n_param
+
+    def test_aux_loss_flows_for_moe(self):
+        cfg = _cfg(blocks=(BlockGroup(("attn_moe",), 2),), n_experts=4,
+                   experts_per_token=2, moe_d_ff=64,
+                   router_aux_weight=0.01)
+        step = jax.jit(make_train_step(cfg, AdamWConfig(lr=1e-3)))
+        _, _, m = _run(cfg, 2, step)
+        assert float(m["aux"]) > 0

@@ -1,0 +1,92 @@
+"""Decoder comparison — the receive side of the paper's pipeline.
+
+The encoder's single-stage claim only pays off end-to-end if the
+receiver also stays on-device: a host decode re-introduces exactly the
+critical-path overhead the paper removes from the send side.  This
+benchmark times the three decode paths over the same Gemma-proxy
+activation bytes:
+
+  * monolithic lax.scan walk (`core.encoder.decode_jit`) — one
+    sequential pass over the whole stream, the endpoint-decode baseline;
+  * chunked scan (`decode_chunks_jit`) — the XLA fallback, parallel
+    over chunks via vmap;
+  * Pallas chunked kernel (`kernels.decode`) — grid over chunks, tables
+    resident in VMEM (interpret mode on CPU; the BlockSpecs compile to
+    Mosaic on TPU).
+
+All three are verified bit-exact against the encoded input before
+timing.  CPU timings are indicative; the structural claim — chunk-
+parallel decode with per-chunk headers already produced by the encode
+accumulator — is exact.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.codebook import build_codebook
+from repro.core.encoder import (DEFAULT_CHUNK, decode_chunks_jit, decode_jit,
+                                encode_chunked, encode_jit)
+from repro.core.symbols import bf16_planes_np
+from repro.kernels import ops
+
+from .common import emit, gemma_proxy, timed
+
+
+def run() -> None:
+    cfg, params, acts = gemma_proxy()
+    data = bf16_planes_np(acts[0][:131072 // acts[0].shape[-1] + 1])["hi"]
+    data = data[:65536]
+    n = data.shape[0]
+
+    # fixed codebook from "previous batch" (another layer's activations)
+    prev = bf16_planes_np(acts[1])["hi"]
+    book = build_codebook(np.bincount(prev, minlength=256))
+    t = book.tables
+
+    # encode both wire formats once
+    djnp = jnp.asarray(data)
+    words, n_bits = encode_jit(djnp, jnp.asarray(book.codes),
+                               jnp.asarray(book.lengths))
+    stream = encode_chunked(djnp, book)
+    counts = jnp.asarray(stream.chunk_counts())
+    targs = (jnp.asarray(t.first_code), jnp.asarray(t.base_index),
+             jnp.asarray(t.num_codes), jnp.asarray(t.sorted_symbols))
+
+    # correctness gate: every path must reproduce the input bit-exactly
+    mono = decode_jit(words, *targs, n, max_len=t.max_len)
+    chunked = decode_chunks_jit(stream.block_words, counts, *targs,
+                                chunk=stream.chunk, max_len=t.max_len)
+    kernel = ops.decode_chunks(stream.block_words, counts, book,
+                               chunk=stream.chunk)
+    for name, out in (("scan", mono),
+                      ("chunked_scan", np.asarray(chunked).reshape(-1)[:n]),
+                      ("pallas", np.asarray(kernel).reshape(-1)[:n])):
+        assert (np.asarray(out, np.uint8).reshape(-1)[:n] == data).all(), name
+
+    us_m, _ = timed(lambda: decode_jit(words, *targs, n, max_len=t.max_len),
+                    reps=3)
+    emit("decoder.monolithic_scan_us", us_m, f"n={n}")
+
+    us_c, _ = timed(lambda: decode_chunks_jit(
+        stream.block_words, counts, *targs, chunk=stream.chunk,
+        max_len=t.max_len), reps=3)
+    emit("decoder.chunked_scan_us", us_c,
+         f"chunks={stream.n_chunks}|chunk={stream.chunk}")
+
+    us_k, _ = timed(lambda: ops.decode_chunks(
+        stream.block_words, counts, book, chunk=stream.chunk), reps=3)
+    emit("decoder.pallas_chunked_us", us_k,
+         f"chunks={stream.n_chunks}|interpret={ops.INTERPRET}")
+
+    # wire accounting: chunked format overhead vs monolithic
+    emit("decoder.payload_bits", 0.0, str(stream.payload_bits()))
+    emit("decoder.monolithic_bits", 0.0, str(int(n_bits)))
+    emit("decoder.chunk_header_bits", 0.0, str(stream.header_bits()))
+    emit("decoder.symbols_per_chunk", 0.0, str(stream.chunk))
+
+    # throughput at the fastest verified path
+    best_us = min(us_m, us_c, us_k)
+    emit("decoder.best_throughput_mbps", 0.0,
+         f"{n / best_us:.2f}")  # uint8 symbols/us == MB/s

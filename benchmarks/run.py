@@ -16,9 +16,9 @@ import time
 
 
 def main() -> None:
-    from . import (codelen_ablation, collective_traffic, dtype_sweep,
-                   encoder_throughput, fig1_pmf, fig2_per_shard, fig3_kl,
-                   fig4_fixed_codebook, tensor_kinds)
+    from . import (codelen_ablation, collective_traffic, decoder_throughput,
+                   dtype_sweep, encoder_throughput, fig1_pmf, fig2_per_shard,
+                   fig3_kl, fig4_fixed_codebook, tensor_kinds)
 
     print("name,us_per_call,derived")
     suites = [
@@ -30,6 +30,7 @@ def main() -> None:
         ("tensor_kinds", tensor_kinds.run),
         ("codelen_ablation", codelen_ablation.run),
         ("encoder", encoder_throughput.run),
+        ("decoder", decoder_throughput.run),
         ("traffic", collective_traffic.run),
     ]
     only = sys.argv[1] if len(sys.argv) > 1 else None

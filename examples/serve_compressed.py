@@ -47,10 +47,18 @@ def main() -> None:
 
     x = np.asarray(jax.random.normal(jax.random.PRNGKey(3), (8, 64, 256)),
                    dtype=jnp.bfloat16)
-    mesh = jax.make_mesh((8,), ("tp",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    try:
+        mesh = jax.make_mesh((8,), ("tp",),
+                             axis_types=(jax.sharding.AxisType.Auto,))
+        smap = jax.shard_map
+    except AttributeError:                      # jax 0.4.x compat
+        from jax.experimental.shard_map import shard_map as _sm
+        mesh = jax.make_mesh((8,), ("tp",))
 
-    @jax.shard_map(mesh=mesh, in_specs=P("tp"), out_specs=(P("tp"), P()))
+        def smap(**kw):
+            return lambda f: _sm(f, **kw)
+
+    @smap(mesh=mesh, in_specs=P("tp"), out_specs=(P("tp"), P()))
     def gather(xs):
         y, stats = all_gather_bitexact(xs, "tp", books, "bf16")
         return y[None], {k: jax.lax.psum(v, "tp") for k, v in stats.items()}

@@ -1,8 +1,9 @@
 """Compressed collective-communication layer (the paper's deployment
 surface: fixed-codebook Huffman compression of collective payloads)."""
-from .collectives import (all_gather, all_gather_bitexact, all_reduce,
+from .collectives import (all_gather, all_gather_bitexact,
+                          all_gather_bitexact_chunked, all_reduce,
                           all_to_all, merge_stats, ppermute, psum_bitexact,
-                          reduce_scatter, zero_stats)
+                          psum_bitexact_chunked, reduce_scatter, zero_stats)
 from .compression import CompressionSpec, histogram256_xla, payload_stats
 from .ledger import CollectiveLedger, LedgerEntry
 

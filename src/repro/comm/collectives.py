@@ -16,6 +16,18 @@ In bitexact mode the reduction for ``psum`` happens decode-then-add at
 the endpoint.  A hardware ring implementation re-encodes at every hop
 (decode → add → encode); endpoint decode-add is numerically identical
 because the codec is lossless, so tests of losslessness and size hold.
+
+Two bitexact wire formats:
+  * monolithic — one stream per plane per device; the receiver decodes
+    the whole stream at the end (endpoint decode on the critical path).
+  * chunked/streaming — each plane's stream is cut into fixed-symbol
+    chunks with per-chunk bit-count headers (the layout the pack
+    kernel's accumulator already emits).  Each chunk is an independent
+    collective + decode, so chunk N's decode overlaps chunk N+1's
+    transfer and the decode itself runs chunk-parallel on the Pallas
+    decode kernel.  Results and wire-bit ledgers are identical to the
+    monolithic path (the chunk cuts are word-aligned repacks of the
+    same codewords; headers are reported separately).
 """
 from __future__ import annotations
 
@@ -26,13 +38,17 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.codebook import Codebook
-from ..core.encoder import decode_jit, encode_jit, packed_words_capacity
+from ..core.encoder import (DEFAULT_CHUNK, decode_chunks_jit, decode_jit,
+                            encode_chunked_jit, encode_jit,
+                            packed_words_capacity)
 from ..core.symbols import SCHEMES
 from .compression import CompressionSpec, payload_stats
 
 __all__ = [
     "all_reduce", "all_gather", "reduce_scatter", "all_to_all", "ppermute",
-    "all_gather_bitexact", "psum_bitexact", "merge_stats", "zero_stats",
+    "all_gather_bitexact", "psum_bitexact",
+    "all_gather_bitexact_chunked", "psum_bitexact_chunked",
+    "merge_stats", "zero_stats",
 ]
 
 _RING_FACTORS = {
@@ -42,6 +58,14 @@ _RING_FACTORS = {
     "all_to_all": lambda n: (n - 1) / n,
     "ppermute": lambda n: 1.0,
 }
+
+
+def _axis_size(axis_name: str) -> int:
+    """Static mesh-axis size inside shard_map (jax-version compatible)."""
+    try:
+        return jax.lax.axis_size(axis_name)
+    except AttributeError:           # jax 0.4.x: axis_frame *is* the size
+        return int(jax.core.axis_frame(axis_name))
 
 
 def zero_stats() -> Dict[str, jnp.ndarray]:
@@ -62,7 +86,7 @@ def _wire_stats(op: str, x: jnp.ndarray, axis_name: str,
                 spec: CompressionSpec) -> Dict[str, jnp.ndarray]:
     if not spec.enabled:
         return zero_stats()
-    n = jax.lax.axis_size(axis_name)
+    n = _axis_size(axis_name)
     factor = jnp.float32(_RING_FACTORS[op](n))
     p = payload_stats(x, spec)
     return {"raw_wire_bits": factor * p["raw_bits"],
@@ -143,7 +167,7 @@ def all_gather_bitexact(x, axis_name: str, books: Dict[str, Codebook],
     Returns (gathered x, stats) where coded bits are the *actual* summed
     stream sizes (not a ledger estimate).
     """
-    n = jax.lax.axis_size(axis_name)
+    n = _axis_size(axis_name)
     enc = _encode_planes(x, books, scheme_name)
     out_planes = {}
     coded = jnp.zeros((), jnp.float32)
@@ -171,6 +195,130 @@ def psum_bitexact(x, axis_name: str, books: Dict[str, Codebook],
     lossless result — see module docstring.)
     """
     g, stats = all_gather_bitexact(x, axis_name, books, scheme_name)
-    n = jax.lax.axis_size(axis_name)
+    n = _axis_size(axis_name)
     y = g.reshape((n,) + x.shape).sum(axis=0).astype(x.dtype)
+    return y, stats
+
+
+# ----------------------------------------------- streaming chunked bitexact
+def _encode_planes_chunked(x, books: Dict[str, Codebook], scheme_name: str,
+                           chunk: int):
+    """Per plane: (block_words (NB, cap), block_bits (NB,), n_symbols)."""
+    scheme = SCHEMES[scheme_name]
+    planes = scheme.to_symbols_jnp(x)
+    enc = {}
+    for plane, sym in planes.items():
+        b = books[plane]
+        words, bits = encode_chunked_jit(sym, jnp.asarray(b.codes),
+                                         jnp.asarray(b.lengths), chunk=chunk,
+                                         max_len=b.max_len)
+        enc[plane] = (words, bits, sym.shape[0])
+    return enc
+
+
+def _decode_gathered_chunk(gw, count: int, book: Codebook, chunk: int,
+                           backend: str):
+    """Decode one chunk gathered from every peer: (n, cap) → (n, chunk).
+
+    To the chunked decoder a peer is just another chunk, so all peers
+    decode in one launch (one Pallas grid / one vmapped scan).
+    """
+    t = book.tables
+    counts = jnp.full((gw.shape[0],), count, jnp.int32)
+    args = (gw, counts, jnp.asarray(t.first_code), jnp.asarray(t.base_index),
+            jnp.asarray(t.num_codes), jnp.asarray(t.sorted_symbols))
+    if backend == "pallas":
+        from ..kernels.decode import decode_chunks_pallas
+        from ..kernels.ops import INTERPRET
+        return decode_chunks_pallas(*args, chunk=chunk, max_len=t.max_len,
+                                    interpret=INTERPRET)
+    if backend == "scan":
+        return decode_chunks_jit(*args, chunk=chunk, max_len=t.max_len)
+    raise ValueError(f"unknown decode backend {backend!r}")
+
+
+def all_gather_bitexact_chunked(x, axis_name: str, books: Dict[str, Codebook],
+                                scheme_name: str = "bf16", *,
+                                chunk: int = DEFAULT_CHUNK,
+                                decode_backend: str = "pallas"):
+    """Streaming all-gather: per-chunk collectives + on-device decode.
+
+    Each chunk of each plane rides its own all_gather, so XLA is free to
+    overlap chunk N's decode with chunk N+1's transfer — no monolithic
+    endpoint decode.  Bit-exact with ``all_gather_bitexact``: identical
+    gathered tensor and identical raw/coded wire-bit stats (the chunk
+    cuts repack the same codewords; the per-chunk 32-bit headers are
+    reported separately as ``payload_header_bits``).
+    """
+    n = _axis_size(axis_name)
+    enc = _encode_planes_chunked(x, books, scheme_name, chunk)
+    out_planes = {}
+    coded = jnp.zeros((), jnp.float32)
+    header = 0.0
+    for plane, (words, bits, n_sym) in enc.items():
+        nb = words.shape[0]
+        # One (n, NB) gather covers every chunk's header; the per-chunk
+        # wire only carries the payload gathers below.
+        gb = jax.lax.all_gather(bits, axis_name)
+        coded = coded + gb.astype(jnp.float32).sum()
+        segs = []
+        for c in range(nb):
+            count = min(chunk, n_sym - c * chunk)
+            gw = jax.lax.all_gather(words[c], axis_name)       # (n, cap)
+            dec = _decode_gathered_chunk(gw, count, books[plane], chunk,
+                                         decode_backend)
+            segs.append(dec[:, :count])
+        out_planes[plane] = jnp.concatenate(segs, axis=1).reshape(-1)
+        header += 32.0 * nb * n
+    scheme = SCHEMES[scheme_name]
+    gathered_shape = (n * x.shape[0],) + x.shape[1:]
+    y = _reassemble(out_planes, scheme_name, gathered_shape, x.dtype)
+    raw = jnp.float32(x.size * scheme.total_symbol_bits()) * n
+    stats = {"raw_wire_bits": raw * (n - 1) / n,
+             "coded_wire_bits": coded * (n - 1) / n,
+             "payload_raw_bits": raw, "payload_coded_bits": coded,
+             "payload_header_bits": jnp.float32(header)}
+    return y, stats
+
+
+def psum_bitexact_chunked(x, axis_name: str, books: Dict[str, Codebook],
+                          scheme_name: str = "bf16", *,
+                          chunk: int = DEFAULT_CHUNK,
+                          decode_backend: str = "pallas"):
+    """Streaming all-reduce: per-chunk gather → decode → add.
+
+    The reduction is chunk-local: chunk c of every plane is gathered,
+    decoded (Pallas kernel by default), reassembled to values and summed
+    over peers while later chunks are still in flight.  Numerically
+    identical to ``psum_bitexact`` (same codewords, same per-peer sum
+    order) with the same wire-bit stats.
+    """
+    n = _axis_size(axis_name)
+    enc = _encode_planes_chunked(x, books, scheme_name, chunk)
+    n_sym = next(iter(enc.values()))[2]
+    nb = next(iter(enc.values()))[0].shape[0]
+    coded = jnp.zeros((), jnp.float32)
+    for plane, (_, bits, _) in enc.items():   # headers: one gather per plane
+        gb = jax.lax.all_gather(bits, axis_name)
+        coded = coded + gb.astype(jnp.float32).sum()
+    segs = []
+    for c in range(nb):
+        count = min(chunk, n_sym - c * chunk)
+        dec_planes = {}
+        for plane, (words, _, _) in enc.items():
+            gw = jax.lax.all_gather(words[c], axis_name)
+            dec_planes[plane] = _decode_gathered_chunk(
+                gw, count, books[plane], chunk, decode_backend)[:, :count]
+        seg = _reassemble(dec_planes, scheme_name, (n, count), x.dtype)
+        segs.append(seg.sum(axis=0))                    # decode-then-add
+    y = jnp.concatenate(segs).reshape(x.shape).astype(x.dtype)
+    scheme = SCHEMES[scheme_name]
+    raw = jnp.float32(x.size * scheme.total_symbol_bits()) * n
+    header = 32.0 * nb * len(enc) * n
+    # Same factors as psum_bitexact (which delegates to the gather path),
+    # so the chunked and monolithic ledgers are directly comparable.
+    stats = {"raw_wire_bits": raw * (n - 1) / n,
+             "coded_wire_bits": coded * (n - 1) / n,
+             "payload_raw_bits": raw, "payload_coded_bits": coded,
+             "payload_header_bits": jnp.float32(header)}
     return y, stats

@@ -34,10 +34,45 @@ __all__ = [
     "encode_jit", "decode_jit", "encode_np", "decode_np",
     "three_stage_encode", "single_stage_encode",
     "encoded_size_bits", "packed_words_capacity", "EncodeResult",
+    "ChunkedStream", "DEFAULT_CHUNK", "chunk_capacity_words",
+    "chunk_counts_for", "concat_chunks",
+    "encode_chunked_jit", "decode_chunks_jit",
+    "encode_chunked", "decode_chunked", "decode_dispatch",
 ]
 
 # Per-call symbol cap so bit offsets fit comfortably in uint32 cumsums.
 _MAX_SYMBOLS = 1 << 26
+
+# Default symbols per chunk for the streaming/chunked wire format — keep
+# in sync with kernels.bitpack.BLOCK so kernel block streams interoperate.
+DEFAULT_CHUNK = 2048
+
+
+def chunk_capacity_words(chunk: int, max_len: int = MAX_CODE_LEN) -> int:
+    """Worst-case uint32 words per chunk (+1 pad word for window reads)."""
+    return chunk * max_len // 32 + 1
+
+
+def chunk_counts_for(n_symbols: int, chunk: int) -> np.ndarray:
+    """Symbols per chunk for an n-symbol stream: all full except the tail."""
+    nb = max((n_symbols + chunk - 1) // chunk, 1)
+    counts = np.full(nb, chunk, dtype=np.int32)
+    counts[-1] = n_symbols - (nb - 1) * chunk
+    return counts
+
+
+def concat_chunks(blocks: jnp.ndarray, chunk_counts: np.ndarray) -> jnp.ndarray:
+    """(NB, chunk) padded symbol blocks → flat (Σcounts,) uint8.
+
+    Only the tail chunk may be partial (the chunked-format invariant),
+    so this is a reshape plus at most one tail slice.
+    """
+    counts = np.asarray(chunk_counts)
+    if int(counts[-1]) == blocks.shape[1]:
+        return blocks.reshape(-1).astype(jnp.uint8)
+    head = blocks[:-1].reshape(-1)
+    tail = blocks[-1, : int(counts[-1])]
+    return jnp.concatenate([head, tail]).astype(jnp.uint8)
 
 
 def packed_words_capacity(n_symbols: int, max_len: int = MAX_CODE_LEN) -> int:
@@ -156,6 +191,194 @@ def decode_with_book(words: jnp.ndarray, book: Codebook,
     return decode_jit(words, jnp.asarray(t.first_code), jnp.asarray(t.base_index),
                       jnp.asarray(t.num_codes), jnp.asarray(t.sorted_symbols),
                       n_symbols, max_len=t.max_len)
+
+
+# --------------------------------------------------------------------------
+# Chunked streaming format: fixed-symbol chunks, each independently packed
+# and word-aligned, with a per-chunk bit-count header.  Chunks are
+# independent decode entry points, which is what lets (a) the Pallas
+# decoder parallelize over its grid and (b) streaming collectives overlap
+# chunk N's decode with chunk N+1's transfer.
+# --------------------------------------------------------------------------
+@dataclass
+class ChunkedStream:
+    """A Huffman bitstream cut into independently-decodable chunks.
+
+    block_words[b] holds chunk b's MSB-first packed words (word-aligned
+    start, slack zeroed); block_bits[b] is its true payload size — the
+    per-chunk header a streaming receiver reads before the chunk body.
+    """
+    block_words: jnp.ndarray   # (NB, cap) uint32
+    block_bits: jnp.ndarray    # (NB,) int32
+    n_symbols: int
+    chunk: int
+    book_id: int = -1
+
+    @property
+    def n_chunks(self) -> int:
+        return self.block_words.shape[0]
+
+    def chunk_counts(self) -> np.ndarray:
+        """Symbols per chunk (static: derived from n_symbols, chunk)."""
+        return chunk_counts_for(self.n_symbols, self.chunk)
+
+    def payload_bits(self) -> int:
+        return int(jnp.sum(self.block_bits))
+
+    def header_bits(self) -> int:
+        """Per-chunk bit-count headers (32-bit each) the wire carries."""
+        return 32 * self.n_chunks
+
+
+@partial(jax.jit, static_argnames=("chunk", "max_len"))
+def encode_chunked_jit(symbols: jnp.ndarray, codes: jnp.ndarray,
+                       lengths: jnp.ndarray, chunk: int = DEFAULT_CHUNK,
+                       max_len: int = MAX_CODE_LEN
+                       ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Pack ``symbols`` into per-chunk word-aligned bitstreams.
+
+    Same bitfield math as ``encode_jit`` applied per chunk row: pad
+    positions get length 0 (and code 0) so they contribute no bits.
+    Pure jnp — safe under jit/shard_map; bit-identical to the Pallas
+    ``pack_blocks_pallas`` kernel for chunk == bitpack.BLOCK.
+
+    Returns (block_words (NB, cap) uint32, block_bits (NB,) int32).
+    """
+    n = symbols.shape[0]
+    if n > _MAX_SYMBOLS:
+        raise ValueError(f"chunk too large: {n} > {_MAX_SYMBOLS}")
+    nb = max((n + chunk - 1) // chunk, 1)
+    pad = nb * chunk - n
+    sym = jnp.pad(symbols.astype(jnp.int32), (0, pad)).reshape(nb, chunk)
+    valid = (jnp.arange(chunk, dtype=jnp.int32)[None, :]
+             + jnp.arange(nb, dtype=jnp.int32)[:, None] * chunk) < n
+    v = codes[sym].astype(jnp.uint32) * valid.astype(jnp.uint32)
+    l = lengths[sym].astype(jnp.uint32) * valid.astype(jnp.uint32)
+
+    ends = jnp.cumsum(l, axis=1, dtype=jnp.uint32)
+    offs = ends - l
+    bits = ends[:, -1].astype(jnp.int32)
+
+    pos = offs & jnp.uint32(31)
+    idx = (offs >> jnp.uint32(5)).astype(jnp.int32)
+    sh = 32 - pos.astype(jnp.int32) - l.astype(jnp.int32)
+    hi = jnp.where(sh >= 0, v << jnp.clip(sh, 0, 31).astype(jnp.uint32),
+                   v >> jnp.clip(-sh, 0, 31).astype(jnp.uint32))
+    lo = jnp.where(sh < 0, v << jnp.clip(32 + sh, 0, 31).astype(jnp.uint32),
+                   jnp.uint32(0))
+
+    cap = chunk_capacity_words(chunk, max_len)
+    flat_idx = (jnp.arange(nb, dtype=jnp.int32)[:, None] * cap + idx).reshape(-1)
+    words = jnp.zeros((nb * cap,), jnp.uint32)
+    words = words.at[flat_idx].add(hi.reshape(-1), mode="drop")
+    words = words.at[flat_idx + 1].add(lo.reshape(-1), mode="drop")
+    return words.reshape(nb, cap), bits
+
+
+@partial(jax.jit, static_argnames=("chunk", "max_len"))
+def decode_chunks_jit(block_words: jnp.ndarray, chunk_counts: jnp.ndarray,
+                      first_code: jnp.ndarray, base_index: jnp.ndarray,
+                      num_codes: jnp.ndarray, sorted_symbols: jnp.ndarray,
+                      chunk: int = DEFAULT_CHUNK,
+                      max_len: int = MAX_CODE_LEN) -> jnp.ndarray:
+    """Scan-based chunked decode: vmap of the canonical walk over chunks.
+
+    The XLA fallback for (and the semantics oracle of) the Pallas decode
+    kernel.  block_words (NB, cap) uint32, chunk_counts (NB,) int32 →
+    (NB, chunk) int32 symbols, zero-filled past each chunk's count.
+    """
+    fc = first_code.astype(jnp.int32)
+    bi = base_index.astype(jnp.int32)
+    nc = num_codes.astype(jnp.int32)
+    ss = sorted_symbols.astype(jnp.int32)
+    ls = jnp.arange(1, max_len + 1, dtype=jnp.int32)
+    cap = block_words.shape[1]
+
+    def one_chunk(words, count):
+        def step(bit_pos, k):
+            widx = jnp.minimum((bit_pos >> jnp.uint32(5)).astype(jnp.int32),
+                               cap - 2)
+            pin = bit_pos & jnp.uint32(31)
+            w0 = words[widx]
+            w1 = words[widx + 1]
+            hi = w0 << pin
+            lo = jnp.where(pin == 0, jnp.uint32(0),
+                           w1 >> jnp.clip(32 - pin.astype(jnp.int32), 0, 31
+                                          ).astype(jnp.uint32))
+            window = ((hi | lo) >> jnp.uint32(32 - max_len)).astype(jnp.int32)
+            cand = window >> (max_len - ls)
+            off = cand - fc[ls]
+            valid = (off >= 0) & (off < nc[ls])
+            li = jnp.argmax(valid)
+            l = ls[li]
+            sym = ss[jnp.clip(bi[l] + off[li], 0, ss.shape[0] - 1)]
+            live = k < count
+            adv = jnp.where(live, l, 0).astype(jnp.uint32)
+            return bit_pos + adv, jnp.where(live, sym, 0)
+
+        cursor0 = words[0] & jnp.uint32(0)
+        _, syms = jax.lax.scan(step, cursor0,
+                               jnp.arange(chunk, dtype=jnp.int32))
+        return syms
+
+    return jax.vmap(one_chunk)(block_words.astype(jnp.uint32),
+                               chunk_counts.astype(jnp.int32))
+
+
+def encode_chunked(symbols: jnp.ndarray, book: Codebook, *,
+                   chunk: int = DEFAULT_CHUNK) -> ChunkedStream:
+    """Single-stage encode into the chunked streaming wire format."""
+    sym = jnp.asarray(symbols, dtype=jnp.uint8).reshape(-1)
+    words, bits = encode_chunked_jit(sym, jnp.asarray(book.codes),
+                                     jnp.asarray(book.lengths), chunk=chunk,
+                                     max_len=book.max_len)
+    return ChunkedStream(block_words=words, block_bits=bits,
+                         n_symbols=int(sym.shape[0]), chunk=chunk,
+                         book_id=book.book_id)
+
+
+def decode_chunked(stream: ChunkedStream, book: Codebook, *,
+                   backend: str = "auto") -> jnp.ndarray:
+    """Decode a ChunkedStream back to its uint8 symbols.
+
+    backend: "pallas" — the device decode kernel (grid over chunks);
+             "scan"   — the XLA lax.scan fallback;
+             "auto"   — pallas (interpret-mode on CPU, Mosaic on TPU).
+    """
+    t = book.tables
+    counts = jnp.asarray(stream.chunk_counts())
+    if backend in ("auto", "pallas"):
+        from ..kernels.decode import decode_chunks_pallas
+        from ..kernels.ops import INTERPRET
+        out = decode_chunks_pallas(
+            stream.block_words, counts, jnp.asarray(t.first_code),
+            jnp.asarray(t.base_index), jnp.asarray(t.num_codes),
+            jnp.asarray(t.sorted_symbols), chunk=stream.chunk,
+            max_len=t.max_len, interpret=INTERPRET)
+    elif backend == "scan":
+        out = decode_chunks_jit(
+            stream.block_words, counts, jnp.asarray(t.first_code),
+            jnp.asarray(t.base_index), jnp.asarray(t.num_codes),
+            jnp.asarray(t.sorted_symbols), chunk=stream.chunk,
+            max_len=t.max_len)
+    else:
+        raise ValueError(f"unknown decode backend {backend!r}")
+    return concat_chunks(out, stream.chunk_counts())
+
+
+def decode_dispatch(stream, book: Codebook, n_symbols: int = None, *,
+                    backend: str = "auto") -> jnp.ndarray:
+    """Route a stream to the right decoder.
+
+    ChunkedStream → chunked device decode (Pallas kernel / scan fallback);
+    monolithic word buffer → the canonical ``decode_jit`` scan walk
+    (a monolithic stream has no chunk entry points to parallelize over).
+    """
+    if isinstance(stream, ChunkedStream):
+        return decode_chunked(stream, book, backend=backend)
+    if n_symbols is None:
+        raise ValueError("monolithic decode needs n_symbols")
+    return decode_with_book(stream, book, n_symbols)
 
 
 # --------------------------------------------------------------------------

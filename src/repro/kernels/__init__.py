@@ -4,10 +4,13 @@ histogram.py — 256-bin VMEM histogram (PMF observation / ledger probe)
 encode.py    — codebook LUT as one-hot × MXU matmul (the single stage)
 bitpack.py   — block-local bit-packing (in-VMEM prefix sum + bitfield
                scatter); ops.merge_block_streams stitches the blocks
+decode.py    — chunked canonical-prefix decode (grid over chunks; the
+               receive side of the streaming wire format)
 ops.py       — jit'd public wrappers (interpret-mode switch for CPU)
 ref.py       — pure-jnp oracles used by the allclose test sweeps
 """
 from . import ops, ref
 from .bitpack import pack_blocks_pallas
+from .decode import decode_chunks_pallas
 from .encode import encode_lookup_pallas
 from .histogram import histogram256_pallas

@@ -1,0 +1,133 @@
+"""Pallas TPU kernel: chunked canonical Huffman decode.
+
+Closes the on-device loop: encode (LUT@MXU) → pack (bitpack) → wire →
+**decode (this kernel)**.  Variable-length decode is bit-serial *within*
+a stream, so — exactly like the pack side — we cut the stream into
+fixed-symbol chunks, each independently packed and word-aligned with its
+own bit-count header.  Chunks are independent entry points, so the grid
+decodes them in parallel (and a streaming collective can overlap chunk
+N's decode with chunk N+1's transfer).
+
+Within a chunk the kernel walks the canonical-prefix tables, which stay
+resident in VMEM the whole time (codes are length-limited to
+``MAX_CODE_LEN = 16`` bits, so first_code/base_index/num_codes are 17
+int32 entries each and the symbol table is ≤256 entries — hundreds of
+bytes total).  Per symbol: read a 16-bit window at the cursor, evaluate
+the canonical-prefix subtraction ``window >> (16-l) - first_code[l]``
+for all 16 candidate lengths at once (one VPU op per table vector), pick
+the unique valid length, emit ``sorted_symbols[base_index[l] + offset]``
+and advance the cursor.  The per-chunk symbol count rides in as a
+scalar so partial tail chunks mask their dead iterations.
+
+Bit-exact contract: `ref.decode_chunks_ref` (the jnp scan oracle) and,
+transitively, `core.encoder.decode_np`.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..core.encoder import DEFAULT_CHUNK as CHUNK, chunk_capacity_words
+from ..core.huffman import MAX_CODE_LEN
+
+
+def _decode_kernel(words_ref, count_ref, fc_ref, bi_ref, nc_ref, ss_ref,
+                   out_ref, *, chunk: int, max_len: int, cap: int):
+    """Decode one chunk's bitstream into its symbol block.
+
+    words_ref: (1, cap) uint32 — the chunk's MSB-first packed words
+    count_ref: (1, 1) int32 — symbols actually present in this chunk
+    fc/bi/nc_ref: (1, max_len+1) int32 — canonical decode tables
+    ss_ref:    (1, 256) int32 — symbols sorted by (length, value), padded
+    out_ref:   (1, chunk) int32 — decoded symbols (0 past count)
+    """
+    words = words_ref[...].reshape(-1)
+    n_sym = count_ref[0, 0]
+    fc = fc_ref[...].reshape(-1)
+    bi = bi_ref[...].reshape(-1)
+    nc = nc_ref[...].reshape(-1)
+    ss = ss_ref[...].reshape(-1)
+
+    ls = jax.lax.broadcasted_iota(jnp.int32, (max_len,), 0) + 1   # (L,) 1..L
+    fcl = fc[ls]
+    ncl = nc[ls]
+
+    def step(k, carry):
+        bit_pos, out = carry
+        widx = jnp.minimum((bit_pos >> jnp.uint32(5)).astype(jnp.int32),
+                           cap - 2)
+        pin = bit_pos & jnp.uint32(31)
+        w0 = words[widx]
+        w1 = words[widx + 1]
+        hi = w0 << pin
+        lo = jnp.where(pin == 0, jnp.uint32(0),
+                       w1 >> jnp.clip(32 - pin.astype(jnp.int32), 0, 31
+                                      ).astype(jnp.uint32))
+        window = ((hi | lo) >> jnp.uint32(32 - max_len)).astype(jnp.int32)
+        cand = window >> (max_len - ls)                      # (L,) prefixes
+        off = cand - fcl                                     # canonical subtract
+        valid = (off >= 0) & (off < ncl)
+        li = jnp.argmax(valid)                               # smallest valid l
+        l = ls[li]
+        sym = ss[jnp.clip(bi[l] + off[li], 0, ss.shape[0] - 1)]
+        live = k < n_sym
+        out = out.at[k].set(jnp.where(live, sym, 0))
+        adv = jnp.where(live, l, 0).astype(jnp.uint32)
+        return bit_pos + adv, out
+
+    # Cursor derives from `words` (0-valued) so its varying-axes type
+    # matches the body under shard_map (same trick as core decode_jit).
+    cursor0 = words[0] & jnp.uint32(0)
+    _, out = jax.lax.fori_loop(
+        0, chunk, step, (cursor0, jnp.zeros((chunk,), jnp.int32)))
+    out_ref[...] = out[None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "max_len", "interpret"))
+def decode_chunks_pallas(block_words: jnp.ndarray, chunk_counts: jnp.ndarray,
+                         first_code: jnp.ndarray, base_index: jnp.ndarray,
+                         num_codes: jnp.ndarray, sorted_symbols: jnp.ndarray,
+                         *, chunk: int = CHUNK, max_len: int = MAX_CODE_LEN,
+                         interpret: bool = True) -> jnp.ndarray:
+    """Decode NB independent chunk bitstreams in one grid launch.
+
+    block_words:  (NB, cap) uint32 — per-chunk packed streams
+                  (cap = chunk_capacity_words(chunk, max_len))
+    chunk_counts: (NB,) int32 — symbols per chunk (≤ chunk; tail may be
+                  short).  Traced, so one jit serves every tail size.
+    tables:       canonical decode tables (see huffman.CanonicalTables).
+    Returns (NB, chunk) int32 symbols, zero-filled past each count.
+    """
+    nb, cap = block_words.shape
+    if cap != chunk_capacity_words(chunk, max_len):
+        raise ValueError(f"cap {cap} != capacity for chunk={chunk}")
+    counts = chunk_counts.reshape(nb, 1).astype(jnp.int32)
+    tlen = max_len + 1
+    fc = first_code.reshape(1, tlen).astype(jnp.int32)
+    bi = base_index.reshape(1, tlen).astype(jnp.int32)
+    nc = num_codes.reshape(1, tlen).astype(jnp.int32)
+    ss = jnp.zeros((1, 256), jnp.int32).at[0, :sorted_symbols.shape[0]].set(
+        sorted_symbols.reshape(-1).astype(jnp.int32))
+
+    kernel = functools.partial(_decode_kernel, chunk=chunk, max_len=max_len,
+                               cap=cap)
+    out = pl.pallas_call(
+        kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((1, cap), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+            pl.BlockSpec((1, tlen), lambda i: (0, 0)),
+            pl.BlockSpec((1, tlen), lambda i: (0, 0)),
+            pl.BlockSpec((1, tlen), lambda i: (0, 0)),
+            pl.BlockSpec((1, 256), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb, chunk), jnp.int32),
+        interpret=interpret,
+    )(block_words.astype(jnp.uint32), counts, fc, bi, nc, ss)
+    return out

@@ -112,3 +112,38 @@ def pack_with_book(symbols, book):
     codes, lens, _ = encode_lookup(symbols, jnp.asarray(book.code_lut()))
     words, bits = pack_blocks_pallas(codes, lens, interpret=INTERPRET)
     return merge_block_streams(words, bits)
+
+
+def decode_chunks(block_words, chunk_counts, book: Codebook, *,
+                  chunk: int = 2048):
+    """Chunked canonical decode via the Pallas kernel (interpret switch).
+
+    block_words (NB, cap) uint32, chunk_counts (NB,) int32 → (NB, chunk)
+    int32 symbols, zero past each count.  Inverse of pack_blocks_pallas /
+    encode_chunked_jit chunk streams under the same codebook.
+    """
+    from .decode import decode_chunks_pallas
+
+    t = book.tables
+    return decode_chunks_pallas(
+        jnp.asarray(block_words), jnp.asarray(chunk_counts),
+        jnp.asarray(t.first_code), jnp.asarray(t.base_index),
+        jnp.asarray(t.num_codes), jnp.asarray(t.sorted_symbols),
+        chunk=chunk, max_len=t.max_len, interpret=INTERPRET)
+
+
+def decode_with_book_kernel(symbols_stream, book: Codebook, n_symbols: int, *,
+                            chunk: int = 2048):
+    """Decode a kernel-path chunked stream back to (n_symbols,) uint8.
+
+    symbols_stream is the (block_words, block_bits) pair produced by
+    pack_blocks_pallas (block_bits is unused for decoding — the walk is
+    symbol-counted — but belongs to the wire format as the per-chunk
+    header).
+    """
+    from ..core.encoder import chunk_counts_for, concat_chunks
+
+    block_words, _block_bits = symbols_stream
+    counts = chunk_counts_for(n_symbols, chunk)
+    out = decode_chunks(block_words, counts, book, chunk=chunk)
+    return concat_chunks(out, counts)

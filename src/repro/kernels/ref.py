@@ -24,3 +24,19 @@ def encode_lookup_ref(symbols: jnp.ndarray, lut: jnp.ndarray
     codes = lut[:, 0].astype(jnp.uint32)[sym]
     lens = lut[:, 1].astype(jnp.int32)[sym]
     return codes, lens, lens.sum()
+
+
+def decode_chunks_ref(block_words: jnp.ndarray, chunk_counts: jnp.ndarray,
+                      first_code: jnp.ndarray, base_index: jnp.ndarray,
+                      num_codes: jnp.ndarray, sorted_symbols: jnp.ndarray,
+                      chunk: int, max_len: int = 16) -> jnp.ndarray:
+    """Chunked canonical-decode oracle: the vmapped lax.scan walk.
+
+    Delegates to ``core.encoder.decode_chunks_jit`` — which is itself
+    property-tested against the pure-Python ``decode_np`` — so the Pallas
+    decode kernel has an independent, bit-exact contract to meet.
+    """
+    from ..core.encoder import decode_chunks_jit
+    return decode_chunks_jit(block_words, chunk_counts, first_code,
+                             base_index, num_codes, sorted_symbols,
+                             chunk=chunk, max_len=max_len)

@@ -44,6 +44,15 @@ from ..train.step import make_train_step, train_state_init
 from .mesh import TPU_V5E, axes_for, make_production_mesh
 
 
+def _mesh_context(mesh):
+    """Ambient-mesh context (jax-version compatible): jax.set_mesh on
+    newer jax; on 0.4.x the Mesh object is itself the context manager."""
+    try:
+        return jax.set_mesh(mesh)
+    except AttributeError:
+        return mesh
+
+
 def _shard(mesh, tree):
     return jax.tree.map(lambda s: NamedSharding(mesh, s), tree,
                         is_leaf=lambda x: isinstance(x, P))
@@ -122,7 +131,7 @@ def lower_combo(arch_id: str, shape_name: str, *, multi_pod: bool = False,
                                  is_leaf=lambda x: isinstance(x, P))
     scalar_sh = NamedSharding(mesh, P())
 
-    with jax.set_mesh(mesh):
+    with _mesh_context(mesh):
         if shape.kind == "train":
             ga = grad_accum if grad_accum is not None else train_grad_accum(
                 arch_id)
@@ -171,6 +180,8 @@ def lower_combo(arch_id: str, shape_name: str, *, multi_pod: bool = False,
         compiled = lowered.compile()
 
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):      # jax 0.4.x: list of per-program
+        cost = cost[0] if cost else {}       # dicts; newer jax: one dict
     mem = compiled.memory_analysis()
     hlo = compiled.as_text()
     # Loop-aware collective accounting: scanned-layer collectives count

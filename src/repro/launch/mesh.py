@@ -17,9 +17,12 @@ __all__ = ["make_production_mesh", "axes_for", "HardwareSpec", "TPU_V5E"]
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    try:
+        return jax.make_mesh(
+            shape, axes,
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    except AttributeError:      # jax 0.4.x: no AxisType (all axes Auto)
+        return jax.make_mesh(shape, axes)
 
 
 def axes_for(mesh) -> Axes:

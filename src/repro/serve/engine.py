@@ -16,6 +16,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..comm.compression import CompressionSpec, payload_stats
+from ..core.encoder import (DEFAULT_CHUNK, chunk_counts_for, concat_chunks,
+                            decode_chunks_jit, encode_chunked_jit)
+from ..core.huffman import canonical_codes, canonical_decode_tables
 from ..models.common import ModelConfig
 from ..models.transformer import decode_step, init_caches, prefill
 
@@ -30,23 +33,60 @@ class ServeConfig:
 
 
 def make_serve_step(model_cfg: ModelConfig,
-                    comp_spec: Optional[CompressionSpec] = None):
+                    comp_spec: Optional[CompressionSpec] = None, *,
+                    decode_chunk: int = DEFAULT_CHUNK):
     """(params, tokens (B,1), caches, pos) → (logits, caches, metrics).
 
     With a CompressionSpec, the step also reports the coded size of the
     decode activations payload (what a TP all-gather of the token's
-    hidden state would ship)."""
+    hidden state would ship).  In ``bitexact`` mode the step additionally
+    runs the full decompression path — chunked encode → chunked decode —
+    and accounts it: decoded payload bits, chunk count (the streaming
+    granularity a receiving peer overlaps), and a decode-mismatch counter
+    that must stay 0 (losslessness observed in production, not assumed).
+    The decode tables are rebuilt from the spec's canonical length
+    vectors at trace time — exactly what a receiving node holds.
+    """
+    tables = None
+    if (comp_spec is not None and comp_spec.enabled
+            and comp_spec.mode == "bitexact"):
+        tables = {}
+        for plane, lens in comp_spec.plane_lengths:
+            lv = np.asarray(lens, dtype=np.int32)
+            tables[plane] = (canonical_codes(lv), lv,
+                             canonical_decode_tables(lv))
 
     def step(params, tokens, caches, pos):
         logits, caches = decode_step(params, tokens, caches, pos, model_cfg)
+        z = jnp.zeros((), jnp.float32)
+        metrics = {"act_raw_bits": z, "act_coded_bits": z,
+                   "act_decoded_bits": z, "act_decode_chunks": z,
+                   "act_decode_mismatch": z}
         if comp_spec is not None and comp_spec.enabled:
             h = logits.astype(jnp.bfloat16)
             s = payload_stats(h, comp_spec)
-            metrics = {"act_raw_bits": s["raw_bits"],
-                       "act_coded_bits": s["coded_bits"]}
-        else:
-            z = jnp.zeros((), jnp.float32)
-            metrics = {"act_raw_bits": z, "act_coded_bits": z}
+            metrics["act_raw_bits"] = s["raw_bits"]
+            metrics["act_coded_bits"] = s["coded_bits"]
+            if tables is not None:
+                planes = comp_spec.scheme.to_symbols_jnp(h)
+                for plane, sym in planes.items():
+                    codes, lens, t = tables[plane]
+                    words, bits = encode_chunked_jit(
+                        sym, jnp.asarray(codes.astype(np.uint32)),
+                        jnp.asarray(lens), chunk=decode_chunk)
+                    counts = chunk_counts_for(int(sym.shape[0]), decode_chunk)
+                    out = decode_chunks_jit(
+                        words, jnp.asarray(counts),
+                        jnp.asarray(t.first_code), jnp.asarray(t.base_index),
+                        jnp.asarray(t.num_codes),
+                        jnp.asarray(t.sorted_symbols), chunk=decode_chunk,
+                        max_len=t.max_len)
+                    dec = concat_chunks(out, counts)
+                    metrics["act_decoded_bits"] += bits.sum().astype(
+                        jnp.float32)
+                    metrics["act_decode_chunks"] += jnp.float32(len(counts))
+                    metrics["act_decode_mismatch"] += (
+                        dec != sym.astype(jnp.uint8)).sum().astype(jnp.float32)
         return logits, caches, metrics
 
     return step
@@ -84,12 +124,15 @@ class Engine:
             prefix_embeds.shape[1] if prefix_embeds is not None else 0)
         tok = self._sample(logits).astype(jnp.int32)
         out = [tok]
-        totals = {"act_raw_bits": 0.0, "act_coded_bits": 0.0}
+        totals: Dict[str, float] = {}
         for i in range(max_new_tokens - 1):
             pos = jnp.int32(prompt_len + i)
             logits, caches, m = self._step(self.params, tok, caches, pos)
-            for k in totals:
-                totals[k] += float(m[k])
+            for k, v in m.items():
+                totals[k] = totals.get(k, 0.0) + float(v)
             tok = self._sample(logits).astype(jnp.int32)
             out.append(tok)
+        for k in ("act_raw_bits", "act_coded_bits", "act_decoded_bits",
+                  "act_decode_chunks", "act_decode_mismatch"):
+            totals.setdefault(k, 0.0)                  # stable for 1-token gens
         return np.concatenate([np.asarray(t) for t in out], axis=1), totals

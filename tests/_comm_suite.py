@@ -13,17 +13,44 @@ import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.comm import (CollectiveLedger, CompressionSpec, all_gather,
-                        all_gather_bitexact, all_reduce, psum_bitexact)
+                        all_gather_bitexact, all_gather_bitexact_chunked,
+                        all_reduce, psum_bitexact, psum_bitexact_chunked)
 from repro.core.codebook import build_codebook
 from repro.core.symbols import bf16_planes_np
 
 pytestmark = pytest.mark.skipif(jax.device_count() < 8,
                                 reason="needs 8 host devices")
 
+# jax.shard_map / AxisType landed after 0.4.x; fall back to the
+# experimental API with the same (mesh, in_specs, out_specs) surface.
+try:
+    _shard_map = jax.shard_map
+except AttributeError:
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+
+def smap(mesh, in_specs, out_specs, check=True):
+    """shard_map decorator; check=False disables the replication check
+    (required to run pallas_call bodies under shard_map on jax 0.4.x —
+    the flag is check_rep there, check_vma on newer jax)."""
+    def deco(f):
+        kw = dict(mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+        if not check:
+            for flag in ("check_vma", "check_rep"):
+                try:
+                    return _shard_map(f, **kw, **{flag: False})
+                except TypeError:
+                    continue
+        return _shard_map(f, **kw)
+    return deco
+
 
 def _mesh():
-    return jax.make_mesh((8,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    try:
+        return jax.make_mesh((8,), ("data",),
+                             axis_types=(jax.sharding.AxisType.Auto,))
+    except AttributeError:
+        return jax.make_mesh((8,), ("data",))
 
 
 def _books_for(x_bf16):
@@ -48,7 +75,7 @@ class TestLedgerCollectives:
         spec = _spec_for(x)
         mesh = _mesh()
 
-        @jax.shard_map(mesh=mesh, in_specs=P("data"), out_specs=(P("data"), P()))
+        @smap(mesh, P("data"), (P("data"), P()))
         def f(xs):
             y, stats = all_reduce(xs, "data", spec)
             return y, _psum_stats(stats)
@@ -69,7 +96,7 @@ class TestLedgerCollectives:
         spec = _spec_for(np.asarray(x))
         mesh = _mesh()
 
-        @jax.shard_map(mesh=mesh, in_specs=P("data"), out_specs=(P("data"), P()))
+        @smap(mesh, P("data"), (P("data"), P()))
         def f(xs):
             y, stats = all_gather(xs, "data", spec=spec)
             return y[:1], _psum_stats(stats)
@@ -83,7 +110,7 @@ class TestLedgerCollectives:
         x = jnp.ones((8, 16, 16), jnp.bfloat16)
         mesh = _mesh()
 
-        @jax.shard_map(mesh=mesh, in_specs=P("data"), out_specs=(P("data"), P()))
+        @smap(mesh, P("data"), (P("data"), P()))
         def f(xs):
             y, stats = all_reduce(xs, "data", CompressionSpec.off())
             return y, _psum_stats(stats)
@@ -109,7 +136,7 @@ class TestBitexactCollectives:
         books = _books_for(x)
         mesh = _mesh()
 
-        @jax.shard_map(mesh=mesh, in_specs=P("data"), out_specs=(P("data"), P()))
+        @smap(mesh, P("data"), (P("data"), P()))
         def f(xs):
             y, stats = all_gather_bitexact(xs, "data", books, "bf16")
             return y[None], _psum_stats(stats)
@@ -128,7 +155,7 @@ class TestBitexactCollectives:
         books = _books_for(x)
         mesh = _mesh()
 
-        @jax.shard_map(mesh=mesh, in_specs=P("data"), out_specs=(P("data"), P()))
+        @smap(mesh, P("data"), (P("data"), P()))
         def f(xs):
             y, stats = psum_bitexact(xs, "data", books, "bf16")
             return y[None], _psum_stats(stats)
@@ -146,7 +173,7 @@ class TestBitexactCollectives:
         books = _books_for(prev)
         mesh = _mesh()
 
-        @jax.shard_map(mesh=mesh, in_specs=P("data"), out_specs=(P("data"), P()))
+        @smap(mesh, P("data"), (P("data"), P()))
         def f(xs):
             y, stats = all_gather_bitexact(xs, "data", books, "bf16")
             return y[None], _psum_stats(stats)
@@ -155,6 +182,88 @@ class TestBitexactCollectives:
         got = np.asarray(y, np.float32)[0]       # (8, 4, 64) = full input
         want = np.asarray(x, np.float32)
         assert (got == want).all()
+
+
+class TestStreamingChunkedCollectives:
+    """The streaming wire format: per-chunk collectives + device decode."""
+
+    _KEYS = ("raw_wire_bits", "coded_wire_bits", "payload_raw_bits",
+             "payload_coded_bits")
+
+    def _run(self, fn, x):
+        mesh = _mesh()
+
+        @smap(mesh, P("data"), (P("data"), P()), check=False)
+        def f(xs):
+            y, stats = fn(xs)
+            return y[None], _psum_stats(stats)
+
+        y, stats = f(jnp.asarray(x))
+        return np.asarray(y), {k: float(v) for k, v in stats.items()}
+
+    def test_chunked_psum_equals_uncompressed_psum(self):
+        rng = np.random.default_rng(10)
+        x = rng.normal(size=(8, 4, 32)).astype(jnp.bfloat16)
+        books = _books_for(x)
+        y, stats = self._run(
+            lambda xs: psum_bitexact_chunked(xs, "data", books, "bf16",
+                                             chunk=64), x)
+        mesh = _mesh()
+
+        @smap(mesh, P("data"), P("data"))
+        def plain(xs):
+            return jax.lax.psum(xs, "data")[None]
+
+        want = np.asarray(plain(jnp.asarray(x)), np.float32)[0]
+        got = y[0].reshape(4, 32).astype(np.float32)
+        np.testing.assert_array_equal(got, want.reshape(4, 32))
+        assert 0 < stats["payload_coded_bits"] < stats["payload_raw_bits"]
+        assert stats["payload_header_bits"] > 0
+
+    def test_chunked_psum_matches_monolithic_bitexact(self):
+        rng = np.random.default_rng(11)
+        x = rng.normal(size=(8, 4, 48)).astype(jnp.bfloat16)
+        books = _books_for(x)
+        ym, sm = self._run(
+            lambda xs: psum_bitexact(xs, "data", books, "bf16"), x)
+        for backend in ("pallas", "scan"):
+            yc, sc = self._run(
+                lambda xs: psum_bitexact_chunked(
+                    xs, "data", books, "bf16", chunk=64,
+                    decode_backend=backend), x)
+            assert (ym == yc).all(), backend       # identical results
+            for k in self._KEYS:                   # identical wire ledger
+                assert sm[k] == sc[k], (backend, k, sm[k], sc[k])
+
+    def test_chunked_all_gather_matches_monolithic(self):
+        rng = np.random.default_rng(12)
+        x = rng.normal(size=(8, 4, 64)).astype(jnp.bfloat16)
+        books = _books_for(x)
+        ym, sm = self._run(
+            lambda xs: all_gather_bitexact(xs, "data", books, "bf16"), x)
+        yc, sc = self._run(
+            lambda xs: all_gather_bitexact_chunked(xs, "data", books, "bf16",
+                                                   chunk=64), x)
+        assert (ym == yc).all()
+        for k in self._KEYS:
+            assert sm[k] == sc[k], (k, sm[k], sc[k])
+        # lossless vs the original full input on every device
+        got = np.asarray(yc, np.float32)[0]
+        assert (got.reshape(np.asarray(x).shape) == np.asarray(
+            x, np.float32)).all()
+
+    def test_chunked_foreign_book_lossless(self):
+        # Codebook from batch k, data from batch k+1 — the paper's setting.
+        rng = np.random.default_rng(13)
+        prev = rng.normal(size=(8, 4, 64)).astype(jnp.bfloat16)
+        x = rng.normal(size=(8, 4, 64)).astype(jnp.bfloat16)
+        books = _books_for(prev)
+        y, _ = self._run(
+            lambda xs: all_gather_bitexact_chunked(xs, "data", books, "bf16",
+                                                   chunk=128), x)
+        got = np.asarray(y, np.float32)[0]
+        assert (got.reshape(np.asarray(x).shape) == np.asarray(
+            x, np.float32)).all()
 
 
 if __name__ == "__main__":
@@ -170,7 +279,7 @@ class TestOtherCollectives:
         spec = _spec_for(x)
         mesh = _mesh()
 
-        @jax.shard_map(mesh=mesh, in_specs=P("data"), out_specs=(P("data"), P()))
+        @smap(mesh, P("data"), (P("data"), P()))
         def f(xs):
             y, stats = reduce_scatter(xs[0], "data", spec=spec)
             return y[None, None], _psum_stats(stats)
@@ -190,7 +299,7 @@ class TestOtherCollectives:
         spec = _spec_for(np.asarray(x))
         mesh = _mesh()
 
-        @jax.shard_map(mesh=mesh, in_specs=P("data"), out_specs=(P("data"), P()))
+        @smap(mesh, P("data"), (P("data"), P()))
         def f(xs):
             y, stats = all_to_all(xs[0], "data", split_axis=0, concat_axis=0,
                                   spec=spec)
@@ -208,7 +317,7 @@ class TestOtherCollectives:
         mesh = _mesh()
         perm = [(i, (i + 1) % 8) for i in range(8)]
 
-        @jax.shard_map(mesh=mesh, in_specs=P("data"), out_specs=(P("data"), P()))
+        @smap(mesh, P("data"), (P("data"), P()))
         def f(xs):
             y, stats = ppermute(xs, "data", perm, spec)
             return y, _psum_stats(stats)

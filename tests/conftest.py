@@ -1,0 +1,63 @@
+"""Shared test fixtures and an optional-dependency shim.
+
+The property tests use hypothesis when it is installed.  Containers
+without it (the tier-1 CI image bakes in only jax/numpy/pytest) get a
+minimal deterministic stand-in: each ``@given`` test runs
+``max_examples`` seeded draws, so the property sweeps still execute —
+with fixed seeds instead of adaptive shrinking.
+"""
+from __future__ import annotations
+
+import functools
+import random
+import sys
+import types
+import zlib
+
+try:  # pragma: no cover - exercised only where hypothesis exists
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:
+    class _Strategy:
+        def __init__(self, draw):
+            self.draw = draw
+
+    def _integers(min_value, max_value):
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    def _floats(min_value, max_value):
+        return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+    def _settings(max_examples=10, deadline=None, **_kw):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+        return deco
+
+    def _given(*strategies):
+        def deco(fn):
+            max_examples = getattr(fn, "_max_examples", 10)
+
+            # No functools.wraps: pytest must see the (*args) signature,
+            # not the wrapped function's (self, seed, n, ...) parameters
+            # (it would try to resolve those as fixtures).
+            def wrapper(*args, **kwargs):
+                base = zlib.crc32(fn.__qualname__.encode())
+                for i in range(max_examples):
+                    rng = random.Random(base + i)
+                    drawn = [s.draw(rng) for s in strategies]
+                    fn(*args, *drawn, **kwargs)
+            wrapper.__name__ = fn.__name__
+            wrapper.__qualname__ = fn.__qualname__
+            wrapper.__doc__ = fn.__doc__
+            return wrapper
+        return deco
+
+    _st = types.ModuleType("hypothesis.strategies")
+    _st.integers = _integers
+    _st.floats = _floats
+    _hyp = types.ModuleType("hypothesis")
+    _hyp.given = _given
+    _hyp.settings = _settings
+    _hyp.strategies = _st
+    sys.modules["hypothesis"] = _hyp
+    sys.modules["hypothesis.strategies"] = _st

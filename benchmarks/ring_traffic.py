@@ -1,0 +1,129 @@
+"""Ring-transport traffic benchmark — per-hop wire bits + hop latency.
+
+Compares the three bitexact transports (monolithic / chunked / ring —
+see ``repro.comm.transport`` and ``docs/collectives.md``) on an 8-way
+all-reduce of the same payload:
+
+  * every transport's result is verified bit-exact against
+    ``jax.lax.psum`` BEFORE any timing (integer-valued payload, so the
+    ring's hop-order summation is exact too);
+  * wire accounting per transport — for the ring this is the *measured*
+    per-hop coded traffic (reduce-scatter hops carry partial sums whose
+    coded size differs from the inputs'), which the endpoint-decode
+    transports can only estimate analytically;
+  * wall time per collective call and, for the ring, derived per-hop
+    latency (CPU timings are indicative; structural numbers are exact).
+
+Needs ≥8 devices, which must be forced before jax initializes — when
+invoked from ``benchmarks.run`` (or any 1-device process) it re-execs
+itself in a subprocess with the XLA host-device flag, so registration
+in the driver stays exercisable everywhere (the CI smoke invocation).
+"""
+from __future__ import annotations
+
+import os
+import pathlib
+import subprocess
+import sys
+
+_N = 8
+_PER_DEV = 2048          # bf16 elements per device
+_CHUNK = 256
+
+
+def _inner() -> None:
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import PartitionSpec as P
+
+    from repro.comm import TRANSPORTS, ring_all_reduce
+    from repro.core.codebook import build_codebook
+    from repro.core.symbols import SCHEMES
+
+    from .common import emit, timed
+
+    try:
+        _shard_map = jax.shard_map
+    except AttributeError:
+        from jax.experimental.shard_map import shard_map as _shard_map
+
+    mesh = jax.sharding.Mesh(np.asarray(jax.devices()[:_N]), ("data",))
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.integers(-2, 3, size=(_N, _PER_DEV)), jnp.bfloat16)
+    planes = SCHEMES["bf16"].to_symbols(np.asarray(x))
+    books = {p: build_codebook(np.bincount(s, minlength=256))
+             for p, s in planes.items()}
+
+    def smap(fn):
+        return jax.jit(_shard_map(fn, mesh=mesh, in_specs=P("data"),
+                                  out_specs=(P("data"), P())))
+
+    @smap
+    def baseline(xs):
+        return jax.lax.psum(xs, "data"), {}
+
+    want, _ = baseline(x)
+    want = np.asarray(want, np.float32)
+
+    results = {}
+    for name in ("monolithic", "chunked", "ring"):
+        transport = TRANSPORTS[name]
+
+        @smap
+        def run(xs, t=transport):
+            y, stats = t.all_reduce(xs[0], "data", books, "bf16",
+                                    chunk=_CHUNK, decode_backend="scan")
+            return y[None], {k: jax.lax.psum(v, "data")
+                             for k, v in stats.items()}
+
+        y, stats = run(x)
+        got = np.asarray(y, np.float32)
+        assert (got == want).all(), f"{name} not bit-exact vs psum"
+        us, _ = timed(lambda: run(x))
+        results[name] = (us, {k: np.asarray(v) for k, v in stats.items()})
+
+    raw = float(results["ring"][1]["payload_raw_bits"]) / _N
+    for name, (us, stats) in results.items():
+        coded_wire = float(stats["coded_wire_bits"])
+        emit(f"ring_traffic.{name}.all_reduce_us", us, "")
+        emit(f"ring_traffic.{name}.coded_wire_bits", 0.0, f"{coded_wire:.0f}")
+        emit(f"ring_traffic.{name}.wire_ratio", 0.0,
+             f"{coded_wire / (float(stats['raw_wire_bits']) or 1.0):.4f}")
+    hop_bits = results["ring"][1]["hop_coded_bits"]      # (2(n-1),) psummed
+    hops = int(float(results["ring"][1]["hops"]))        # psummed global/n
+    emit("ring_traffic.ring.hops", 0.0, f"{hops}")
+    emit("ring_traffic.ring.hop_coded_bits_mean", 0.0,
+         f"{float(hop_bits.mean()):.0f}")
+    emit("ring_traffic.ring.hop_coded_bits_max", 0.0,
+         f"{float(hop_bits.max()):.0f}")
+    emit("ring_traffic.ring.hop_latency_us", results["ring"][0] / hops, "")
+    emit("ring_traffic.payload_raw_bits_per_dev", 0.0, f"{raw:.0f}")
+
+
+def run() -> None:
+    """Entry point for ``benchmarks.run`` — re-exec with forced devices."""
+    import jax
+
+    if jax.device_count() >= _N:
+        _inner()
+        return
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + f" --xla_force_host_platform_device_count={_N}"
+                        ).strip()
+    root = pathlib.Path(__file__).parents[1]
+    env["PYTHONPATH"] = (str(root / "src")
+                         + os.pathsep + env.get("PYTHONPATH", ""))
+    proc = subprocess.run([sys.executable, "-m", "benchmarks.ring_traffic"],
+                          env=env, capture_output=True, text=True,
+                          timeout=1800, cwd=str(root))
+    sys.stdout.write(proc.stdout)
+    sys.stderr.write(proc.stderr)
+    if proc.returncode != 0:
+        raise RuntimeError(f"ring_traffic subprocess failed "
+                           f"(rc={proc.returncode})")
+
+
+if __name__ == "__main__":
+    run()

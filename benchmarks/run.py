@@ -18,7 +18,7 @@ import time
 def main() -> None:
     from . import (codelen_ablation, collective_traffic, decoder_throughput,
                    dtype_sweep, encoder_throughput, fig1_pmf, fig2_per_shard,
-                   fig3_kl, fig4_fixed_codebook, tensor_kinds)
+                   fig3_kl, fig4_fixed_codebook, ring_traffic, tensor_kinds)
 
     print("name,us_per_call,derived")
     suites = [
@@ -32,6 +32,7 @@ def main() -> None:
         ("encoder", encoder_throughput.run),
         ("decoder", decoder_throughput.run),
         ("traffic", collective_traffic.run),
+        ("ring_traffic", ring_traffic.run),
     ]
     only = sys.argv[1] if len(sys.argv) > 1 else None
     for name, fn in suites:

@@ -15,7 +15,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
-from repro.comm import all_gather_bitexact
+from repro.comm import (CompressionSpec, all_gather_bitexact,
+                        all_reduce_compressed)
 from repro.core.codebook import build_codebook
 from repro.core.symbols import bf16_planes_np
 from repro.models import BlockGroup, ModelConfig, model_init
@@ -71,6 +72,25 @@ def main() -> None:
     print(f"[serve] all-gather wire: raw {raw/8/1024:.1f} KiB → "
           f"coded {coded/8/1024:.1f} KiB "
           f"({100 * (1 - coded / raw):.1f} % saved), bit-exact ✓")
+
+    # ---- transport selection: the same payload over the ring ------------
+    # spec.transport picks the wire strategy (docs/collectives.md); the
+    # ring keeps the payload coded on every hop and measures per-hop bits.
+    spec = CompressionSpec.from_books(books, "bf16", mode="bitexact",
+                                      transport="ring", chunk=1024,
+                                      decode_backend="scan")
+
+    @smap(mesh=mesh, in_specs=P("tp"), out_specs=(P("tp"), P()))
+    def ring_reduce(xs):
+        y, stats = all_reduce_compressed(xs[0], "tp", books, spec)
+        return y[None], {k: jax.lax.psum(v, "tp") for k, v in stats.items()}
+
+    yr, rs = ring_reduce(jnp.asarray(x))
+    hop = np.asarray(rs["hop_coded_bits"]) / 8.0 / 1024.0
+    print(f"[serve] ring all-reduce: {int(float(rs['hops']))} coded hops, "
+          f"per-hop {hop.min():.1f}–{hop.max():.1f} KiB, "
+          f"wire {float(rs['coded_wire_bits'])/8/1024:.1f} KiB coded vs "
+          f"{float(rs['raw_wire_bits'])/8/1024:.1f} KiB raw")
 
 
 if __name__ == "__main__":

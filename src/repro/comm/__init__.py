@@ -1,10 +1,20 @@
 """Compressed collective-communication layer (the paper's deployment
-surface: fixed-codebook Huffman compression of collective payloads)."""
+surface: fixed-codebook Huffman compression of collective payloads).
+
+Bitexact wire strategies are pluggable transports (``transport.py``):
+monolithic endpoint-decode, chunked streaming, and the ppermute ring
+(``ring.py``) that decodes → reduces → re-encodes on every hop."""
 from .collectives import (all_gather, all_gather_bitexact,
-                          all_gather_bitexact_chunked, all_reduce,
-                          all_to_all, merge_stats, ppermute, psum_bitexact,
+                          all_gather_bitexact_chunked, all_gather_compressed,
+                          all_reduce, all_reduce_compressed, all_to_all,
+                          merge_stats, ppermute, psum_bitexact,
                           psum_bitexact_chunked, reduce_scatter, zero_stats)
-from .compression import CompressionSpec, histogram256_xla, payload_stats
+from .compression import (KNOWN_TRANSPORTS, CompressionSpec, histogram256_xla,
+                          payload_stats)
 from .ledger import CollectiveLedger, LedgerEntry
+from .ring import ring_all_gather, ring_all_reduce
+from .transport import (TRANSPORTS, ChunkedTransport, MonolithicTransport,
+                        RingTransport, Transport, get_transport,
+                        register_transport)
 
 __all__ = [k for k in dir() if not k.startswith("_")]

@@ -12,22 +12,12 @@ Wire accounting uses ring-algorithm egress factors per device:
   all_to_all        (n-1)/n × payload
   ppermute                1 × payload
 
-In bitexact mode the reduction for ``psum`` happens decode-then-add at
-the endpoint.  A hardware ring implementation re-encodes at every hop
-(decode → add → encode); endpoint decode-add is numerically identical
-because the codec is lossless, so tests of losslessness and size hold.
-
-Two bitexact wire formats:
-  * monolithic — one stream per plane per device; the receiver decodes
-    the whole stream at the end (endpoint decode on the critical path).
-  * chunked/streaming — each plane's stream is cut into fixed-symbol
-    chunks with per-chunk bit-count headers (the layout the pack
-    kernel's accumulator already emits).  Each chunk is an independent
-    collective + decode, so chunk N's decode overlaps chunk N+1's
-    transfer and the decode itself runs chunk-parallel on the Pallas
-    decode kernel.  Results and wire-bit ledgers are identical to the
-    monolithic path (the chunk cuts are word-aligned repacks of the
-    same codewords; headers are reported separately).
+Bitexact wire strategies live in ``repro.comm.transport`` (monolithic /
+chunked / ring — see that module and ``docs/collectives.md``); the
+``*_bitexact*`` functions kept here are thin compatibility shims over
+the transport registry.  New code should select a transport via
+``CompressionSpec.transport`` and call ``all_gather_compressed`` /
+``all_reduce_compressed``.
 """
 from __future__ import annotations
 
@@ -35,37 +25,20 @@ from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from ..core.codebook import Codebook
-from ..core.encoder import (DEFAULT_CHUNK, decode_chunks_jit, decode_jit,
-                            encode_chunked_jit, encode_jit,
-                            packed_words_capacity)
-from ..core.symbols import SCHEMES
+from ..core.encoder import DEFAULT_CHUNK
 from .compression import CompressionSpec, payload_stats
+from .transport import (RING_FACTORS, TRANSPORTS, all_gather_compressed,
+                        all_reduce_compressed, axis_size)
 
 __all__ = [
     "all_reduce", "all_gather", "reduce_scatter", "all_to_all", "ppermute",
     "all_gather_bitexact", "psum_bitexact",
     "all_gather_bitexact_chunked", "psum_bitexact_chunked",
+    "all_gather_compressed", "all_reduce_compressed",
     "merge_stats", "zero_stats",
 ]
-
-_RING_FACTORS = {
-    "all_reduce": lambda n: 2.0 * (n - 1) / n,
-    "reduce_scatter": lambda n: (n - 1) / n,
-    "all_gather": lambda n: float(n - 1),
-    "all_to_all": lambda n: (n - 1) / n,
-    "ppermute": lambda n: 1.0,
-}
-
-
-def _axis_size(axis_name: str) -> int:
-    """Static mesh-axis size inside shard_map (jax-version compatible)."""
-    try:
-        return jax.lax.axis_size(axis_name)
-    except AttributeError:           # jax 0.4.x: axis_frame *is* the size
-        return int(jax.core.axis_frame(axis_name))
 
 
 def zero_stats() -> Dict[str, jnp.ndarray]:
@@ -86,8 +59,8 @@ def _wire_stats(op: str, x: jnp.ndarray, axis_name: str,
                 spec: CompressionSpec) -> Dict[str, jnp.ndarray]:
     if not spec.enabled:
         return zero_stats()
-    n = _axis_size(axis_name)
-    factor = jnp.float32(_RING_FACTORS[op](n))
+    n = axis_size(axis_name)
+    factor = jnp.float32(RING_FACTORS[op](n))
     p = payload_stats(x, spec)
     return {"raw_wire_bits": factor * p["raw_bits"],
             "coded_wire_bits": factor * p["coded_bits"],
@@ -127,198 +100,34 @@ def ppermute(x, axis_name: str, perm,
     return y, _wire_stats("ppermute", x, axis_name, spec)
 
 
-# ---------------------------------------------------------- bitexact paths
-def _encode_planes(x, books: Dict[str, Codebook], scheme_name: str):
-    scheme = SCHEMES[scheme_name]
-    planes = scheme.to_symbols_jnp(x)
-    enc = {}
-    for plane, sym in planes.items():
-        b = books[plane]
-        words, n_bits = encode_jit(sym, jnp.asarray(b.codes),
-                                   jnp.asarray(b.lengths), max_len=b.max_len)
-        enc[plane] = (words, n_bits, sym.shape[0])
-    return enc
-
-
-def _decode_plane(words, book: Codebook, n_symbols: int):
-    t = book.tables
-    return decode_jit(words, jnp.asarray(t.first_code), jnp.asarray(t.base_index),
-                      jnp.asarray(t.num_codes), jnp.asarray(t.sorted_symbols),
-                      n_symbols, max_len=t.max_len)
-
-
-def _reassemble(planes: Dict[str, jnp.ndarray], scheme_name: str, shape, dtype):
-    if scheme_name == "bf16":
-        u16 = (planes["lo"].astype(jnp.uint16)
-               | (planes["hi"].astype(jnp.uint16) << 8))
-        return jax.lax.bitcast_convert_type(u16, jnp.bfloat16).reshape(shape)
-    if scheme_name in ("e4m3", "e5m2"):
-        dt = jnp.float8_e4m3fn if scheme_name == "e4m3" else jnp.float8_e5m2
-        return jax.lax.bitcast_convert_type(planes["b0"], dt).reshape(shape)
-    raise ValueError(f"no reassembly for scheme {scheme_name}")
-
-
+# ------------------------------------------------- bitexact (legacy shims)
 def all_gather_bitexact(x, axis_name: str, books: Dict[str, Codebook],
                         scheme_name: str = "bf16"):
-    """All-gather whose wire payload is the Huffman bitstream.
-
-    Per plane: encode locally → all_gather the (fixed-capacity) word
-    buffers and true bit counts → decode every peer's stream → reassemble.
-    Returns (gathered x, stats) where coded bits are the *actual* summed
-    stream sizes (not a ledger estimate).
-    """
-    n = _axis_size(axis_name)
-    enc = _encode_planes(x, books, scheme_name)
-    out_planes = {}
-    coded = jnp.zeros((), jnp.float32)
-    for plane, (words, n_bits, n_sym) in enc.items():
-        gw = jax.lax.all_gather(words, axis_name)          # (n, capacity)
-        gb = jax.lax.all_gather(n_bits, axis_name)         # (n,)
-        dec = jax.vmap(lambda w: _decode_plane(w, books[plane], n_sym))(gw)
-        out_planes[plane] = dec.reshape(-1)
-        coded = coded + gb.astype(jnp.float32).sum()
-    scheme = SCHEMES[scheme_name]
-    gathered_shape = (n * x.shape[0],) + x.shape[1:]
-    y = _reassemble(out_planes, scheme_name, gathered_shape, x.dtype)
-    raw = jnp.float32(x.size * scheme.total_symbol_bits()) * n
-    stats = {"raw_wire_bits": raw * (n - 1) / n,
-             "coded_wire_bits": coded * (n - 1) / n,
-             "payload_raw_bits": raw, "payload_coded_bits": coded}
-    return y, stats
+    """Monolithic-transport all-gather (compat shim; see transport.py)."""
+    return TRANSPORTS["monolithic"].all_gather(x, axis_name, books, scheme_name)
 
 
 def psum_bitexact(x, axis_name: str, books: Dict[str, Codebook],
                   scheme_name: str = "bf16"):
-    """All-reduce over a Huffman-coded wire: gather streams, decode, add.
-
-    (A hardware ring re-encodes per hop; endpoint decode-add is the same
-    lossless result — see module docstring.)
-    """
-    g, stats = all_gather_bitexact(x, axis_name, books, scheme_name)
-    n = _axis_size(axis_name)
-    y = g.reshape((n,) + x.shape).sum(axis=0).astype(x.dtype)
-    return y, stats
-
-
-# ----------------------------------------------- streaming chunked bitexact
-def _encode_planes_chunked(x, books: Dict[str, Codebook], scheme_name: str,
-                           chunk: int):
-    """Per plane: (block_words (NB, cap), block_bits (NB,), n_symbols)."""
-    scheme = SCHEMES[scheme_name]
-    planes = scheme.to_symbols_jnp(x)
-    enc = {}
-    for plane, sym in planes.items():
-        b = books[plane]
-        words, bits = encode_chunked_jit(sym, jnp.asarray(b.codes),
-                                         jnp.asarray(b.lengths), chunk=chunk,
-                                         max_len=b.max_len)
-        enc[plane] = (words, bits, sym.shape[0])
-    return enc
-
-
-def _decode_gathered_chunk(gw, count: int, book: Codebook, chunk: int,
-                           backend: str):
-    """Decode one chunk gathered from every peer: (n, cap) → (n, chunk).
-
-    To the chunked decoder a peer is just another chunk, so all peers
-    decode in one launch (one Pallas grid / one vmapped scan).
-    """
-    t = book.tables
-    counts = jnp.full((gw.shape[0],), count, jnp.int32)
-    args = (gw, counts, jnp.asarray(t.first_code), jnp.asarray(t.base_index),
-            jnp.asarray(t.num_codes), jnp.asarray(t.sorted_symbols))
-    if backend == "pallas":
-        from ..kernels.decode import decode_chunks_pallas
-        from ..kernels.ops import INTERPRET
-        return decode_chunks_pallas(*args, chunk=chunk, max_len=t.max_len,
-                                    interpret=INTERPRET)
-    if backend == "scan":
-        return decode_chunks_jit(*args, chunk=chunk, max_len=t.max_len)
-    raise ValueError(f"unknown decode backend {backend!r}")
+    """Monolithic-transport all-reduce (compat shim; see transport.py)."""
+    return TRANSPORTS["monolithic"].all_reduce(x, axis_name, books, scheme_name)
 
 
 def all_gather_bitexact_chunked(x, axis_name: str, books: Dict[str, Codebook],
                                 scheme_name: str = "bf16", *,
                                 chunk: int = DEFAULT_CHUNK,
                                 decode_backend: str = "pallas"):
-    """Streaming all-gather: per-chunk collectives + on-device decode.
-
-    Each chunk of each plane rides its own all_gather, so XLA is free to
-    overlap chunk N's decode with chunk N+1's transfer — no monolithic
-    endpoint decode.  Bit-exact with ``all_gather_bitexact``: identical
-    gathered tensor and identical raw/coded wire-bit stats (the chunk
-    cuts repack the same codewords; the per-chunk 32-bit headers are
-    reported separately as ``payload_header_bits``).
-    """
-    n = _axis_size(axis_name)
-    enc = _encode_planes_chunked(x, books, scheme_name, chunk)
-    out_planes = {}
-    coded = jnp.zeros((), jnp.float32)
-    header = 0.0
-    for plane, (words, bits, n_sym) in enc.items():
-        nb = words.shape[0]
-        # One (n, NB) gather covers every chunk's header; the per-chunk
-        # wire only carries the payload gathers below.
-        gb = jax.lax.all_gather(bits, axis_name)
-        coded = coded + gb.astype(jnp.float32).sum()
-        segs = []
-        for c in range(nb):
-            count = min(chunk, n_sym - c * chunk)
-            gw = jax.lax.all_gather(words[c], axis_name)       # (n, cap)
-            dec = _decode_gathered_chunk(gw, count, books[plane], chunk,
-                                         decode_backend)
-            segs.append(dec[:, :count])
-        out_planes[plane] = jnp.concatenate(segs, axis=1).reshape(-1)
-        header += 32.0 * nb * n
-    scheme = SCHEMES[scheme_name]
-    gathered_shape = (n * x.shape[0],) + x.shape[1:]
-    y = _reassemble(out_planes, scheme_name, gathered_shape, x.dtype)
-    raw = jnp.float32(x.size * scheme.total_symbol_bits()) * n
-    stats = {"raw_wire_bits": raw * (n - 1) / n,
-             "coded_wire_bits": coded * (n - 1) / n,
-             "payload_raw_bits": raw, "payload_coded_bits": coded,
-             "payload_header_bits": jnp.float32(header)}
-    return y, stats
+    """Chunked-transport all-gather (compat shim; see transport.py)."""
+    return TRANSPORTS["chunked"].all_gather(x, axis_name, books, scheme_name,
+                                            chunk=chunk,
+                                            decode_backend=decode_backend)
 
 
 def psum_bitexact_chunked(x, axis_name: str, books: Dict[str, Codebook],
                           scheme_name: str = "bf16", *,
                           chunk: int = DEFAULT_CHUNK,
                           decode_backend: str = "pallas"):
-    """Streaming all-reduce: per-chunk gather → decode → add.
-
-    The reduction is chunk-local: chunk c of every plane is gathered,
-    decoded (Pallas kernel by default), reassembled to values and summed
-    over peers while later chunks are still in flight.  Numerically
-    identical to ``psum_bitexact`` (same codewords, same per-peer sum
-    order) with the same wire-bit stats.
-    """
-    n = _axis_size(axis_name)
-    enc = _encode_planes_chunked(x, books, scheme_name, chunk)
-    n_sym = next(iter(enc.values()))[2]
-    nb = next(iter(enc.values()))[0].shape[0]
-    coded = jnp.zeros((), jnp.float32)
-    for plane, (_, bits, _) in enc.items():   # headers: one gather per plane
-        gb = jax.lax.all_gather(bits, axis_name)
-        coded = coded + gb.astype(jnp.float32).sum()
-    segs = []
-    for c in range(nb):
-        count = min(chunk, n_sym - c * chunk)
-        dec_planes = {}
-        for plane, (words, _, _) in enc.items():
-            gw = jax.lax.all_gather(words[c], axis_name)
-            dec_planes[plane] = _decode_gathered_chunk(
-                gw, count, books[plane], chunk, decode_backend)[:, :count]
-        seg = _reassemble(dec_planes, scheme_name, (n, count), x.dtype)
-        segs.append(seg.sum(axis=0))                    # decode-then-add
-    y = jnp.concatenate(segs).reshape(x.shape).astype(x.dtype)
-    scheme = SCHEMES[scheme_name]
-    raw = jnp.float32(x.size * scheme.total_symbol_bits()) * n
-    header = 32.0 * nb * len(enc) * n
-    # Same factors as psum_bitexact (which delegates to the gather path),
-    # so the chunked and monolithic ledgers are directly comparable.
-    stats = {"raw_wire_bits": raw * (n - 1) / n,
-             "coded_wire_bits": coded * (n - 1) / n,
-             "payload_raw_bits": raw, "payload_coded_bits": coded,
-             "payload_header_bits": jnp.float32(header)}
-    return y, stats
+    """Chunked-transport all-reduce (compat shim; see transport.py)."""
+    return TRANSPORTS["chunked"].all_reduce(x, axis_name, books, scheme_name,
+                                            chunk=chunk,
+                                            decode_backend=decode_backend)

@@ -16,6 +16,14 @@ Modes:
   bitexact — encode → collective over the bitstream words → decode.
              Proves losslessness end-to-end through a real collective;
              used by tests and the serving example.
+
+Bitexact collectives additionally carry a **transport** selection (see
+``repro.comm.transport``): ``monolithic`` (endpoint decode),
+``chunked`` (streaming per-chunk collectives) or ``ring`` (ppermute
+ring, decode → reduce → re-encode on every hop).  The spec's
+``transport`` / ``chunk`` / ``decode_backend`` fields are static (part
+of the hashable spec) so they select the lowered program, not a runtime
+branch.
 """
 from __future__ import annotations
 
@@ -27,9 +35,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.codebook import Codebook, CodebookRegistry
+from ..core.encoder import DEFAULT_CHUNK
 from ..core.symbols import SCHEMES, SymbolScheme
 
-__all__ = ["CompressionSpec", "payload_stats", "histogram256_xla"]
+__all__ = ["CompressionSpec", "payload_stats", "histogram256_xla",
+           "KNOWN_TRANSPORTS"]
+
+_MODES = ("off", "ledger", "bitexact")
+KNOWN_TRANSPORTS = ("monolithic", "chunked", "ring")
+_DECODE_BACKENDS = ("pallas", "scan")
 
 
 def histogram256_xla(sym: jnp.ndarray) -> jnp.ndarray:
@@ -50,6 +64,23 @@ class CompressionSpec:
     # hashable => usable as a jit static argument).
     plane_lengths: Optional[Tuple[Tuple[str, Tuple[int, ...]], ...]] = None
     book_ids: Optional[Tuple[Tuple[str, int], ...]] = None
+    # Bitexact wire strategy (repro.comm.transport registry).
+    transport: str = "monolithic"        # monolithic | chunked | ring
+    chunk: int = DEFAULT_CHUNK           # chunked/ring symbols per chunk
+    decode_backend: str = "pallas"       # pallas | scan
+
+    def __post_init__(self):
+        if self.mode not in _MODES:
+            raise ValueError(f"unknown mode {self.mode!r}; one of {_MODES}")
+        if self.transport not in KNOWN_TRANSPORTS:
+            raise ValueError(f"unknown transport {self.transport!r}; "
+                             f"one of {KNOWN_TRANSPORTS}")
+        if self.decode_backend not in _DECODE_BACKENDS:
+            raise ValueError(f"unknown decode backend "
+                             f"{self.decode_backend!r}; "
+                             f"one of {_DECODE_BACKENDS}")
+        if self.chunk <= 0:
+            raise ValueError(f"chunk must be positive, got {self.chunk}")
 
     @property
     def scheme(self) -> SymbolScheme:
@@ -68,8 +99,10 @@ class CompressionSpec:
 
     @classmethod
     def from_registry(cls, registry: CodebookRegistry, tensor_kind: str,
-                      scheme_name: str = "bf16", mode: str = "ledger"
-                      ) -> "CompressionSpec":
+                      scheme_name: str = "bf16", mode: str = "ledger",
+                      transport: str = "monolithic",
+                      chunk: int = DEFAULT_CHUNK,
+                      decode_backend: str = "pallas") -> "CompressionSpec":
         scheme = SCHEMES[scheme_name]
         lens = []
         ids = []
@@ -78,17 +111,21 @@ class CompressionSpec:
             lens.append((plane, tuple(int(v) for v in book.lengths)))
             ids.append((plane, book.book_id))
         return cls(mode=mode, scheme_name=scheme_name, tensor_kind=tensor_kind,
-                   plane_lengths=tuple(lens), book_ids=tuple(ids))
+                   plane_lengths=tuple(lens), book_ids=tuple(ids),
+                   transport=transport, chunk=chunk,
+                   decode_backend=decode_backend)
 
     @classmethod
     def from_books(cls, books: Dict[str, Codebook], scheme_name: str,
-                   tensor_kind: str = "generic", mode: str = "ledger"
-                   ) -> "CompressionSpec":
+                   tensor_kind: str = "generic", mode: str = "ledger",
+                   transport: str = "monolithic", chunk: int = DEFAULT_CHUNK,
+                   decode_backend: str = "pallas") -> "CompressionSpec":
         lens = tuple((p, tuple(int(v) for v in b.lengths))
                      for p, b in books.items())
         ids = tuple((p, b.book_id) for p, b in books.items())
         return cls(mode=mode, scheme_name=scheme_name, tensor_kind=tensor_kind,
-                   plane_lengths=lens, book_ids=ids)
+                   plane_lengths=lens, book_ids=ids, transport=transport,
+                   chunk=chunk, decode_backend=decode_backend)
 
 
 def _planes_of(x: jnp.ndarray, spec: CompressionSpec) -> Dict[str, jnp.ndarray]:

@@ -36,7 +36,7 @@ __all__ = [
     "encoded_size_bits", "packed_words_capacity", "EncodeResult",
     "ChunkedStream", "DEFAULT_CHUNK", "chunk_capacity_words",
     "chunk_counts_for", "concat_chunks",
-    "encode_chunked_jit", "decode_chunks_jit",
+    "encode_chunked_jit", "decode_chunks_jit", "recode_chunks_jit",
     "encode_chunked", "decode_chunked", "decode_dispatch",
 ]
 
@@ -94,6 +94,42 @@ class EncodeResult:
 # --------------------------------------------------------------------------
 # jit bit-packing encoder
 # --------------------------------------------------------------------------
+def _pack_rows(v: jnp.ndarray, l: jnp.ndarray, cap: int
+               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Shared bit-pack core: per-row MSB-first packing via two masked shifts.
+
+    v: (NB, C) uint32 right-aligned codewords; l: (NB, C) uint32 lengths
+    (0 ⇒ the slot contributes no bits).  Returns (words (NB, cap) uint32,
+    bits (NB,) int32).  A codeword of length ≤16 starting at bit offset o
+    spans at most two 32-bit words; high/low parts assemble via
+    scatter-add — fields are disjoint so add ≡ or.
+    """
+    nb = v.shape[0]
+    if v.shape[1] == 0:                              # empty stream
+        return (jnp.zeros((nb, cap), jnp.uint32),
+                jnp.zeros((nb,), jnp.int32))
+    ends = jnp.cumsum(l, axis=1, dtype=jnp.uint32)
+    offs = ends - l                                  # exclusive prefix sum
+    bits = ends[:, -1].astype(jnp.int32)
+
+    pos = offs & jnp.uint32(31)                      # bit position in word
+    idx = (offs >> jnp.uint32(5)).astype(jnp.int32)  # word index in row
+
+    # sh = 32 - pos - l : left-shift that right-aligns the code's end with
+    # the word end.  Negative sh means the low |sh| bits spill to word+1.
+    sh = 32 - pos.astype(jnp.int32) - l.astype(jnp.int32)
+    hi = jnp.where(sh >= 0, v << jnp.clip(sh, 0, 31).astype(jnp.uint32),
+                   v >> jnp.clip(-sh, 0, 31).astype(jnp.uint32))
+    lo = jnp.where(sh < 0, v << jnp.clip(32 + sh, 0, 31).astype(jnp.uint32),
+                   jnp.uint32(0))
+
+    flat_idx = (jnp.arange(nb, dtype=jnp.int32)[:, None] * cap + idx).reshape(-1)
+    words = jnp.zeros((nb * cap,), jnp.uint32)
+    words = words.at[flat_idx].add(hi.reshape(-1), mode="drop")
+    words = words.at[flat_idx + 1].add(lo.reshape(-1), mode="drop")
+    return words.reshape(nb, cap), bits
+
+
 @partial(jax.jit, static_argnames=("max_len",))
 def encode_jit(symbols: jnp.ndarray, codes: jnp.ndarray, lengths: jnp.ndarray,
                max_len: int = MAX_CODE_LEN) -> Tuple[jnp.ndarray, jnp.ndarray]:
@@ -103,40 +139,15 @@ def encode_jit(symbols: jnp.ndarray, codes: jnp.ndarray, lengths: jnp.ndarray,
     codes:   (n_sym,) uint32 canonical codes (MSB-first, right-aligned)
     lengths: (n_sym,) int32 — all > 0 (total code)
     Returns (words, n_bits): (capacity,) uint32 and scalar uint32.
-
-    A codeword of length ≤16 starting at bit offset o spans at most two
-    32-bit words.  We split it into a high-word and a low-word part with
-    two masked shifts (no uint64 needed) and assemble via scatter-add —
-    fields are disjoint so add ≡ or.
     """
     n = symbols.shape[0]
     if n > _MAX_SYMBOLS:
         raise ValueError(f"chunk too large: {n} > {_MAX_SYMBOLS}")
     sym = symbols.astype(jnp.int32)
-    v = codes[sym].astype(jnp.uint32)
-    l = lengths[sym].astype(jnp.uint32)
-
-    ends = jnp.cumsum(l, dtype=jnp.uint32)
-    offs = ends - l                                  # exclusive prefix sum
-    n_bits = ends[-1] if n > 0 else jnp.uint32(0)
-
-    pos = offs & jnp.uint32(31)                      # bit position in word
-    idx = (offs >> jnp.uint32(5)).astype(jnp.int32)  # word index
-
-    # sh = 32 - pos - l : left-shift that right-aligns the code's end with
-    # the word end.  Negative sh means the low |sh| bits spill to word+1.
-    sh = 32 - pos.astype(jnp.int32) - l.astype(jnp.int32)
-    sh_pos = jnp.clip(sh, 0, 31).astype(jnp.uint32)
-    sh_neg = jnp.clip(-sh, 0, 31).astype(jnp.uint32)
-    hi = jnp.where(sh >= 0, v << sh_pos, v >> sh_neg)
-    lo = jnp.where(sh < 0, v << jnp.clip(32 + sh, 0, 31).astype(jnp.uint32),
-                   jnp.uint32(0))
-
-    capacity = packed_words_capacity(n, max_len)
-    words = jnp.zeros((capacity,), jnp.uint32)
-    words = words.at[idx].add(hi, mode="drop")
-    words = words.at[idx + 1].add(lo, mode="drop")
-    return words, n_bits
+    v = codes[sym].astype(jnp.uint32)[None, :]
+    l = lengths[sym].astype(jnp.uint32)[None, :]
+    words, bits = _pack_rows(v, l, packed_words_capacity(n, max_len))
+    return words.reshape(-1), bits[0].astype(jnp.uint32)
 
 
 # --------------------------------------------------------------------------
@@ -254,25 +265,33 @@ def encode_chunked_jit(symbols: jnp.ndarray, codes: jnp.ndarray,
              + jnp.arange(nb, dtype=jnp.int32)[:, None] * chunk) < n
     v = codes[sym].astype(jnp.uint32) * valid.astype(jnp.uint32)
     l = lengths[sym].astype(jnp.uint32) * valid.astype(jnp.uint32)
+    return _pack_rows(v, l, chunk_capacity_words(chunk, max_len))
 
-    ends = jnp.cumsum(l, axis=1, dtype=jnp.uint32)
-    offs = ends - l
-    bits = ends[:, -1].astype(jnp.int32)
 
-    pos = offs & jnp.uint32(31)
-    idx = (offs >> jnp.uint32(5)).astype(jnp.int32)
-    sh = 32 - pos.astype(jnp.int32) - l.astype(jnp.int32)
-    hi = jnp.where(sh >= 0, v << jnp.clip(sh, 0, 31).astype(jnp.uint32),
-                   v >> jnp.clip(-sh, 0, 31).astype(jnp.uint32))
-    lo = jnp.where(sh < 0, v << jnp.clip(32 + sh, 0, 31).astype(jnp.uint32),
-                   jnp.uint32(0))
+@partial(jax.jit, static_argnames=("max_len",))
+def recode_chunks_jit(sym_blocks: jnp.ndarray, chunk_counts: jnp.ndarray,
+                      codes: jnp.ndarray, lengths: jnp.ndarray,
+                      max_len: int = MAX_CODE_LEN
+                      ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Re-encode already-blocked symbols — the per-hop recode fast path.
 
-    cap = chunk_capacity_words(chunk, max_len)
-    flat_idx = (jnp.arange(nb, dtype=jnp.int32)[:, None] * cap + idx).reshape(-1)
-    words = jnp.zeros((nb * cap,), jnp.uint32)
-    words = words.at[flat_idx].add(hi.reshape(-1), mode="drop")
-    words = words.at[flat_idx + 1].add(lo.reshape(-1), mode="drop")
-    return words.reshape(nb, cap), bits
+    A ring hop decodes an incoming chunk straight into its (NB, chunk)
+    block layout, reduces, and must re-encode before forwarding.  This
+    skips ``encode_chunked_jit``'s flatten/pad/reshape (the blocks are
+    already chunk-aligned) and takes per-chunk symbol counts directly,
+    so no tables or chunk geometry are re-derived.  Bit-identical to
+    ``encode_chunked_jit`` on the equivalent flat stream.
+
+    sym_blocks: (NB, chunk) uint8/int32; chunk_counts: (NB,) int32.
+    Returns (block_words (NB, cap) uint32, block_bits (NB,) int32).
+    """
+    nb, chunk = sym_blocks.shape
+    sym = sym_blocks.astype(jnp.int32)
+    valid = (jnp.arange(chunk, dtype=jnp.int32)[None, :]
+             < chunk_counts.astype(jnp.int32)[:, None])
+    v = codes[sym].astype(jnp.uint32) * valid.astype(jnp.uint32)
+    l = lengths[sym].astype(jnp.uint32) * valid.astype(jnp.uint32)
+    return _pack_rows(v, l, chunk_capacity_words(chunk, max_len))
 
 
 @partial(jax.jit, static_argnames=("chunk", "max_len"))

@@ -26,7 +26,8 @@ from .layers import (attn_apply, attn_cache_init, attn_cache_pspec,
                      mlp_pspec, rmsnorm_apply, rmsnorm_init, rmsnorm_pspec)
 from .mla import (mla_apply, mla_cache_init, mla_cache_pspec, mla_decode,
                   mla_init, mla_pspec)
-from .moe import moe_apply, moe_apply_eshard, moe_init, moe_pspec
+from .moe import (moe_apply, moe_apply_eshard, moe_decode, moe_init,
+                  moe_prefill, moe_pspec)
 from .rglru import (rglru_apply, rglru_cache_init, rglru_cache_pspec,
                     rglru_decode, rglru_init, rglru_pspec)
 from .ssm import (mamba_apply, mamba_cache_init, mamba_cache_pspec,
@@ -125,49 +126,66 @@ def block_apply(kind: str, params, x, cfg: ModelConfig
 
 
 # ----------------------------------------------------------------- cache
+# MoE blocks wrap the mixer cache in {"mixer": ..., "moe_counts": (B, E)}:
+# the counts carry the streaming-capacity routing state so the decode
+# path drops exactly the token slots the full forward would (see moe.py).
 def block_cache_init(kind: str, cfg: ModelConfig, batch: int, cache_len: int,
                      dtype=None):
-    mixer, windowed, _ = _parse(kind)
+    mixer, windowed, ffn = _parse(kind)
     w = _window(cfg, windowed)
     if mixer == "gqa":
-        return attn_cache_init(cfg, batch, cache_len, window=w, dtype=dtype)
-    if mixer == "mla":
-        return mla_cache_init(cfg, batch, cache_len, window=w, dtype=dtype)
-    if mixer == "rec":
-        return rglru_cache_init(cfg, batch, dtype=dtype)
-    if mixer == "mamba":
-        return mamba_cache_init(cfg, batch, dtype=dtype)
-    raise ValueError(kind)
+        cache = attn_cache_init(cfg, batch, cache_len, window=w, dtype=dtype)
+    elif mixer == "mla":
+        cache = mla_cache_init(cfg, batch, cache_len, window=w, dtype=dtype)
+    elif mixer == "rec":
+        cache = rglru_cache_init(cfg, batch, dtype=dtype)
+    elif mixer == "mamba":
+        cache = mamba_cache_init(cfg, batch, dtype=dtype)
+    else:
+        raise ValueError(kind)
+    if ffn == "moe":
+        return {"mixer": cache,
+                "moe_counts": jnp.zeros((batch, cfg.n_experts), jnp.int32)}
+    return cache
 
 
 def block_cache_pspec(kind: str, cfg: ModelConfig, axes: Axes):
-    mixer, _, _ = _parse(kind)
-    return {"gqa": attn_cache_pspec, "mla": mla_cache_pspec,
-            "rec": rglru_cache_pspec,
-            "mamba": mamba_cache_pspec}[mixer](cfg, axes)
+    mixer, _, ffn = _parse(kind)
+    pspec = {"gqa": attn_cache_pspec, "mla": mla_cache_pspec,
+             "rec": rglru_cache_pspec,
+             "mamba": mamba_cache_pspec}[mixer](cfg, axes)
+    if ffn == "moe":
+        from jax.sharding import PartitionSpec as P
+        return {"mixer": pspec, "moe_counts": P(None, None)}
+    return pspec
 
 
 def block_decode(kind: str, params, x, cache, pos, cfg: ModelConfig):
     mixer, windowed, ffn = _parse(kind)
     w = _window(cfg, windowed)
+    mixer_cache = cache["mixer"] if ffn == "moe" else cache
     h = rmsnorm_apply(params["norm_mix"], x, cfg.norm_eps)
     if mixer == "gqa":
-        h, cache = attn_decode(params["mixer"], h, cache, pos, cfg, window=w)
+        h, mixer_cache = attn_decode(params["mixer"], h, mixer_cache, pos,
+                                     cfg, window=w)
     elif mixer == "mla":
-        h, cache = mla_decode(params["mixer"], h, cache, pos, cfg, window=w)
+        h, mixer_cache = mla_decode(params["mixer"], h, mixer_cache, pos,
+                                    cfg, window=w)
     elif mixer == "rec":
-        h, cache = rglru_decode(params["mixer"], h, cache, pos, cfg)
+        h, mixer_cache = rglru_decode(params["mixer"], h, mixer_cache, pos, cfg)
     elif mixer == "mamba":
-        h, cache = mamba_decode(params["mixer"], h, cache, pos, cfg)
+        h, mixer_cache = mamba_decode(params["mixer"], h, mixer_cache, pos, cfg)
     x = x + h
     if ffn != "none":
         h = rmsnorm_apply(params["norm_ffn"], x, cfg.norm_eps)
         if ffn == "moe":
-            h, _ = moe_apply(params["ffn"], h, cfg)
-        else:
-            h = mlp_apply(params["ffn"], h, cfg)
+            h, counts = moe_decode(params["ffn"], h, cache["moe_counts"],
+                                   pos, cfg)
+            x = x + h
+            return x, {"mixer": mixer_cache, "moe_counts": counts}
+        h = mlp_apply(params["ffn"], h, cfg)
         x = x + h
-    return x, cache
+    return x, mixer_cache
 
 
 def block_prefill(kind: str, params, x, cfg: ModelConfig, cache_len: int):
@@ -192,8 +210,9 @@ def block_prefill(kind: str, params, x, cfg: ModelConfig, cache_len: int):
     if ffn != "none":
         h = rmsnorm_apply(params["norm_ffn"], x, cfg.norm_eps)
         if ffn == "moe":
-            h, _ = moe_apply(params["ffn"], h, cfg)
-        else:
-            h = mlp_apply(params["ffn"], h, cfg)
+            h, _, counts = moe_prefill(params["ffn"], h, cfg)
+            x = x + h
+            return x, {"mixer": cache, "moe_counts": counts}
+        h = mlp_apply(params["ffn"], h, cfg)
         x = x + h
     return x, cache

@@ -11,6 +11,16 @@ the paper's encoder compresses hardest (FFN activations).  Tokens beyond
 an expert's capacity are dropped (standard capacity-factor semantics);
 their residual path passes through unchanged.
 
+Capacity is **streaming (causal)**: token ``t`` of a sequence is dropped
+from expert ``e`` iff the number of assignments to ``e`` from tokens
+``≤ t`` of the *same sequence* exceeds ``moe_stream_capacity(t+1)``.
+Drop decisions therefore depend only on the sequence's own causal
+prefix — never on other sequences in the batch or on future tokens — so
+the autoregressive decode path (``moe_decode``, which carries a
+per-(sequence, expert) running count in its cache) reproduces the full
+forward bit-for-bit.  The memory bound is unchanged: per-sequence
+buffers are (E, cap(S), d) and batch·cap(S) ≈ the old global capacity.
+
 The router runs in f32 with a load-balance auxiliary loss (Switch-style).
 """
 from __future__ import annotations
@@ -20,18 +30,41 @@ from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from .common import Axes, ModelConfig, shard_or_replicate, truncated_normal_init
 from .layers import mlp_apply, mlp_init, mlp_pspec
 
-__all__ = ["moe_init", "moe_pspec", "moe_apply", "moe_capacity"]
+__all__ = ["moe_init", "moe_pspec", "moe_apply", "moe_prefill", "moe_decode",
+           "moe_capacity", "moe_stream_capacity", "moe_stream_capacity_host"]
 
 
 def moe_capacity(n_tokens: int, cfg: ModelConfig) -> int:
     cap = math.ceil(n_tokens * cfg.experts_per_token / cfg.n_experts
                     * cfg.capacity_factor)
     return max(4, -(-cap // 4) * 4)          # round up to a multiple of 4
+
+
+def moe_stream_capacity(n_tokens, cfg: ModelConfig) -> jnp.ndarray:
+    """Causal capacity threshold after the first ``n_tokens`` tokens.
+
+    jit-safe (``n_tokens`` may be traced, e.g. the decode position).
+    The f32 op order mirrors ``moe_stream_capacity_host`` exactly so
+    traced and host evaluations agree bit-for-bit.
+    """
+    t = jnp.asarray(n_tokens, jnp.float32)
+    c = jnp.ceil(t * (cfg.experts_per_token / cfg.n_experts)
+                 * cfg.capacity_factor).astype(jnp.int32)
+    return jnp.maximum(4, ((c + 3) // 4) * 4)
+
+
+def moe_stream_capacity_host(n_tokens: int, cfg: ModelConfig) -> int:
+    """Host mirror of ``moe_stream_capacity`` (static buffer sizing)."""
+    t = np.float32(n_tokens)
+    c = int(np.ceil(t * np.float32(cfg.experts_per_token / cfg.n_experts)
+                    * np.float32(cfg.capacity_factor)))
+    return max(4, ((c + 3) // 4) * 4)
 
 
 def moe_init(key, cfg: ModelConfig, axes: Axes):
@@ -63,52 +96,130 @@ def moe_pspec(cfg: ModelConfig, axes: Axes):
     return p
 
 
-def moe_apply(params, x, cfg: ModelConfig) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """x: (B, S, d) → (y, aux_loss).  Routed top-k + optional shared expert."""
-    b, s, d = x.shape
-    n = b * s
+def _route(params, xf, cfg: ModelConfig):
+    """Router in f32: (N, d) → (topw, topi, aux_loss)."""
     k = cfg.experts_per_token
     e = cfg.n_experts
-    cap = moe_capacity(n, cfg)
-    xf = x.reshape(n, d)
-
-    # ---- routing (f32) ----
+    n = xf.shape[0]
     logits = (xf.astype(jnp.float32) @ params["router"])         # (N, E)
     probs = jax.nn.softmax(logits, axis=-1)
     topw, topi = jax.lax.top_k(probs, k)                         # (N, k)
     topw = topw / jnp.maximum(topw.sum(-1, keepdims=True), 1e-9)
-
     # Switch-style load-balance loss.
     frac_routed = jnp.zeros((e,), jnp.float32).at[topi.reshape(-1)].add(
         1.0 / (n * k))
     aux = cfg.router_aux_weight * e * jnp.sum(frac_routed * probs.mean(0))
+    return topw, topi, aux
 
-    # ---- dispatch: position of each (token, slot) within its expert ----
-    flat_e = topi.reshape(-1)                                    # (N*k,)
-    onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)          # (N*k, E)
-    pos = (jnp.cumsum(onehot, axis=0) * onehot).sum(-1) - 1      # (N*k,)
-    keep = pos < cap
-    pos_c = jnp.clip(pos, 0, cap - 1)
 
-    tok_idx = jnp.repeat(jnp.arange(n), k)
-    xd = xf[tok_idx] * keep[:, None].astype(xf.dtype)            # (N*k, d)
-    buf = jnp.zeros((e, cap, d), xf.dtype).at[flat_e, pos_c].add(
-        xd, mode="drop")                                         # (E, C, d)
+def _moe_forward(params, x, cfg: ModelConfig):
+    """Streaming-capacity MoE over full sequences.
 
-    # ---- experts: batched gated-MLP einsum ----
+    x: (B, S, d) → (y (B, S, d), aux_loss, counts (B, E)) where counts
+    are the per-sequence routed-assignment totals (kept *and* dropped) —
+    the state ``moe_decode`` continues from after a prefill.
+    """
+    b, s, d = x.shape
+    n = b * s
+    k = cfg.experts_per_token
+    e = cfg.n_experts
+    cap = moe_stream_capacity_host(s, cfg)
+    xf = x.reshape(n, d)
+
+    topw, topi, aux = _route(params, xf, cfg)
+    tw = topw.reshape(b, s, k)
+    ti = topi.reshape(b, s, k)
+
+    # Causal per-position capacity thresholds, repeated per routing slot.
+    thr_slots = jnp.repeat(moe_stream_capacity(jnp.arange(1, s + 1), cfg), k)
     act = jax.nn.silu if cfg.ffn_activation == "silu" else jax.nn.gelu
-    h = act(jnp.einsum("ecd,edf->ecf", buf, params["w_gate"]))
-    h = h * jnp.einsum("ecd,edf->ecf", buf, params["w_up"])
-    out_buf = jnp.einsum("ecf,efd->ecd", h, params["w_down"])    # (E, C, d)
+    tok_idx = jnp.repeat(jnp.arange(s), k)
 
-    # ---- combine ----
-    yd = out_buf[flat_e, pos_c] * keep[:, None].astype(xf.dtype)
-    yd = yd * topw.reshape(-1)[:, None].astype(xf.dtype)
-    y = jnp.zeros((n, d), xf.dtype).at[tok_idx].add(yd)
+    def one_seq(xs, ti_s, tw_s):
+        # Dispatch positions from this sequence's own causal prefix only.
+        flat_e = ti_s.reshape(s * k)
+        onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)      # (S*k, E)
+        pos = (jnp.cumsum(onehot, axis=0) * onehot).sum(-1) - 1  # (S*k,)
+        keep = pos < thr_slots
+        pos_c = jnp.clip(pos, 0, cap - 1)
+
+        xd = xs[tok_idx] * keep[:, None].astype(xs.dtype)        # (S*k, d)
+        buf = jnp.zeros((e, cap, d), xs.dtype).at[flat_e, pos_c].add(
+            xd, mode="drop")                                     # (E, C, d)
+
+        h = act(jnp.einsum("ecd,edf->ecf", buf, params["w_gate"]))
+        h = h * jnp.einsum("ecd,edf->ecf", buf, params["w_up"])
+        out_buf = jnp.einsum("ecf,efd->ecd", h, params["w_down"])
+
+        yd = out_buf[flat_e, pos_c] * keep[:, None].astype(xs.dtype)
+        yd = yd * tw_s.reshape(-1)[:, None].astype(xs.dtype)
+        y = jnp.zeros((s, d), xs.dtype).at[tok_idx].add(yd)
+        return y, onehot.sum(axis=0)                             # (E,) counts
+
+    y, counts = jax.vmap(one_seq)(x, ti, tw)
+    y = y.reshape(n, d)
+    if cfg.n_shared_experts > 0:
+        y = y + mlp_apply(params["shared"], xf, cfg)
+    return y.reshape(b, s, d), aux, counts
+
+
+def moe_apply(params, x, cfg: ModelConfig) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, d) → (y, aux_loss).  Routed top-k + optional shared expert."""
+    y, aux, _ = _moe_forward(params, x, cfg)
+    return y, aux
+
+
+def moe_prefill(params, x, cfg: ModelConfig):
+    """Full-sequence MoE that also returns the decode count cache.
+
+    Returns (y, aux, counts (B, E) int32): counts carry the streaming-
+    capacity state to ``moe_decode`` so prefill→decode handoff drops
+    exactly the tokens the full forward would."""
+    return _moe_forward(params, x, cfg)
+
+
+def moe_decode(params, x, counts, pos, cfg: ModelConfig):
+    """One-token MoE step reproducing the forward's streaming capacity.
+
+    x: (B, 1, d); counts: (B, E) int32 routed-assignment totals for
+    tokens < pos; pos: scalar int32 absolute position.  A slot is
+    dropped iff its expert's count has reached the causal threshold
+    ``moe_stream_capacity(pos + 1)`` — the same decision the full
+    forward makes for token ``pos``.
+
+    The experts run as the same expert-batched einsum the forward uses
+    (a decode step holds at most one row per (sequence, expert), so the
+    capacity buffer degenerates to (B, E, d)); expert weights stay
+    unmoved on their shards under pjit — no per-token weight gather.
+    Returns (y (B, 1, d), new counts).
+    """
+    b, _, d = x.shape
+    e = cfg.n_experts
+    xf = x.reshape(b, d)
+    topw, topi, _ = _route(params, xf, cfg)                      # (B, k)
+
+    thr = moe_stream_capacity(pos + 1, cfg)
+    bi = jnp.arange(b)[:, None]
+    keep = counts[bi, topi] < thr                                # (B, k)
+    new_counts = counts.at[bi, topi].add(1)      # count kept AND dropped
+
+    onehot = jax.nn.one_hot(topi, e, dtype=jnp.float32)          # (B, k, E)
+    sel = onehot * keep[:, :, None].astype(jnp.float32)
+    buf = jnp.einsum("bke,bd->bed", sel.astype(xf.dtype), xf)    # (B, E, d)
+
+    act = jax.nn.silu if cfg.ffn_activation == "silu" else jax.nn.gelu
+    h = act(jnp.einsum("bed,edf->bef", buf, params["w_gate"]))
+    h = h * jnp.einsum("bed,edf->bef", buf, params["w_up"])
+    out = jnp.einsum("bef,efd->bed", h, params["w_down"])        # (B, E, d)
+
+    # Per-(sequence, expert) combine weight; dropped slots already
+    # produced zero rows via the masked dispatch above.
+    we = jnp.einsum("bke,bk->be", onehot, topw)                  # (B, E) f32
+    y = jnp.einsum("bed,be->bd", out, we.astype(xf.dtype))
 
     if cfg.n_shared_experts > 0:
         y = y + mlp_apply(params["shared"], xf, cfg)
-    return y.reshape(b, s, d), aux
+    return y.reshape(b, 1, d), new_counts
 
 
 def moe_apply_eshard(params, x, cfg: ModelConfig
@@ -121,7 +232,9 @@ def moe_apply_eshard(params, x, cfg: ModelConfig
     traffic as a dense TP FFN — versus the scatter path's (E, C, d)
     buffer reduction across data shards.  Requires the ambient mesh to
     carry ("data", "model") axes (pjit context); capacity bounds are per
-    LOCAL expert, so drops match the scatter path in distribution.
+    LOCAL expert with the legacy batch-global formula (a training-only
+    perf lever — the streaming-capacity guarantee that decode reproduces
+    the forward applies to the default scatter path above).
     """
     mesh = jax.sharding.get_abstract_mesh()
     if mesh is None or "model" not in mesh.axis_names:

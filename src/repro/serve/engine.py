@@ -34,20 +34,26 @@ class ServeConfig:
 
 def make_serve_step(model_cfg: ModelConfig,
                     comp_spec: Optional[CompressionSpec] = None, *,
-                    decode_chunk: int = DEFAULT_CHUNK):
+                    decode_chunk: Optional[int] = None, tp_degree: int = 1):
     """(params, tokens (B,1), caches, pos) → (logits, caches, metrics).
 
     With a CompressionSpec, the step also reports the coded size of the
     decode activations payload (what a TP all-gather of the token's
-    hidden state would ship).  In ``bitexact`` mode the step additionally
-    runs the full decompression path — chunked encode → chunked decode —
-    and accounts it: decoded payload bits, chunk count (the streaming
-    granularity a receiving peer overlaps), and a decode-mismatch counter
-    that must stay 0 (losslessness observed in production, not assumed).
-    The decode tables are rebuilt from the spec's canonical length
-    vectors at trace time — exactly what a receiving node holds.
+    hidden state would ship) and — via the spec's transport — the wire
+    bits that gather costs on a ``tp_degree``-way link
+    (``act_wire_*_bits``; 0 when tp_degree == 1).  In ``bitexact`` mode
+    the step additionally runs the full decompression path — chunked
+    encode → chunked decode at the spec's chunk size — and accounts it:
+    decoded payload bits, chunk count (the streaming granularity a
+    receiving peer overlaps), and a decode-mismatch counter that must
+    stay 0 (losslessness observed in production, not assumed).  The
+    decode tables are rebuilt from the spec's canonical length vectors
+    at trace time — exactly what a receiving node holds.
     """
     tables = None
+    if decode_chunk is None:
+        decode_chunk = (comp_spec.chunk if comp_spec is not None
+                        else DEFAULT_CHUNK)
     if (comp_spec is not None and comp_spec.enabled
             and comp_spec.mode == "bitexact"):
         tables = {}
@@ -60,6 +66,7 @@ def make_serve_step(model_cfg: ModelConfig,
         logits, caches = decode_step(params, tokens, caches, pos, model_cfg)
         z = jnp.zeros((), jnp.float32)
         metrics = {"act_raw_bits": z, "act_coded_bits": z,
+                   "act_wire_raw_bits": z, "act_wire_coded_bits": z,
                    "act_decoded_bits": z, "act_decode_chunks": z,
                    "act_decode_mismatch": z}
         if comp_spec is not None and comp_spec.enabled:
@@ -67,6 +74,13 @@ def make_serve_step(model_cfg: ModelConfig,
             s = payload_stats(h, comp_spec)
             metrics["act_raw_bits"] = s["raw_bits"]
             metrics["act_coded_bits"] = s["coded_bits"]
+            if tp_degree > 1:
+                from ..comm.transport import get_transport
+                factor = jnp.float32(
+                    get_transport(comp_spec.transport)
+                    .wire_factor("all_gather", tp_degree))
+                metrics["act_wire_raw_bits"] = factor * s["raw_bits"]
+                metrics["act_wire_coded_bits"] = factor * s["coded_bits"]
             if tables is not None:
                 planes = comp_spec.scheme.to_symbols_jnp(h)
                 for plane, sym in planes.items():
@@ -96,11 +110,13 @@ class Engine:
     """Minimal batched-request engine over the pure-function model API."""
 
     def __init__(self, params, model_cfg: ModelConfig, serve_cfg: ServeConfig,
-                 comp_spec: Optional[CompressionSpec] = None):
+                 comp_spec: Optional[CompressionSpec] = None,
+                 tp_degree: int = 1):
         self.params = params
         self.cfg = model_cfg
         self.serve = serve_cfg
-        self._step = jax.jit(make_serve_step(model_cfg, comp_spec))
+        self._step = jax.jit(make_serve_step(model_cfg, comp_spec,
+                                             tp_degree=tp_degree))
         self._prefill = jax.jit(
             partial(prefill, cfg=model_cfg, cache_len=serve_cfg.max_cache_len))
         self._key = jax.random.PRNGKey(serve_cfg.seed)
@@ -132,7 +148,8 @@ class Engine:
                 totals[k] = totals.get(k, 0.0) + float(v)
             tok = self._sample(logits).astype(jnp.int32)
             out.append(tok)
-        for k in ("act_raw_bits", "act_coded_bits", "act_decoded_bits",
+        for k in ("act_raw_bits", "act_coded_bits", "act_wire_raw_bits",
+                  "act_wire_coded_bits", "act_decoded_bits",
                   "act_decode_chunks", "act_decode_mismatch"):
             totals.setdefault(k, 0.0)                  # stable for 1-token gens
         return np.concatenate([np.asarray(t) for t in out], axis=1), totals

@@ -82,11 +82,20 @@ def grad_payload_stats(grads, spec: Optional[CompressionSpec]
 def make_train_step(model_cfg: ModelConfig, opt_cfg: AdamWConfig,
                     schedule_fn: Optional[Callable] = None,
                     grad_accum: int = 1,
-                    comp_spec: Optional[CompressionSpec] = None):
+                    comp_spec: Optional[CompressionSpec] = None,
+                    dp_degree: int = 1):
     """Build the jit-able train step: (state, batch) → (state, metrics).
 
     Batch leaves are (B, ...) global arrays; with grad_accum=A they are
     reshaped to (A, B/A, ...) and scanned.
+
+    With a CompressionSpec the metrics additionally report the gradient
+    all-reduce *wire* traffic under the spec's transport: the payload
+    probe scaled by the transport's analytic all-reduce egress factor
+    for a ``dp_degree``-way ring (2(n−1)/n — identical for monolithic,
+    chunked and ring transports; the ring's measured per-hop numbers
+    come from the collective itself, see ``repro.comm.ring``).
+    ``dp_degree=1`` means no data-parallel wire, so wire bits are 0.
     """
 
     def loss_fn(params, micro):
@@ -124,9 +133,17 @@ def make_train_step(model_cfg: ModelConfig, opt_cfg: AdamWConfig,
                     else jnp.float32(1.0))
         params, opt, om = adamw_update(grads, state.opt, state.params,
                                        opt_cfg, lr_scale)
+        if comp_spec is not None and comp_spec.enabled and dp_degree > 1:
+            from ..comm.transport import get_transport
+            factor = jnp.float32(get_transport(comp_spec.transport)
+                                 .wire_factor("all_reduce", dp_degree))
+        else:
+            factor = jnp.float32(0.0)
         metrics = {"loss": loss, "ce": ce, "aux": aux,
                    "grad_raw_bits": comp["raw_bits"],
-                   "grad_coded_bits": comp["coded_bits"], **om}
+                   "grad_coded_bits": comp["coded_bits"],
+                   "grad_wire_raw_bits": factor * comp["raw_bits"],
+                   "grad_wire_coded_bits": factor * comp["coded_bits"], **om}
         for k, v in comp.items():
             if k.startswith("hist_"):
                 metrics[f"grad_{k}"] = v

@@ -14,9 +14,12 @@ from jax.sharding import PartitionSpec as P
 
 from repro.comm import (CollectiveLedger, CompressionSpec, all_gather,
                         all_gather_bitexact, all_gather_bitexact_chunked,
-                        all_reduce, psum_bitexact, psum_bitexact_chunked)
+                        all_gather_compressed, all_reduce,
+                        all_reduce_compressed, psum_bitexact,
+                        psum_bitexact_chunked, ring_all_gather,
+                        ring_all_reduce)
 from repro.core.codebook import build_codebook
-from repro.core.symbols import bf16_planes_np
+from repro.core.symbols import SCHEMES, bf16_planes_np
 
 pytestmark = pytest.mark.skipif(jax.device_count() < 8,
                                 reason="needs 8 host devices")
@@ -326,3 +329,182 @@ class TestOtherCollectives:
         per_dev_payload = 4 * 8 * 16
         assert float(stats["raw_wire_bits"]) == pytest.approx(
             8 * per_dev_payload)                 # factor 1
+
+
+# ---------------------------------------------------------------------------
+# Ring transport: payload stays Huffman-coded on every hop
+# ---------------------------------------------------------------------------
+def _mesh_k(k):
+    """First-k-devices submesh (ring tests sweep shard counts 2/4/8)."""
+    return jax.sharding.Mesh(np.asarray(jax.devices()[:k]), ("data",))
+
+
+def _books_for_scheme(x, scheme_name):
+    planes = SCHEMES[scheme_name].to_symbols(np.asarray(x))
+    return {p: build_codebook(np.bincount(s.reshape(-1), minlength=256))
+            for p, s in planes.items()}
+
+
+def _int_valued(shape, dtype, lo, hi, seed):
+    """Integer-valued float data: sums are exact in the wire dtype, so a
+    ring reduction (any association order) is bit-identical to psum."""
+    rng = np.random.default_rng(seed)
+    return rng.integers(lo, hi, size=shape).astype(dtype)
+
+
+class TestRingTransport:
+    _KEYS = ("raw_wire_bits", "coded_wire_bits", "payload_raw_bits",
+             "payload_coded_bits")
+
+    def _run(self, fn, x, k, check=True):
+        mesh = _mesh_k(k)
+
+        @smap(mesh, P("data"), (P("data"), P()), check=check)
+        def f(xs):
+            y, stats = fn(xs)
+            return y[None], _psum_stats(stats)
+
+        y, stats = f(jnp.asarray(x))
+        return np.asarray(y), {s: np.asarray(v) for s, v in stats.items()}
+
+    @pytest.mark.parametrize("k", [2, 4, 8])
+    @pytest.mark.parametrize("scheme", ["bf16", "e4m3"])
+    def test_ring_all_gather_bitexact(self, k, scheme):
+        dt = jnp.bfloat16 if scheme == "bf16" else jnp.float8_e4m3fn
+        rng = np.random.default_rng(20 + k)
+        x = jnp.asarray(rng.normal(size=(k, 4, 16)), dt)
+        books = _books_for_scheme(x, scheme)
+        y, stats = self._run(
+            lambda xs: ring_all_gather(xs, "data", books, scheme, chunk=16,
+                                       decode_backend="scan"), x, k)
+        got = y[0].reshape(np.asarray(x, np.float32).shape)
+        assert (got.astype(np.float32) == np.asarray(x, np.float32)).all()
+        # hops follows the global/n stat convention: psum reads k-1
+        assert float(stats["hops"]) == k - 1
+
+    @pytest.mark.parametrize("k", [2, 4, 8])
+    @pytest.mark.parametrize("scheme", ["bf16", "e4m3"])
+    def test_ring_all_reduce_bitexact_vs_psum(self, k, scheme):
+        # Integer-valued payloads: every partial sum is exactly
+        # representable in the wire dtype, so ring order == psum order.
+        dt = jnp.bfloat16 if scheme == "bf16" else jnp.float8_e4m3fn
+        x = jnp.asarray(_int_valued((k, 4, 16), np.float32, -2, 3, 30 + k), dt)
+        books = _books_for_scheme(x, scheme)
+        y, _ = self._run(
+            lambda xs: ring_all_reduce(xs, "data", books, scheme, chunk=16,
+                                       decode_backend="scan"), x, k)
+        mesh = _mesh_k(k)
+
+        @smap(mesh, P("data"), P("data"))
+        def plain(xs):
+            return jax.lax.psum(xs.astype(jnp.float32), "data")[None]
+
+        want = np.asarray(plain(jnp.asarray(x)), np.float32)[0]
+        got = y[0].reshape(want.shape).astype(np.float32)
+        np.testing.assert_array_equal(got, want)
+
+    def test_ring_all_reduce_close_on_gaussian(self):
+        # Non-integer data: ring partial sums round per hop in bf16 —
+        # the honest compressed-ring semantics; close to psum, not equal.
+        rng = np.random.default_rng(5)
+        x = rng.normal(size=(8, 4, 32)).astype(jnp.bfloat16)
+        books = _books_for(x)
+        y, _ = self._run(
+            lambda xs: ring_all_reduce(xs, "data", books, "bf16", chunk=64,
+                                       decode_backend="scan"), x, 8)
+        want = np.asarray(x, np.float32).sum(0)
+        got = y[0].reshape(want.shape).astype(np.float32)
+        np.testing.assert_allclose(got, want, rtol=0.1, atol=0.1)
+
+    def test_ring_pallas_decode_backend(self):
+        x = jnp.asarray(_int_valued((4, 4, 16), np.float32, -2, 3, 44),
+                        jnp.bfloat16)
+        books = _books_for_scheme(x, "bf16")
+        ys, _ = self._run(
+            lambda xs: ring_all_reduce(xs, "data", books, "bf16", chunk=32,
+                                       decode_backend="scan"), x, 4)
+        yp, _ = self._run(
+            lambda xs: ring_all_reduce(xs, "data", books, "bf16", chunk=32,
+                                       decode_backend="pallas"), x, 4,
+            check=False)
+        np.testing.assert_array_equal(ys[0], yp[0])
+
+    def test_ring_gather_ledger_parity_with_monolithic(self):
+        # Re-encoding under the fixed codebook is bit-preserving, so the
+        # summed per-hop traffic must equal the monolithic accounting
+        # exactly; the ring additionally exposes the per-hop breakdown.
+        rng = np.random.default_rng(6)
+        x = rng.normal(size=(8, 4, 32)).astype(jnp.bfloat16)
+        books = _books_for(x)
+        ym, sm = self._run(
+            lambda xs: all_gather_bitexact(xs, "data", books, "bf16"), x, 8)
+        yr, sr = self._run(
+            lambda xs: ring_all_gather(xs, "data", books, "bf16", chunk=64,
+                                       decode_backend="scan"), x, 8)
+        assert (ym == yr).all()                    # identical decoded result
+        for key in self._KEYS:
+            assert float(sm[key]) == float(sr[key]), key
+        hops = sr["hop_coded_bits"]                # (n-1,) psummed
+        assert hops.shape == (7,)
+        assert (hops > 0).all()
+        assert float(hops.sum()) == pytest.approx(
+            float(sr["coded_wire_bits"]), rel=1e-6)
+
+    def test_ring_all_reduce_ledger_analytic_volume(self):
+        k = 8
+        rng = np.random.default_rng(7)
+        x = rng.normal(size=(k, 4, 32)).astype(jnp.bfloat16)
+        books = _books_for(x)
+        _, s = self._run(
+            lambda xs: ring_all_reduce(xs, "data", books, "bf16", chunk=64,
+                                       decode_backend="scan"), x, k)
+        per_dev_raw = 4 * 32 * 16                   # bf16 bits per shard
+        # psummed raw wire == analytic ring volume 2(n-1)/n × global payload
+        assert float(s["raw_wire_bits"]) == pytest.approx(
+            2 * (k - 1) * per_dev_raw)
+        # measured per-hop coded accounting: 2(n-1) hops, all coded
+        assert s["hop_coded_bits"].shape == (2 * (k - 1),)
+        assert (s["hop_coded_bits"] > 0).all()
+        assert 0 < float(s["coded_wire_bits"]) <= float(s["raw_wire_bits"])
+        assert float(s["hop_coded_bits"].sum()) == pytest.approx(
+            float(s["coded_wire_bits"]), rel=1e-6)
+
+    def test_transport_dispatch_parity(self):
+        # One registry-driven entry point; all transports decode alike.
+        rng = np.random.default_rng(8)
+        x = rng.normal(size=(4, 4, 32)).astype(jnp.bfloat16)
+        books = _books_for(x)
+        results = {}
+        for transport in ("monolithic", "chunked", "ring"):
+            spec = CompressionSpec.from_books(
+                books, "bf16", mode="bitexact", transport=transport,
+                chunk=64, decode_backend="scan")
+            yg, _ = self._run(
+                lambda xs, s=spec: all_gather_compressed(xs, "data", books, s),
+                x, 4)
+            results[transport] = yg
+        assert (results["monolithic"] == results["chunked"]).all()
+        assert (results["monolithic"] == results["ring"]).all()
+
+    def test_all_reduce_compressed_dispatch(self):
+        x = jnp.asarray(_int_valued((4, 4, 16), np.float32, -2, 3, 45),
+                        jnp.bfloat16)
+        books = _books_for_scheme(x, "bf16")
+        outs = {}
+        for transport in ("monolithic", "chunked", "ring"):
+            spec = CompressionSpec.from_books(
+                books, "bf16", mode="bitexact", transport=transport,
+                chunk=32, decode_backend="scan")
+            y, _ = self._run(
+                lambda xs, s=spec: all_reduce_compressed(xs, "data", books, s),
+                x, 4)
+            outs[transport] = y
+        assert (outs["monolithic"] == outs["chunked"]).all()
+        assert (outs["monolithic"] == outs["ring"]).all()
+
+    def test_unknown_transport_rejected(self):
+        with pytest.raises(ValueError, match="unknown transport"):
+            CompressionSpec(mode="bitexact", transport="carrier-pigeon")
+        from repro.comm import get_transport
+        with pytest.raises(ValueError, match="unknown transport"):
+            get_transport("carrier-pigeon")

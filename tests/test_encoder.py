@@ -139,3 +139,58 @@ class TestRegistry:
         reg.rebuild([key])
         book = reg.get(key)
         assert book.lengths[255] < book.lengths[0]
+
+
+class TestRecodeFastPath:
+    """recode_chunks_jit: per-hop re-encode of already-blocked symbols."""
+
+    def test_recode_matches_encode_chunked(self):
+        from repro.core.encoder import (chunk_counts_for, encode_chunked_jit,
+                                        recode_chunks_jit)
+        data = _data(21, 5000)                      # 5000 = partial tail chunk
+        book = _book_for(data)
+        chunk = 512
+        words, bits = encode_chunked_jit(jnp.asarray(data),
+                                         jnp.asarray(book.codes),
+                                         jnp.asarray(book.lengths),
+                                         chunk=chunk, max_len=book.max_len)
+        # blocked symbols, exactly what a ring hop's decoder produces
+        counts = chunk_counts_for(len(data), chunk)
+        nb = len(counts)
+        padded = np.zeros((nb, chunk), np.int32)
+        padded.reshape(-1)[:len(data)] = data
+        rwords, rbits = recode_chunks_jit(jnp.asarray(padded),
+                                          jnp.asarray(counts),
+                                          jnp.asarray(book.codes),
+                                          jnp.asarray(book.lengths),
+                                          max_len=book.max_len)
+        np.testing.assert_array_equal(np.asarray(rbits), np.asarray(bits))
+        np.testing.assert_array_equal(np.asarray(rwords), np.asarray(words))
+
+    def test_recode_roundtrip_after_reduce(self):
+        # decode → add (symbols change) → recode → decode again is lossless
+        from repro.core.encoder import (chunk_counts_for, decode_chunks_jit,
+                                        recode_chunks_jit)
+        rng = np.random.default_rng(22)
+        vals = rng.integers(0, 100, size=1000).astype(np.uint8)
+        book = _book_for(np.arange(256).astype(np.uint8))  # total code
+        chunk = 256
+        counts = chunk_counts_for(len(vals), chunk)
+        nb = len(counts)
+        blocks = np.zeros((nb, chunk), np.int32)
+        blocks.reshape(-1)[:len(vals)] = vals
+        blocks = (blocks + 7) % 256                  # "reduced" symbols
+        w, b = recode_chunks_jit(jnp.asarray(blocks), jnp.asarray(counts),
+                                 jnp.asarray(book.codes),
+                                 jnp.asarray(book.lengths),
+                                 max_len=book.max_len)
+        t = book.tables
+        out = decode_chunks_jit(w, jnp.asarray(counts),
+                                jnp.asarray(t.first_code),
+                                jnp.asarray(t.base_index),
+                                jnp.asarray(t.num_codes),
+                                jnp.asarray(t.sorted_symbols), chunk=chunk,
+                                max_len=t.max_len)
+        got = np.asarray(out).reshape(-1)[:len(vals)] % 256
+        want = np.asarray(blocks).reshape(-1)[:len(vals)]
+        np.testing.assert_array_equal(got, want)

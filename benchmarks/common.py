@@ -32,8 +32,13 @@ from repro.train import make_train_step, train_state_init
 N_SHARDS = 64          # the paper's TP width
 SYMBOL_BITS = 8
 
+# Every emit() lands here so `benchmarks.run --json` can persist a run
+# and `--compare` can gate regressions against BENCH_baseline.json.
+RESULTS: Dict[str, Dict[str, object]] = {}
+
 
 def emit(name: str, us_per_call: float, derived: str) -> None:
+    RESULTS[name] = {"us": float(us_per_call), "derived": str(derived)}
     print(f"{name},{us_per_call:.3f},{derived}")
 
 

@@ -67,13 +67,16 @@ def _inner() -> None:
     want = np.asarray(want, np.float32)
 
     results = {}
-    for name in ("monolithic", "chunked", "ring"):
-        transport = TRANSPORTS[name]
+    for name in ("monolithic", "chunked", "ring", "ring_multisym",
+                 "ring_f32"):
+        transport = TRANSPORTS[name.split("_")[0]]
+        backend = "multisym" if name == "ring_multisym" else "scan"
+        carry = "f32" if name == "ring_f32" else "wire"
 
         @smap
-        def run(xs, t=transport):
+        def run(xs, t=transport, b=backend, c=carry):
             y, stats = t.all_reduce(xs[0], "data", books, "bf16",
-                                    chunk=_CHUNK, decode_backend="scan")
+                                    chunk=_CHUNK, decode_backend=b, carry=c)
             return y[None], {k: jax.lax.psum(v, "data")
                              for k, v in stats.items()}
 
@@ -90,6 +93,9 @@ def _inner() -> None:
         emit(f"ring_traffic.{name}.coded_wire_bits", 0.0, f"{coded_wire:.0f}")
         emit(f"ring_traffic.{name}.wire_ratio", 0.0,
              f"{coded_wire / (float(stats['raw_wire_bits']) or 1.0):.4f}")
+    # the f32 carry ships two wire-dtype components per hop: raw 2×
+    emit("ring_traffic.f32_carry_raw_ratio", 0.0,
+         f"{float(results['ring_f32'][1]['raw_wire_bits']) / float(results['ring'][1]['raw_wire_bits']):.2f}")
     hop_bits = results["ring"][1]["hop_coded_bits"]      # (2(n-1),) psummed
     hops = int(float(results["ring"][1]["hops"]))        # psummed global/n
     emit("ring_traffic.ring.hops", 0.0, f"{hops}")
@@ -118,11 +124,23 @@ def run() -> None:
     proc = subprocess.run([sys.executable, "-m", "benchmarks.ring_traffic"],
                           env=env, capture_output=True, text=True,
                           timeout=1800, cwd=str(root))
-    sys.stdout.write(proc.stdout)
     sys.stderr.write(proc.stderr)
     if proc.returncode != 0:
+        sys.stdout.write(proc.stdout)
         raise RuntimeError(f"ring_traffic subprocess failed "
                            f"(rc={proc.returncode})")
+    # Re-emit the child's CSV rows so they land in common.RESULTS (and
+    # thus in `run.py --json` output) as well as on stdout.
+    from .common import emit
+    for line in proc.stdout.splitlines():
+        parts = line.split(",", 2)
+        if len(parts) == 3 and parts[0].startswith("ring_traffic."):
+            try:
+                emit(parts[0], float(parts[1]), parts[2])
+            except ValueError:
+                sys.stdout.write(line + "\n")
+        else:
+            sys.stdout.write(line + "\n")
 
 
 if __name__ == "__main__":

@@ -1,26 +1,91 @@
-"""Benchmark driver — one function per paper table/figure.
+"""Benchmark driver — one function per paper table/figure, plus the
+perf-trajectory gate.
 
-Prints ``name,us_per_call,derived`` CSV.  Figures map to the paper:
+Prints ``name,us_per_call,derived`` CSV rows (collected in
+``common.RESULTS``).  Figures map to the paper:
   fig1  PMF + entropy of one FFN1 activation shard
   fig2  per-shard ideal vs Huffman compressibility (1152-shard analogue)
   fig3  KL(shard ‖ average PMF)
   fig4  fixed-codebook compressibility (the headline claims)
   dtype sweep over bf16/e4m3/e3m2/e2m3/e2m1
   encoder single-stage vs three-stage timing + wire accounting
+  decoder backend (scan/pallas/multisym) × chunk-size sweep
   traffic end-to-end compressed-training ledger
+
+Perf trajectory:
+  ``--json PATH``          write this run's results as JSON;
+  ``--compare BASELINE``   fail (exit 1) on regression vs a previous
+                           ``--json`` file (``BENCH_baseline.json`` is
+                           the committed one) — timing rows must not be
+                           more than ``--tolerance`` slower, and
+                           higher-is-better rows (``*_per_sec``,
+                           ``*_speedup``, ``*_mbps``) must not fall
+                           below baseline/(1+tolerance).  CI runs the
+                           decoder suite at tiny sizes
+                           (``REPRO_BENCH_TINY=1``) with a wide
+                           tolerance: absolute times are machine-noisy,
+                           the ratios are the real gate.
 """
 from __future__ import annotations
 
+import argparse
+import json
 import sys
 import time
+from typing import Dict, List
+
+# Rows whose `derived` field is a higher-is-better number.  `_speedup`
+# rows are same-run ratios (machine-portable → tight gate);
+# `_per_sec`/`_mbps` are absolute throughputs (machine-dependent →
+# loose gate, like timings).
+_HIGHER_BETTER = ("_per_sec", "_speedup", "_mbps")
+_PORTABLE_RATIO = ("_speedup",)
 
 
-def main() -> None:
-    from . import (codelen_ablation, collective_traffic, decoder_throughput,
-                   dtype_sweep, encoder_throughput, fig1_pmf, fig2_per_shard,
-                   fig3_kl, fig4_fixed_codebook, ring_traffic, tensor_kinds)
+def compare_results(baseline: Dict[str, dict], current: Dict[str, dict],
+                    tolerance: float,
+                    ratio_tolerance: float = None) -> List[str]:
+    """Regression check: current vs baseline, only for shared names.
 
-    print("name,us_per_call,derived")
+    ``tolerance`` bounds timing and absolute-throughput rows (machine/
+    load sensitive); ``ratio_tolerance`` (default: same) bounds the
+    ``_speedup`` rows, which are same-run ratios and hence far less
+    noisy — CI passes a tight ratio tolerance with a loose timing one.
+    """
+    if ratio_tolerance is None:
+        ratio_tolerance = tolerance
+    failures = []
+    for name, cur in sorted(current.items()):
+        base = baseline.get(name)
+        if base is None:
+            continue
+        if any(name.endswith(sfx) for sfx in _HIGHER_BETTER):
+            try:
+                b, c = float(base["derived"]), float(cur["derived"])
+            except (TypeError, ValueError):
+                continue
+            tol = (ratio_tolerance
+                   if any(name.endswith(s) for s in _PORTABLE_RATIO)
+                   else tolerance)
+            if b > 0 and c < b / (1.0 + tol):
+                failures.append(
+                    f"{name}: {c:.4g} fell below baseline {b:.4g} "
+                    f"/ (1 + {tol})")
+        else:
+            b, c = float(base.get("us", 0)), float(cur.get("us", 0))
+            if b > 0 and c > 0 and c > b * (1.0 + tolerance):
+                failures.append(
+                    f"{name}: {c:.1f}us exceeds baseline {b:.1f}us "
+                    f"× (1 + {tolerance})")
+    return failures
+
+
+def main(argv=None) -> None:
+    from . import (codelen_ablation, collective_traffic, common,
+                   decoder_throughput, dtype_sweep, encoder_throughput,
+                   fig1_pmf, fig2_per_shard, fig3_kl, fig4_fixed_codebook,
+                   ring_traffic, tensor_kinds)
+
     suites = [
         ("fig1", fig1_pmf.run),
         ("fig2", fig2_per_shard.run),
@@ -34,13 +99,58 @@ def main() -> None:
         ("traffic", collective_traffic.run),
         ("ring_traffic", ring_traffic.run),
     ]
-    only = sys.argv[1] if len(sys.argv) > 1 else None
+    parser = argparse.ArgumentParser(
+        prog="benchmarks.run", description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    parser.add_argument("suites", nargs="*",
+                        help="suites to run (default: all)")
+    parser.add_argument("--json", metavar="PATH",
+                        help="write results as JSON")
+    parser.add_argument("--compare", metavar="BASELINE",
+                        help="fail on regression vs a previous --json file")
+    parser.add_argument("--tolerance", type=float, default=0.2,
+                        help="allowed relative regression for timing and "
+                             "absolute-throughput rows (default 0.2)")
+    parser.add_argument("--ratio-tolerance", type=float, default=None,
+                        help="allowed relative regression for _speedup "
+                             "ratio rows (default: --tolerance)")
+    args = parser.parse_args(argv)
+    known = {name for name, _ in suites}
+    unknown = [s for s in args.suites if s not in known]
+    if unknown:
+        parser.error(f"unknown suites {unknown}; choose from {sorted(known)}")
+
+    print("name,us_per_call,derived")
     for name, fn in suites:
-        if only and only != name:
+        if args.suites and name not in args.suites:
             continue
         t0 = time.time()
         fn()
         print(f"# {name} done in {time.time() - t0:.1f}s", file=sys.stderr)
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(common.RESULTS, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"# wrote {len(common.RESULTS)} rows to {args.json}",
+              file=sys.stderr)
+    if args.compare:
+        with open(args.compare) as f:
+            baseline = json.load(f)
+        failures = compare_results(baseline, common.RESULTS, args.tolerance,
+                                   args.ratio_tolerance)
+        if failures:
+            for line in failures:
+                print(f"REGRESSION {line}", file=sys.stderr)
+            sys.exit(1)
+        shared = sum(1 for k in common.RESULTS if k in baseline)
+        if shared == 0:
+            # A rename/namespace drift must not silently disarm the gate.
+            print(f"REGRESSION no rows shared with {args.compare} — "
+                  f"baseline stale or rows renamed", file=sys.stderr)
+            sys.exit(1)
+        print(f"# compare OK: {shared} shared rows within tolerance "
+              f"{args.tolerance}", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -43,7 +43,8 @@ __all__ = ["CompressionSpec", "payload_stats", "histogram256_xla",
 
 _MODES = ("off", "ledger", "bitexact")
 KNOWN_TRANSPORTS = ("monolithic", "chunked", "ring")
-_DECODE_BACKENDS = ("pallas", "scan")
+_DECODE_BACKENDS = ("pallas", "scan", "multisym", "multisym_pallas")
+_CARRIES = ("wire", "f32")
 
 
 def histogram256_xla(sym: jnp.ndarray) -> jnp.ndarray:
@@ -67,7 +68,12 @@ class CompressionSpec:
     # Bitexact wire strategy (repro.comm.transport registry).
     transport: str = "monolithic"        # monolithic | chunked | ring
     chunk: int = DEFAULT_CHUNK           # chunked/ring symbols per chunk
-    decode_backend: str = "pallas"       # pallas | scan
+    decode_backend: str = "pallas"       # pallas|scan|multisym|multisym_pallas
+    # Ring all-reduce accumulation dtype across hops: "wire" reduces in
+    # the scheme dtype (honest link semantics); "f32" carries float32
+    # partial sums as two wire-dtype components — training-grade
+    # accuracy at 2× hop payload (repro.comm.ring).
+    carry: str = "wire"                  # wire | f32
 
     def __post_init__(self):
         if self.mode not in _MODES:
@@ -79,6 +85,12 @@ class CompressionSpec:
             raise ValueError(f"unknown decode backend "
                              f"{self.decode_backend!r}; "
                              f"one of {_DECODE_BACKENDS}")
+        if self.carry not in _CARRIES:
+            raise ValueError(f"unknown carry {self.carry!r}; "
+                             f"one of {_CARRIES}")
+        if self.carry != "wire" and self.transport != "ring":
+            raise ValueError(f"carry={self.carry!r} requires the ring "
+                             f"transport, got {self.transport!r}")
         if self.chunk <= 0:
             raise ValueError(f"chunk must be positive, got {self.chunk}")
 
@@ -102,7 +114,8 @@ class CompressionSpec:
                       scheme_name: str = "bf16", mode: str = "ledger",
                       transport: str = "monolithic",
                       chunk: int = DEFAULT_CHUNK,
-                      decode_backend: str = "pallas") -> "CompressionSpec":
+                      decode_backend: str = "pallas",
+                      carry: str = "wire") -> "CompressionSpec":
         scheme = SCHEMES[scheme_name]
         lens = []
         ids = []
@@ -113,19 +126,20 @@ class CompressionSpec:
         return cls(mode=mode, scheme_name=scheme_name, tensor_kind=tensor_kind,
                    plane_lengths=tuple(lens), book_ids=tuple(ids),
                    transport=transport, chunk=chunk,
-                   decode_backend=decode_backend)
+                   decode_backend=decode_backend, carry=carry)
 
     @classmethod
     def from_books(cls, books: Dict[str, Codebook], scheme_name: str,
                    tensor_kind: str = "generic", mode: str = "ledger",
                    transport: str = "monolithic", chunk: int = DEFAULT_CHUNK,
-                   decode_backend: str = "pallas") -> "CompressionSpec":
+                   decode_backend: str = "pallas",
+                   carry: str = "wire") -> "CompressionSpec":
         lens = tuple((p, tuple(int(v) for v in b.lengths))
                      for p, b in books.items())
         ids = tuple((p, b.book_id) for p, b in books.items())
         return cls(mode=mode, scheme_name=scheme_name, tensor_kind=tensor_kind,
                    plane_lengths=lens, book_ids=ids, transport=transport,
-                   chunk=chunk, decode_backend=decode_backend)
+                   chunk=chunk, decode_backend=decode_backend, carry=carry)
 
 
 def _planes_of(x: jnp.ndarray, spec: CompressionSpec) -> Dict[str, jnp.ndarray]:

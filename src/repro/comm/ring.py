@@ -7,26 +7,38 @@ alternative the paper's encoder is built for (and ZipCCL-style
 compressed collectives realize): a ``jax.lax.ppermute`` ring over
 ``ChunkedStream`` words where **every hop**
 
-    decode (chunked canonical walk / Pallas kernel)
+    decode (chunked canonical walk / Pallas kernel / multisym LUT)
       → reduce (add for all_reduce, append for all_gather)
         → re-encode before forwarding
 
 so each of the n−1 (gather) / 2(n−1) (reduce) hops carries coded bits,
 and the ledger records the *measured* per-hop wire traffic instead of
-an analytic estimate.  Gather hops forward unchanged symbols, so they
-re-encode straight from the decoder's block layout via the
-``recode_chunks_jit`` fast path (no flatten/pad, no table re-derive);
-reduce hops produce *new* partial-sum values, so they re-extract planes
-and run the standard chunked encoder.  The fixed codebook is what makes
-either viable: no codebook rides the wire and re-encoding is a single
-LUT pass (the paper's single-stage property, per hop).
+an analytic estimate.
+
+Every hop runs the **fused hop codec**: the decoder's (NB, chunk)
+symbol blocks feed the ``recode_chunks_jit`` block fast path directly —
+decode → reduce → re-encode is one region of the lowered program with
+no flatten/pad/re-chunk of the full symbol stream in between.  Gather
+hops forward unchanged symbols, so their blocks recode as-is; reduce
+hops add the local partial-sum contribution on the *padded block
+layout* (pad slots decode to value 0 and re-mask on encode) and recode
+the updated blocks.  The fixed codebook is what makes either viable: no
+codebook rides the wire and re-encoding is a single LUT pass (the
+paper's single-stage property, per hop).  The decode side is selected
+by ``decode_backend`` (``scan`` / ``pallas`` / ``multisym`` /
+``multisym_pallas`` — see ``core.encoder.decode_chunked``).
 
 Numerics: all_gather forwards values unchanged, so it is bit-exact for
 any input.  all_reduce accumulates partial sums in the scheme's wire
-dtype (a real compressed ring reduces in the link dtype); the ring-order
-summation is bit-exact vs ``jax.lax.psum`` whenever the additions are
-exact in that dtype (e.g. integer-valued payloads — see tests) and
-agrees to normal floating-point reordering tolerance otherwise.
+dtype by default (``carry="wire"`` — a real compressed ring reduces in
+the link dtype); the ring-order summation is bit-exact vs
+``jax.lax.psum`` whenever the additions are exact in that dtype (e.g.
+integer-valued payloads — see tests) and agrees to normal
+floating-point reordering tolerance otherwise.  ``carry="f32"`` keeps
+the partial sums in float32 across hops for training-grade accuracy:
+each hop ships the running sum as **two** wire-dtype components (the
+rounded value plus its residual), doubling hop payload — the ledger
+measures exactly that 2×.
 
 Stats follow the transport convention (replicated scalars = global/n so
 a caller psum recovers the global number) plus ring-only keys:
@@ -52,7 +64,9 @@ from ..core.symbols import SCHEMES
 from .compression import histogram256_xla
 from .transport import axis_size, decode_blocks, encode_planes, reassemble
 
-__all__ = ["ring_all_gather", "ring_all_reduce"]
+__all__ = ["ring_all_gather", "ring_all_reduce", "RING_CARRIES"]
+
+RING_CARRIES = ("wire", "f32")
 
 
 def _fwd_perm(n: int):
@@ -86,13 +100,14 @@ def ring_all_gather(x, axis_name: str, books: Dict[str, Codebook],
 
     Hop h forwards the stream received at hop h−1 (starting with the
     local shard's own stream).  The incoming chunk is decoded on device
-    (appended to the gathered result) and re-encoded via the
-    ``recode_chunks_jit`` fast path before the next forward — the wire
-    never carries raw symbols.  Because the codebook is fixed and the
-    codec lossless, the re-encoded stream is bit-identical to the
-    original, so summed hop traffic equals the monolithic transport's
-    coded wire bits exactly; ``hop_coded_bits`` additionally exposes the
-    per-hop breakdown a link-level roofline needs.
+    (appended to the gathered result) and re-encoded via the fused hop
+    codec — the decoder's blocks go straight into ``recode_chunks_jit``
+    — before the next forward; the wire never carries raw symbols.
+    Because the codebook is fixed and the codec lossless, the re-encoded
+    stream is bit-identical to the original, so summed hop traffic
+    equals the monolithic transport's coded wire bits exactly;
+    ``hop_coded_bits`` additionally exposes the per-hop breakdown a
+    link-level roofline needs.
     """
     n = axis_size(axis_name)
     scheme = SCHEMES[scheme_name]
@@ -148,18 +163,28 @@ def ring_all_gather(x, axis_name: str, books: Dict[str, Codebook],
 
 def ring_all_reduce(x, axis_name: str, books: Dict[str, Codebook],
                     scheme_name: str = "bf16", *, chunk: int = DEFAULT_CHUNK,
-                    decode_backend: str = "pallas"
+                    decode_backend: str = "pallas", carry: str = "wire"
                     ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
     """Ring all-reduce (reduce-scatter + all-gather), coded on every hop.
 
     The local tensor splits into n segments.  Reduce-scatter phase
-    (n−1 hops): each hop encodes the current partial-sum segment,
-    ppermutes the coded words, decodes, and **adds** the local
-    contribution in the wire dtype — decode → add → re-encode, exactly
-    the per-stage pipeline of a hardware ring.  All-gather phase
-    (n−1 hops): the fully-reduced segments travel the ring, decoded and
-    re-encoded per hop.  Total 2(n−1) coded hops; analytic raw volume
-    2(n−1)/n × payload.
+    (n−1 hops): each hop ppermutes the coded partial-sum segment, then
+    runs the fused hop codec — decode blocks → reassemble on the padded
+    block layout → **add** the local contribution → re-extract planes →
+    recode blocks — exactly the per-stage pipeline of a hardware ring,
+    with no full-stream re-chunking between decode and encode.  The
+    final reduce-hop encode *is* the first gather-phase send, so no
+    codec pass is wasted.  All-gather phase (n−1 hops): the fully
+    reduced segments travel the ring; forwarded symbols are unchanged,
+    so each hop recodes the decoder's blocks directly.  Total 2(n−1)
+    coded hops; analytic raw volume 2(n−1)/n × payload.
+
+    ``carry`` selects the accumulation dtype across hops: ``"wire"``
+    reduces in the scheme dtype (honest link semantics, 1× payload);
+    ``"f32"`` keeps float32 partial sums, shipping each hop as two
+    wire-dtype components — the rounded value and its residual — for
+    training-grade accuracy at exactly 2× hop payload (measured by the
+    ledger, pinned in tests).
 
     ``hop_coded_bits`` records measured coded bits per hop — the
     reduce-scatter hops carry partial sums whose compressibility under
@@ -167,14 +192,18 @@ def ring_all_reduce(x, axis_name: str, books: Dict[str, Codebook],
     number a ZipCCL-style deployment needs and an endpoint-decode ledger
     cannot produce.
     """
+    if carry not in RING_CARRIES:
+        raise ValueError(f"unknown carry {carry!r}; one of {RING_CARRIES}")
     n = axis_size(axis_name)
     scheme = SCHEMES[scheme_name]
     size = x.size
     seg_len = -(-size // n)
-    flat = x.reshape(-1)
+    acc_dtype = jnp.float32 if carry == "f32" else x.dtype
+    ncomp = 2 if carry == "f32" else 1
+    flat = x.reshape(-1).astype(acc_dtype)
     if n * seg_len > size:
         flat = jnp.concatenate(
-            [flat, jnp.zeros((n * seg_len - size,), x.dtype)])
+            [flat, jnp.zeros((n * seg_len - size,), acc_dtype)])
     acc = flat.reshape(n, seg_len)
     i = jax.lax.axis_index(axis_name)
     perm = _fwd_perm(n)
@@ -182,51 +211,95 @@ def ring_all_reduce(x, axis_name: str, books: Dict[str, Codebook],
     counts_np = chunk_counts_for(seg_len, eff_chunk)
     counts = jnp.asarray(counts_np)
     nb = int(counts_np.shape[0])
+    pad_len = nb * eff_chunk
 
     payload_coded = jax.lax.psum(
         _coded_payload_bits(x, books, scheme_name), axis_name)
 
-    def hop(vals):
-        """Encode → ppermute → decode one segment; returns (vals, bits).
+    def pad_seg(seg):
+        if pad_len == seg_len:
+            return seg
+        return jnp.concatenate(
+            [seg, jnp.zeros((pad_len - seg_len,), seg.dtype)])
 
-        The segment's values changed on the previous hop (partial-sum
-        add), so planes are re-extracted and chunk-encoded; the recode
-        fast path only applies to forward-unchanged streams (gather).
+    def to_comps(vals):
+        """Padded acc-dtype values → wire-dtype hop components."""
+        if carry == "wire":
+            return (vals,)
+        hi = vals.astype(x.dtype)
+        lo = (vals - hi.astype(jnp.float32)).astype(x.dtype)
+        return (hi, lo)
+
+    def from_comps(comps):
+        if carry == "wire":
+            return comps[0]
+        return comps[0].astype(jnp.float32) + comps[1].astype(jnp.float32)
+
+    def encode_cur(vals):
+        """Fused-side encode: planes extracted per component on the
+        padded layout, packed by the block recode path (pad slots carry
+        zero bits via the counts mask — bit-identical to a fresh
+        chunked encode of the unpadded segment)."""
+        enc = {}
+        for ci, cv in enumerate(to_comps(vals)):
+            for plane, sym in scheme.to_symbols_jnp(cv).items():
+                b = books[plane]
+                enc[(ci, plane)] = recode_chunks_jit(
+                    sym.reshape(nb, eff_chunk), counts,
+                    jnp.asarray(b.codes), jnp.asarray(b.lengths),
+                    max_len=b.max_len)
+        return enc
+
+    def decode_hop(enc):
+        """ppermute the coded words, decode to blocks (selected backend).
+
+        Returns (blocks by (component, plane), component values) — the
+        blocks feed the gather-phase recode fast path, the values feed
+        the reduce-phase add.
         """
-        enc = encode_planes(vals, books, scheme_name, chunk=eff_chunk)
-        bits = _bits_sum(enc)
-        dec = {}
-        for plane, (words, _, _) in enc.items():
+        blocks = {}
+        for key, (words, _) in enc.items():
             rw = jax.lax.ppermute(words, axis_name, perm)
-            blocks = decode_blocks(rw, counts, books[plane], eff_chunk,
-                                   decode_backend)
-            dec[plane] = concat_chunks(blocks, counts_np)
-        return reassemble(dec, scheme_name, (seg_len,), x.dtype), bits
+            blocks[key] = decode_blocks(rw, counts, books[key[1]], eff_chunk,
+                                        decode_backend)
+        comps = tuple(
+            reassemble({p: blocks[(ci, p)].reshape(-1).astype(jnp.uint8)
+                        for p in scheme.planes},
+                       scheme_name, (pad_len,), x.dtype)
+            for ci in range(ncomp))
+        return blocks, comps
 
     hop_coded = []
-    # --- reduce-scatter: n−1 hops of decode → add → (re)encode ---------
+    # --- reduce-scatter: n−1 fused decode → add → re-encode hops -------
+    cur = pad_seg(jnp.take(acc, i, axis=0))
+    enc = encode_cur(cur)
     for t in range(n - 1):
-        seg = jnp.take(acc, (i - t) % n, axis=0)
-        vals, bits = hop(seg)
-        hop_coded.append(jax.lax.psum(bits, axis_name) / n)
-        acc = acc.at[(i - t - 1) % n].add(vals)
+        hop_coded.append(jax.lax.psum(_bits_sum(enc), axis_name) / n)
+        _, comps = decode_hop(enc)
+        local = pad_seg(jnp.take(acc, (i - t - 1) % n, axis=0))
+        cur = from_comps(comps) + local
+        enc = encode_cur(cur)
 
-    # device i now owns the fully-reduced segment (i+1)%n
+    # device i now owns the fully-reduced segment (i+1)%n; `enc` already
+    # holds its coded form — the first gather hop ships it as-is.
     own = (i + 1) % n
-    out = jnp.zeros((n, seg_len), x.dtype)
-    cur = jnp.take(acc, own, axis=0)
-    out = out.at[own].set(cur)
+    out = jnp.zeros((n, seg_len), acc_dtype).at[own].set(cur[:seg_len])
 
-    # --- all-gather: n−1 hops, reduced segments stay coded per hop -----
+    # --- all-gather: n−1 hops, blocks recode directly (fast path) ------
     for t in range(n - 1):
-        vals, bits = hop(cur)
-        hop_coded.append(jax.lax.psum(bits, axis_name) / n)
-        out = out.at[(i - t) % n].set(vals)
-        cur = vals
+        hop_coded.append(jax.lax.psum(_bits_sum(enc), axis_name) / n)
+        blocks, comps = decode_hop(enc)
+        out = out.at[(i - t) % n].set(from_comps(comps)[:seg_len])
+        if t < n - 2:                      # last hop's recode never ships
+            enc = {key: recode_chunks_jit(
+                bl, counts, jnp.asarray(books[key[1]].codes),
+                jnp.asarray(books[key[1]].lengths),
+                max_len=books[key[1]].max_len)
+                for key, bl in blocks.items()}
 
-    y = out.reshape(-1)[:size].reshape(x.shape)
+    y = out.reshape(-1)[:size].reshape(x.shape).astype(x.dtype)
 
-    raw_seg = jnp.float32(seg_len * scheme.total_symbol_bits())
+    raw_seg = jnp.float32(seg_len * scheme.total_symbol_bits() * ncomp)
     coded_wire = sum(hop_coded, jnp.zeros((), jnp.float32))
     stats = {"raw_wire_bits": 2.0 * (n - 1) * raw_seg,
              "coded_wire_bits": coded_wire,
@@ -234,7 +307,7 @@ def ring_all_reduce(x, axis_name: str, books: Dict[str, Codebook],
                                              * scheme.total_symbol_bits()) * n,
              "payload_coded_bits": payload_coded,
              "payload_header_bits": jnp.float32(
-                 32.0 * nb * len(scheme.planes) * 2 * (n - 1)),
+                 32.0 * nb * len(scheme.planes) * ncomp * 2 * (n - 1)),
              "hop_coded_bits": (jnp.stack(hop_coded) if hop_coded
                                 else jnp.zeros((0,), jnp.float32)),
              "hops": jnp.float32(2 * (n - 1)) / n}

@@ -41,8 +41,10 @@ import jax
 import jax.numpy as jnp
 
 from ..core.codebook import Codebook
-from ..core.encoder import (DEFAULT_CHUNK, decode_chunks_jit, decode_jit,
-                            encode_chunked_jit, encode_jit)
+from ..core.encoder import (DEFAULT_CHUNK, decode_chunks_jit,
+                            decode_chunks_multisym_jit, decode_jit,
+                            encode_chunked_jit, encode_jit,
+                            multisym_table_args)
 from ..core.symbols import SCHEMES
 
 __all__ = [
@@ -70,6 +72,15 @@ def axis_size(axis_name: str) -> int:
         return jax.lax.axis_size(axis_name)
     except AttributeError:           # jax 0.4.x: axis_frame *is* the size
         return int(jax.core.axis_frame(axis_name))
+
+
+def _require_wire_carry(name: str, carry: str) -> None:
+    """Endpoint-decode transports accumulate at the receiver in full
+    precision already; an f32 hop carry only means something on a ring,
+    where partial sums actually ride the wire."""
+    if carry != "wire":
+        raise ValueError(f"carry={carry!r} is only supported by the ring "
+                         f"transport, not {name!r}")
 
 
 # ------------------------------------------------------- shared plumbing
@@ -112,15 +123,26 @@ def decode_blocks(words, counts, book: Codebook, chunk: int, backend: str):
     → (NB, chunk) symbol blocks.  The one implementation every transport
     decodes through (gathered peers, ring hops)."""
     t = book.tables
-    args = (words, counts, jnp.asarray(t.first_code), jnp.asarray(t.base_index),
-            jnp.asarray(t.num_codes), jnp.asarray(t.sorted_symbols))
+    targs = (jnp.asarray(t.first_code), jnp.asarray(t.base_index),
+             jnp.asarray(t.num_codes), jnp.asarray(t.sorted_symbols))
     if backend == "pallas":
         from ..kernels.decode import decode_chunks_pallas
         from ..kernels.ops import INTERPRET
-        return decode_chunks_pallas(*args, chunk=chunk, max_len=t.max_len,
-                                    interpret=INTERPRET)
+        return decode_chunks_pallas(words, counts, *targs, chunk=chunk,
+                                    max_len=t.max_len, interpret=INTERPRET)
     if backend == "scan":
-        return decode_chunks_jit(*args, chunk=chunk, max_len=t.max_len)
+        return decode_chunks_jit(words, counts, *targs, chunk=chunk,
+                                 max_len=t.max_len)
+    if backend == "multisym":
+        return decode_chunks_multisym_jit(
+            words, counts, *multisym_table_args(book), chunk=chunk,
+            max_len=t.max_len)
+    if backend == "multisym_pallas":
+        from ..kernels.decode import decode_chunks_multisym_pallas
+        from ..kernels.ops import INTERPRET
+        return decode_chunks_multisym_pallas(
+            words, counts, *multisym_table_args(book, full=False), *targs,
+            chunk=chunk, max_len=t.max_len, interpret=INTERPRET)
     raise ValueError(f"unknown decode backend {backend!r}")
 
 
@@ -170,7 +192,7 @@ class Transport:
 
     def all_reduce(self, x, axis_name: str, books: Dict[str, Codebook],
                    scheme_name: str = "bf16", *, chunk: int = DEFAULT_CHUNK,
-                   decode_backend: str = "pallas"):
+                   decode_backend: str = "pallas", carry: str = "wire"):
         raise NotImplementedError
 
 
@@ -223,8 +245,10 @@ class MonolithicTransport(Transport):
         return y, stats
 
     def all_reduce(self, x, axis_name, books, scheme_name="bf16", *,
-                   chunk=DEFAULT_CHUNK, decode_backend="pallas"):
+                   chunk=DEFAULT_CHUNK, decode_backend="pallas",
+                   carry="wire"):
         """Gather streams, decode, add at the endpoint (decode-then-add)."""
+        _require_wire_carry(self.name, carry)
         g, stats = self.all_gather(x, axis_name, books, scheme_name)
         n = axis_size(axis_name)
         y = g.reshape((n,) + x.shape).sum(axis=0).astype(x.dtype)
@@ -277,12 +301,14 @@ class ChunkedTransport(Transport):
         return y, stats
 
     def all_reduce(self, x, axis_name, books, scheme_name="bf16", *,
-                   chunk=DEFAULT_CHUNK, decode_backend="pallas"):
+                   chunk=DEFAULT_CHUNK, decode_backend="pallas",
+                   carry="wire"):
         """Per-chunk gather → decode → add; chunk-local reduction.
 
         Numerically identical to the monolithic transport (same
         codewords, same per-peer sum order) with the same wire stats.
         """
+        _require_wire_carry(self.name, carry)
         n = axis_size(axis_name)
         enc = encode_planes(x, books, scheme_name, chunk=chunk)
         n_sym = next(iter(enc.values()))[2]
@@ -329,10 +355,12 @@ class RingTransport(Transport):
                                chunk=chunk, decode_backend=decode_backend)
 
     def all_reduce(self, x, axis_name, books, scheme_name="bf16", *,
-                   chunk=DEFAULT_CHUNK, decode_backend="pallas"):
+                   chunk=DEFAULT_CHUNK, decode_backend="pallas",
+                   carry="wire"):
         from .ring import ring_all_reduce
         return ring_all_reduce(x, axis_name, books, scheme_name,
-                               chunk=chunk, decode_backend=decode_backend)
+                               chunk=chunk, decode_backend=decode_backend,
+                               carry=carry)
 
 
 # -------------------------------------------------------------- dispatch
@@ -349,4 +377,5 @@ def all_reduce_compressed(x, axis_name: str, books: Dict[str, Codebook],
     """Registry-driven bitexact all-reduce: transport named by the spec."""
     t = get_transport(spec.transport)
     return t.all_reduce(x, axis_name, books, spec.scheme_name,
-                        chunk=spec.chunk, decode_backend=spec.decode_backend)
+                        chunk=spec.chunk, decode_backend=spec.decode_backend,
+                        carry=getattr(spec, "carry", "wire"))

@@ -27,9 +27,10 @@ import numpy as np
 
 from .entropy import (compressibility, expected_code_length, pmf_from_counts,
                       shannon_entropy)
-from .huffman import (MAX_CODE_LEN, CanonicalTables, canonical_codes,
-                      canonical_decode_tables, package_merge_lengths,
-                      validate_prefix_free)
+from .huffman import (MAX_CODE_LEN, MULTISYM_K, MULTISYM_SMAX,
+                      CanonicalTables, MultiSymTables, build_multisym_tables,
+                      canonical_codes, canonical_decode_tables,
+                      package_merge_lengths, validate_prefix_free)
 
 __all__ = ["Codebook", "CodebookKey", "CodebookRegistry", "build_codebook"]
 
@@ -46,6 +47,20 @@ class Codebook:
     tables: CanonicalTables      # decode-side tables
     source_counts: np.ndarray    # the (smoothed) histogram it was built from
     max_len: int = MAX_CODE_LEN
+    # Lazily-built multi-symbol decode tables, keyed by (k, s_max); a
+    # mutable cache is fine inside the frozen dataclass — the codebook
+    # itself (lengths/codes) never changes.
+    _multisym_cache: Dict[Tuple[int, int], MultiSymTables] = field(
+        default_factory=dict, repr=False, compare=False)
+
+    def multisym_tables(self, k: int = MULTISYM_K,
+                        s_max: int = MULTISYM_SMAX) -> MultiSymTables:
+        """The K-bit direct-indexed multi-symbol decode LUT (cached)."""
+        key = (k, s_max)
+        if key not in self._multisym_cache:
+            self._multisym_cache[key] = build_multisym_tables(
+                self.lengths, k=k, s_max=s_max, max_len=self.max_len)
+        return self._multisym_cache[key]
 
     def expected_bits_per_symbol(self, counts: np.ndarray) -> float:
         return float(expected_code_length(counts, self.lengths))

@@ -37,6 +37,7 @@ __all__ = [
     "ChunkedStream", "DEFAULT_CHUNK", "chunk_capacity_words",
     "chunk_counts_for", "concat_chunks",
     "encode_chunked_jit", "decode_chunks_jit", "recode_chunks_jit",
+    "decode_chunks_multisym_jit", "multisym_table_args", "DECODE_BACKENDS",
     "encode_chunked", "decode_chunked", "decode_dispatch",
 ]
 
@@ -49,8 +50,17 @@ DEFAULT_CHUNK = 2048
 
 
 def chunk_capacity_words(chunk: int, max_len: int = MAX_CODE_LEN) -> int:
-    """Worst-case uint32 words per chunk (+1 pad word for window reads)."""
-    return chunk * max_len // 32 + 1
+    """Worst-case uint32 words per chunk (+1 pad word for window reads).
+
+    Ceiling division matters: with floor (as shipped before PR 3), odd
+    chunk sizes made the "+1" word part of the worst-case payload
+    instead of a true pad, so decoders clamping their two-word window
+    fetch to ``cap - 2`` misread the final codewords of a
+    near-incompressible chunk.  For ``chunk * max_len`` divisible by 32
+    (every power-of-two chunk, incl. ``bitpack.BLOCK``) the value — and
+    the wire format — is unchanged.
+    """
+    return (chunk * max_len + 31) // 32 + 1
 
 
 def chunk_counts_for(n_symbols: int, chunk: int) -> np.ndarray:
@@ -344,6 +354,116 @@ def decode_chunks_jit(block_words: jnp.ndarray, chunk_counts: jnp.ndarray,
                                chunk_counts.astype(jnp.int32))
 
 
+# --------------------------------------------------------------------------
+# Multi-symbol table-driven decode (the K-bit window LUT).  One gather
+# per window emits up to s_max symbols, so the per-symbol canonical walk
+# is amortized; windows whose first code is longer than K bits fall back
+# to the canonical subtraction over the remaining lengths K+1..max_len.
+# --------------------------------------------------------------------------
+@partial(jax.jit, static_argnames=("chunk", "max_len"))
+def decode_chunks_multisym_jit(block_words: jnp.ndarray,
+                               chunk_counts: jnp.ndarray,
+                               step_tab: jnp.ndarray,
+                               emit_tab: jnp.ndarray,
+                               chunk: int = DEFAULT_CHUNK,
+                               max_len: int = MAX_CODE_LEN) -> jnp.ndarray:
+    """Chunked multi-symbol decode: window-replay scan + gather emission.
+
+    Phase 1 — the only sequential part: a ``lax.scan`` over output
+    slots (all chunks advance in lockstep).  A window's decode work
+    happens *once*, when the previous window is exhausted: one gather
+    from the precomputed half-word window array and one from
+    ``MultiSymTables.step_tab``, whose entry packs the window's
+    absolute emit-table pointer, symbol count and total bit advance
+    (slow windows — first code longer than K bits — carry count 1 and
+    their true code length).  The following count−1 steps just replay:
+    ``ptr + 1``.  So the canonical walk, the cursor split and the
+    bit-position bookkeeping are amortized across the window's symbols,
+    and the body is two gathers plus a few selects — against the
+    per-symbol walk's two word fetches, 16-way subtraction, argmax and
+    symbol gather every step.  Each step's ``ptr`` goes into the scan
+    outputs, which XLA writes at the static step index.  (Formulations
+    that scatter decoded symbols at data-dependent positions inside the
+    loop copy their output buffer every iteration and benchmark ~10×
+    slower end to end; inverting a per-window trajectory afterwards
+    costs more binary-search gathers per symbol than it saves.)
+
+    Phase 2 — fully parallel: every output slot is exactly one
+    ``emit_tab[ptr]`` gather (the table concatenates the K-bit LUT rows
+    with the full-window first-symbol table, so slow windows are just
+    indices past ``2^k · s_max``).  Gathers only; no scatter anywhere.
+
+    block_words (NB, cap) uint32, chunk_counts (NB,) int32,
+    step_tab (2^max_len,) int32, emit_tab (2^k·s_max + 2^max_len,)
+    int32 → (NB, chunk) int32 symbols, zero-filled past each chunk's
+    count.  Bit-exact vs ``decode_chunks_jit`` / ``decode_np``.
+    """
+    from .huffman import STEP_CNT_BITS, STEP_PTR_BITS
+    nb, cap = block_words.shape
+    if step_tab.shape[0] != (1 << max_len):
+        raise ValueError(f"step_tab has {step_tab.shape[0]} entries, "
+                         f"expected 2^{max_len}")
+    words = block_words.astype(jnp.uint32)
+    counts = chunk_counts.astype(jnp.int32)
+    stab = step_tab.astype(jnp.int32)
+    etab = emit_tab.astype(jnp.int32)
+    ptr_mask = (1 << STEP_PTR_BITS) - 1
+    cnt_mask = (1 << STEP_CNT_BITS) - 1
+
+    # Half-word window array: H[:, q] holds stream bits [16q, 16q+32), so
+    # any 16-bit window is one gather plus two shifts in the scan body.
+    nxt = jnp.concatenate([words[:, 1:], jnp.zeros((nb, 1), jnp.uint32)],
+                          axis=1)
+    H = jnp.stack([words, (words << 16) | (nxt >> 16)],
+                  axis=2).reshape(nb, 2 * cap)
+
+    def body(carry, _):
+        bit_pos, rem, ptr = carry
+        fresh = rem == 0                       # current window exhausted?
+        q = jnp.minimum((bit_pos >> jnp.uint32(4)).astype(jnp.int32),
+                        2 * cap - 1)
+        h = jnp.take_along_axis(H, q[:, None], axis=1)[:, 0]
+        win = ((h << (bit_pos & jnp.uint32(15)))
+               >> jnp.uint32(32 - max_len)).astype(jnp.int32)
+        e = stab[win]
+        adv = jnp.where(fresh, (e >> (STEP_PTR_BITS + STEP_CNT_BITS)), 0)
+        ptr = jnp.where(fresh, e & ptr_mask, ptr + 1)
+        rem = jnp.where(fresh, (e >> STEP_PTR_BITS) & cnt_mask, rem) - 1
+        return (bit_pos + adv.astype(jnp.uint32), rem, ptr), ptr
+
+    # Carries derive from `words` (0-valued) so their varying-axes types
+    # match the body output under shard_map (same trick as decode_jit).
+    zero = (words[0, 0] & jnp.uint32(0)).astype(jnp.int32)
+    zeros_nb = jnp.zeros((nb,), jnp.int32) + zero
+    # unroll=8 amortizes XLA:CPU per-iteration loop overhead (~2× end to
+    # end here); measured best among {1, 2, 4, 8, 16}.
+    (_, _, _), ptrs = jax.lax.scan(
+        body, (zeros_nb.astype(jnp.uint32), zeros_nb, zeros_nb),
+        None, length=chunk, unroll=min(8, chunk))
+
+    # ---- phase 2: one gather per output slot.  ptrs (chunk, NB).
+    out = etab[ptrs.T]
+    o = jnp.arange(chunk, dtype=jnp.int32)[None, :]
+    return jnp.where(o < counts[:, None], out, 0)
+
+
+DECODE_BACKENDS = ("auto", "pallas", "scan", "multisym", "multisym_pallas")
+
+
+def multisym_table_args(book: Codebook, *, full: bool = True):
+    """Device arrays for a book's multisym LUT.
+
+    ``full=True`` → (step_tab, emit_tab): the folded 2^max_len tables
+    the XLA window-replay scan consumes.  ``full=False`` → (syms, meta):
+    the compact 2^K pair the Pallas kernel keeps in VMEM next to its
+    inline slow path.
+    """
+    mt = book.multisym_tables()
+    if full:
+        return jnp.asarray(mt.step_tab), jnp.asarray(mt.emit_tab)
+    return jnp.asarray(mt.syms), jnp.asarray(mt.meta)
+
+
 def encode_chunked(symbols: jnp.ndarray, book: Codebook, *,
                    chunk: int = DEFAULT_CHUNK) -> ChunkedStream:
     """Single-stage encode into the chunked streaming wire format."""
@@ -360,26 +480,37 @@ def decode_chunked(stream: ChunkedStream, book: Codebook, *,
                    backend: str = "auto") -> jnp.ndarray:
     """Decode a ChunkedStream back to its uint8 symbols.
 
-    backend: "pallas" — the device decode kernel (grid over chunks);
-             "scan"   — the XLA lax.scan fallback;
-             "auto"   — pallas (interpret-mode on CPU, Mosaic on TPU).
+    backend: "pallas"          — the per-symbol canonical-walk kernel;
+             "scan"            — the XLA lax.scan fallback;
+             "multisym"        — K-bit window LUT decode (XLA while-loop);
+             "multisym_pallas" — the multi-symbol Pallas kernel;
+             "auto"            — pallas (interpret on CPU, Mosaic on TPU).
     """
     t = book.tables
     counts = jnp.asarray(stream.chunk_counts())
+    targs = (jnp.asarray(t.first_code), jnp.asarray(t.base_index),
+             jnp.asarray(t.num_codes), jnp.asarray(t.sorted_symbols))
     if backend in ("auto", "pallas"):
         from ..kernels.decode import decode_chunks_pallas
         from ..kernels.ops import INTERPRET
         out = decode_chunks_pallas(
-            stream.block_words, counts, jnp.asarray(t.first_code),
-            jnp.asarray(t.base_index), jnp.asarray(t.num_codes),
-            jnp.asarray(t.sorted_symbols), chunk=stream.chunk,
+            stream.block_words, counts, *targs, chunk=stream.chunk,
             max_len=t.max_len, interpret=INTERPRET)
     elif backend == "scan":
         out = decode_chunks_jit(
-            stream.block_words, counts, jnp.asarray(t.first_code),
-            jnp.asarray(t.base_index), jnp.asarray(t.num_codes),
-            jnp.asarray(t.sorted_symbols), chunk=stream.chunk,
+            stream.block_words, counts, *targs, chunk=stream.chunk,
             max_len=t.max_len)
+    elif backend == "multisym":
+        out = decode_chunks_multisym_jit(
+            stream.block_words, counts, *multisym_table_args(book),
+            chunk=stream.chunk, max_len=t.max_len)
+    elif backend == "multisym_pallas":
+        from ..kernels.decode import decode_chunks_multisym_pallas
+        from ..kernels.ops import INTERPRET
+        out = decode_chunks_multisym_pallas(
+            stream.block_words, counts,
+            *multisym_table_args(book, full=False), *targs,
+            chunk=stream.chunk, max_len=t.max_len, interpret=INTERPRET)
     else:
         raise ValueError(f"unknown decode backend {backend!r}")
     return concat_chunks(out, stream.chunk_counts())

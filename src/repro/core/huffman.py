@@ -27,16 +27,30 @@ import numpy as np
 
 __all__ = [
     "MAX_CODE_LEN",
+    "MULTISYM_K",
+    "MULTISYM_SMAX",
     "huffman_code_lengths",
     "package_merge_lengths",
     "canonical_codes",
     "CanonicalTables",
     "canonical_decode_tables",
+    "MultiSymTables",
+    "build_multisym_tables",
+    "STEP_PTR_BITS",
+    "STEP_CNT_BITS",
     "kraft_sum",
     "validate_prefix_free",
 ]
 
 MAX_CODE_LEN = 16
+
+# Multi-symbol decode-table defaults: a 2^K-entry direct-indexed window
+# LUT emitting up to SMAX symbols per lookup.  K=13 keeps the tables at
+# ~288 KB of int32 in VMEM (syms (8192, 8) + meta (8192,)) while covering
+# every code the package-merge construction assigns except the rarest
+# 14–16-bit tails, which take the canonical-walk slow path.
+MULTISYM_K = 13
+MULTISYM_SMAX = 8
 
 
 def huffman_code_lengths(counts: np.ndarray) -> np.ndarray:
@@ -213,6 +227,153 @@ def canonical_decode_tables(lengths: np.ndarray,
     return CanonicalTables(first_code=first_code, base_index=base_index,
                            num_codes=num, sorted_symbols=sorted_symbols,
                            max_len=max_len)
+
+
+@dataclass(frozen=True)
+class MultiSymTables:
+    """Direct-indexed multi-symbol decode tables for one codebook.
+
+    ``syms[w, j]`` — the j-th symbol decoded from the K-bit window ``w``
+    (0 past the entry's count); ``meta[w]`` packs ``count | bits << 8``:
+    how many complete codewords the window contains (capped at s_max)
+    and how many bits they consume together.  ``count == 0`` marks the
+    slow path: the window's first codeword is longer than K bits and
+    must be resolved by the canonical walk over lengths K+1..max_len.
+
+    ``meta_full`` is the same (count | bits << 8) packing indexed by the
+    *full* max_len-bit window: identical to ``meta`` for fast windows,
+    but its slow entries carry the long code's true length in the bits
+    field (decidable from max_len real bits), so a decoder stepping with
+    ``meta_full`` needs no in-loop canonical walk at all — only the
+    emitted *symbol* of a slow window is left to the walk, off the
+    sequential path.
+
+    ``sym_full`` gives the *first* symbol of every max_len-bit window —
+    the emission side of the slow path: a decoder that recorded a slow
+    window resolves its one symbol with this single gather instead of
+    re-running the canonical walk.
+
+    ``step_tab`` / ``emit_tab`` are the same information folded for the
+    XLA window-replay scan, whose sequential body must be as close to
+    one gather as possible: ``emit_tab`` concatenates the flattened LUT
+    rows with ``sym_full`` (so a slow window's symbol is just an index
+    past ``2^k * s_max``), and ``step_tab[w]`` packs the *absolute*
+    emit-table pointer of w's first symbol with its count and bit
+    advance — ``ptr | count << 21 | bits << 26`` (count already floored
+    to 1 for slow windows).  Replaying a window is then ``ptr + 1`` per
+    step and emission is a single ``emit_tab[ptr]`` gather.
+
+    Codes are fixed per batch (the single-stage property), so this table
+    is built once per codebook on host and reused for every stream.
+    """
+    syms: np.ndarray       # (2^k, s_max) int32
+    meta: np.ndarray       # (2^k,) int32 — count | bits_consumed << 8
+    meta_full: np.ndarray  # (2^max_len,) int32 — slow bits = code length
+    sym_full: np.ndarray   # (2^max_len,) int32 — first symbol of window
+    step_tab: np.ndarray   # (2^max_len,) int32 — ptr | cnt<<21 | bits<<26
+    emit_tab: np.ndarray   # (2^k * s_max + 2^max_len,) int32 symbols
+    k: int
+    s_max: int
+    max_len: int
+
+
+# step_tab bit layout: ptr ≤ 2^k·s_max + 2^max_len ≤ 2^20 + 2^16 < 2^21,
+# count ≤ s_max ≤ 16 (5 bits), bit advance ≤ max_len ≤ 16 (5 bits).
+STEP_PTR_BITS = 21
+STEP_CNT_BITS = 5
+
+
+def build_multisym_tables(lengths: np.ndarray, *, k: int = MULTISYM_K,
+                          s_max: int = MULTISYM_SMAX,
+                          max_len: int = MAX_CODE_LEN) -> MultiSymTables:
+    """Precompute the K-bit window → (symbols, count, bits) decode LUT.
+
+    For every K-bit window value we greedily decode canonical codewords
+    until the next one no longer fits inside the window (or s_max is
+    reached).  Correctness of the zero-padded simulation: validity of a
+    candidate length l ≤ remaining-bits depends only on real window
+    bits, so any code accepted here is exactly what a sequential decoder
+    of the true stream would emit; a smallest-valid length that needs
+    padded bits means the true codeword overruns the window, which is
+    precisely the stop condition.
+    """
+    if not 1 <= k <= max_len:
+        raise ValueError(f"k must be in [1, {max_len}], got {k}")
+    t = canonical_decode_tables(lengths, max_len)
+    size = 1 << k
+    fc = t.first_code.astype(np.int64)
+    nc = t.num_codes.astype(np.int64)
+    bi = t.base_index.astype(np.int64)
+    ss = t.sorted_symbols.astype(np.int64)
+
+    # Windows left-aligned in 32 bits; zeros shift in as codes are consumed.
+    win = np.arange(size, dtype=np.uint64) << np.uint64(32 - k)
+    syms = np.zeros((size, s_max), dtype=np.int32)
+    count = np.zeros(size, dtype=np.int64)
+    consumed = np.zeros(size, dtype=np.int64)
+    active = np.ones(size, dtype=bool)
+    for j in range(s_max):
+        w = (win >> np.uint64(32 - max_len)).astype(np.int64)
+        l = np.zeros(size, dtype=np.int64)
+        off = np.zeros(size, dtype=np.int64)
+        found = np.zeros(size, dtype=bool)
+        for ll in range(1, max_len + 1):
+            o = (w >> (max_len - ll)) - fc[ll]
+            ok = ~found & (o >= 0) & (o < nc[ll])
+            l = np.where(ok, ll, l)
+            off = np.where(ok, o, off)
+            found |= ok
+        fits = active & found & (consumed + l <= k)
+        if ss.size:
+            sym = ss[np.clip(bi[l] + off, 0, ss.size - 1)]
+            syms[:, j] = np.where(fits, sym, 0)
+        count += fits
+        consumed = np.where(fits, consumed + l, consumed)
+        win = np.where(fits, (win << l.astype(np.uint64))
+                       & np.uint64(0xFFFFFFFF), win)
+        active &= fits
+        if not active.any():
+            break
+    meta = (count | (np.where(count > 0, consumed, 0) << 8)).astype(np.int32)
+
+    # Full-window meta: fast windows share the K-bit entry (their count
+    # and bits depend only on the first K bits — proved by the padding
+    # argument above); slow windows store the first code's true length,
+    # which max_len real bits always decide.  Corrupt windows (no valid
+    # code at any length) advance max_len bits — valid streams never
+    # read them before their symbol count is exhausted.
+    w = np.arange(1 << max_len, dtype=np.int64)
+    l1 = np.zeros(w.shape[0], dtype=np.int64)
+    off1 = np.zeros(w.shape[0], dtype=np.int64)
+    found = np.zeros(w.shape[0], dtype=bool)
+    for ll in range(1, max_len + 1):
+        o = (w >> (max_len - ll)) - fc[ll]
+        ok = ~found & (o >= 0) & (o < nc[ll])
+        l1 = np.where(ok, ll, l1)
+        off1 = np.where(ok, o, off1)
+        found |= ok
+    if ss.size:
+        sym_full = np.where(
+            found, ss[np.clip(bi[l1] + off1, 0, ss.size - 1)], 0
+        ).astype(np.int32)
+    else:
+        sym_full = np.zeros(w.shape[0], dtype=np.int32)
+    l1 = np.where(found, l1, max_len)
+    k_meta = meta[w >> (max_len - k)]
+    meta_full = np.where(k_meta & 0xFF, k_meta, l1 << 8).astype(np.int32)
+
+    # Folded tables for the XLA window-replay scan (see class docstring).
+    emit_tab = np.concatenate([syms.reshape(-1), sym_full]).astype(np.int32)
+    cnt_f = meta_full & 0xFF
+    ptr = np.where(cnt_f > 0, (w >> (max_len - k)) * s_max,
+                   size * s_max + w)
+    step_tab = (ptr | np.maximum(cnt_f, 1) << STEP_PTR_BITS
+                | (meta_full >> 8) << (STEP_PTR_BITS + STEP_CNT_BITS)
+                ).astype(np.int32)
+    return MultiSymTables(syms=syms, meta=meta, meta_full=meta_full,
+                          sym_full=sym_full, step_tab=step_tab,
+                          emit_tab=emit_tab, k=k, s_max=s_max,
+                          max_len=max_len)
 
 
 def validate_prefix_free(lengths: np.ndarray) -> None:

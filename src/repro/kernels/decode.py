@@ -1,4 +1,5 @@
-"""Pallas TPU kernel: chunked canonical Huffman decode.
+"""Pallas TPU kernels: chunked canonical Huffman decode (bit-serial walk
+and the K-bit-window multi-symbol table decode).
 
 Closes the on-device loop: encode (LUT@MXU) → pack (bitpack) → wire →
 **decode (this kernel)**.  Variable-length decode is bit-serial *within*
@@ -18,6 +19,16 @@ for all 16 candidate lengths at once (one VPU op per table vector), pick
 the unique valid length, emit ``sorted_symbols[base_index[l] + offset]``
 and advance the cursor.  The per-chunk symbol count rides in as a
 scalar so partial tail chunks mask their dead iterations.
+
+The multi-symbol variant (``decode_chunks_multisym_pallas``) replaces
+the per-symbol walk with a direct-indexed 2^K-entry window LUT (built
+once per codebook in ``core.huffman.build_multisym_tables``): each loop
+iteration gathers one table entry for the K-bit window at the cursor and
+emits up to ``s_max`` symbols at once, falling back to the canonical
+subtraction (restricted to lengths K+1..max_len) only for windows whose
+first code is longer than K bits.  The tables are VMEM-resident:
+``syms`` (2^K, s_max) int32 + ``meta`` (2^K,) int32 ≈ 288 KB at the
+default K=13, s_max=8 — see docs/kernels.md for the K-vs-VMEM budget.
 
 Bit-exact contract: `ref.decode_chunks_ref` (the jnp scan oracle) and,
 transitively, `core.encoder.decode_np`.
@@ -130,4 +141,134 @@ def decode_chunks_pallas(block_words: jnp.ndarray, chunk_counts: jnp.ndarray,
         out_shape=jax.ShapeDtypeStruct((nb, chunk), jnp.int32),
         interpret=interpret,
     )(block_words.astype(jnp.uint32), counts, fc, bi, nc, ss)
+    return out
+
+
+def _decode_multisym_kernel(words_ref, count_ref, st_ref, mt_ref, fc_ref,
+                            bi_ref, nc_ref, ss_ref, out_ref, *, chunk: int,
+                            max_len: int, cap: int, k: int, s_max: int):
+    """Decode one chunk via the K-bit window LUT.
+
+    words_ref: (1, cap) uint32 — the chunk's MSB-first packed words
+    count_ref: (1, 1) int32 — symbols actually present in this chunk
+    st_ref:    (2^k, s_max) int32 — window → symbols table
+    mt_ref:    (1, 2^k) int32 — window → count | bits_consumed << 8
+    fc/bi/nc_ref, ss_ref — canonical tables for the long-code slow path
+    out_ref:   (1, chunk) int32 — decoded symbols (0 past count)
+    """
+    words = words_ref[...].reshape(-1)
+    n_sym = count_ref[0, 0]
+    st = st_ref[...]
+    mt = mt_ref[...].reshape(-1)
+    fc = fc_ref[...].reshape(-1)
+    bi = bi_ref[...].reshape(-1)
+    nc = nc_ref[...].reshape(-1)
+    ss = ss_ref[...].reshape(-1)
+
+    # Slow-path candidate lengths k+1..max_len (codes the K-bit table
+    # cannot contain; table build guarantees count==0 only for these).
+    ls = jax.lax.broadcasted_iota(jnp.int32, (max(max_len - k, 1),), 0) + k + 1
+    fcl = fc[jnp.clip(ls, 0, max_len)]
+    ncl = nc[jnp.clip(ls, 0, max_len)]
+
+    def cond(carry):
+        _, out_pos, _ = carry
+        return out_pos < n_sym
+
+    def body(carry):
+        bit_pos, out_pos, out = carry
+        widx = jnp.minimum((bit_pos >> jnp.uint32(5)).astype(jnp.int32),
+                           cap - 2)
+        pin = bit_pos & jnp.uint32(31)
+        w0 = words[widx]
+        w1 = words[widx + 1]
+        hi = w0 << pin
+        lo = jnp.where(pin == 0, jnp.uint32(0),
+                       w1 >> jnp.clip(32 - pin.astype(jnp.int32), 0, 31
+                                      ).astype(jnp.uint32))
+        win = hi | lo
+        idx = (win >> jnp.uint32(32 - k)).astype(jnp.int32)
+        m = mt[idx]
+        cnt = m & 0xFF
+        adv = (m >> 8) & 0xFF
+        emit = st[idx]                                   # (s_max,) gather
+        if k < max_len:                                  # static: slow path
+            window = (win >> jnp.uint32(32 - max_len)).astype(jnp.int32)
+            cand = window >> (max_len - ls)
+            off = cand - fcl
+            valid = (off >= 0) & (off < ncl)
+            li = jnp.argmax(valid)
+            l = ls[li]
+            fsym = ss[jnp.clip(bi[l] + off[li], 0, ss.shape[0] - 1)]
+            slow = cnt == 0
+            emit = jnp.where(slow, jnp.zeros_like(emit).at[0].set(fsym), emit)
+            cnt = jnp.where(slow, 1, cnt)
+            adv = jnp.where(slow, l, adv)
+        out = jax.lax.dynamic_update_slice(out, emit, (out_pos,))
+        return bit_pos + adv.astype(jnp.uint32), out_pos + cnt, out
+
+    zero = words[0] & jnp.uint32(0)
+    carry0 = (zero, zero.astype(jnp.int32),
+              jnp.zeros((chunk + s_max,), jnp.int32) + zero.astype(jnp.int32))
+    _, _, out = jax.lax.while_loop(cond, body, carry0)
+    kidx = jax.lax.broadcasted_iota(jnp.int32, (chunk,), 0)
+    out_ref[...] = jnp.where(kidx < n_sym, out[:chunk], 0)[None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "max_len", "interpret"))
+def decode_chunks_multisym_pallas(block_words: jnp.ndarray,
+                                  chunk_counts: jnp.ndarray,
+                                  syms_tab: jnp.ndarray,
+                                  meta_tab: jnp.ndarray,
+                                  first_code: jnp.ndarray,
+                                  base_index: jnp.ndarray,
+                                  num_codes: jnp.ndarray,
+                                  sorted_symbols: jnp.ndarray, *,
+                                  chunk: int = CHUNK,
+                                  max_len: int = MAX_CODE_LEN,
+                                  interpret: bool = True) -> jnp.ndarray:
+    """Multi-symbol chunked decode: NB chunk streams in one grid launch.
+
+    Same contract as ``decode_chunks_pallas`` plus the per-codebook LUT
+    pair from ``core.huffman.build_multisym_tables``: syms_tab
+    (2^k, s_max) int32 and meta_tab (2^k,) int32.  Bit-exact vs
+    ``ref.decode_chunks_ref``; typically ~s̄ symbols per loop iteration
+    where s̄ = min(s_max, K / mean code length).
+    """
+    nb, cap = block_words.shape
+    if cap != chunk_capacity_words(chunk, max_len):
+        raise ValueError(f"cap {cap} != capacity for chunk={chunk}")
+    size, s_max = syms_tab.shape
+    k = size.bit_length() - 1
+    if (1 << k) != size:
+        raise ValueError(f"multisym table size {size} not a power of two")
+    counts = chunk_counts.reshape(nb, 1).astype(jnp.int32)
+    tlen = max_len + 1
+    st = syms_tab.astype(jnp.int32)
+    mt = meta_tab.reshape(1, size).astype(jnp.int32)
+    fc = first_code.reshape(1, tlen).astype(jnp.int32)
+    bi = base_index.reshape(1, tlen).astype(jnp.int32)
+    nc = num_codes.reshape(1, tlen).astype(jnp.int32)
+    ss = jnp.zeros((1, 256), jnp.int32).at[0, :sorted_symbols.shape[0]].set(
+        sorted_symbols.reshape(-1).astype(jnp.int32))
+
+    kernel = functools.partial(_decode_multisym_kernel, chunk=chunk,
+                               max_len=max_len, cap=cap, k=k, s_max=s_max)
+    out = pl.pallas_call(
+        kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((1, cap), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+            pl.BlockSpec((size, s_max), lambda i: (0, 0)),
+            pl.BlockSpec((1, size), lambda i: (0, 0)),
+            pl.BlockSpec((1, tlen), lambda i: (0, 0)),
+            pl.BlockSpec((1, tlen), lambda i: (0, 0)),
+            pl.BlockSpec((1, tlen), lambda i: (0, 0)),
+            pl.BlockSpec((1, 256), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb, chunk), jnp.int32),
+        interpret=interpret,
+    )(block_words.astype(jnp.uint32), counts, st, mt, fc, bi, nc, ss)
     return out

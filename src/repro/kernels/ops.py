@@ -132,6 +132,25 @@ def decode_chunks(block_words, chunk_counts, book: Codebook, *,
         chunk=chunk, max_len=t.max_len, interpret=INTERPRET)
 
 
+def decode_chunks_multisym(block_words, chunk_counts, book: Codebook, *,
+                           chunk: int = 2048):
+    """Chunked multi-symbol decode via the window-LUT Pallas kernel.
+
+    Same contract as ``decode_chunks``; the K-bit tables come from the
+    book's cached ``multisym_tables()``.
+    """
+    from .decode import decode_chunks_multisym_pallas
+
+    t = book.tables
+    mt = book.multisym_tables()
+    return decode_chunks_multisym_pallas(
+        jnp.asarray(block_words), jnp.asarray(chunk_counts),
+        jnp.asarray(mt.syms), jnp.asarray(mt.meta),
+        jnp.asarray(t.first_code), jnp.asarray(t.base_index),
+        jnp.asarray(t.num_codes), jnp.asarray(t.sorted_symbols),
+        chunk=chunk, max_len=t.max_len, interpret=INTERPRET)
+
+
 def decode_with_book_kernel(symbols_stream, book: Codebook, n_symbols: int, *,
                             chunk: int = 2048):
     """Decode a kernel-path chunked stream back to (n_symbols,) uint8.

@@ -40,3 +40,20 @@ def decode_chunks_ref(block_words: jnp.ndarray, chunk_counts: jnp.ndarray,
     return decode_chunks_jit(block_words, chunk_counts, first_code,
                              base_index, num_codes, sorted_symbols,
                              chunk=chunk, max_len=max_len)
+
+
+def decode_chunks_multisym_ref(block_words: jnp.ndarray,
+                               chunk_counts: jnp.ndarray,
+                               step_tab: jnp.ndarray,
+                               emit_tab: jnp.ndarray,
+                               chunk: int, max_len: int = 16) -> jnp.ndarray:
+    """Multi-symbol decode oracle (the XLA window-replay formulation).
+
+    Delegates to ``core.encoder.decode_chunks_multisym_jit`` — itself
+    property-tested bit-exact vs ``decode_np`` and the per-symbol scan —
+    so the Pallas multisym kernel has an independent contract to meet
+    (``decode_chunks_ref`` is the other, table-free oracle).
+    """
+    from ..core.encoder import decode_chunks_multisym_jit
+    return decode_chunks_multisym_jit(block_words, chunk_counts, step_tab,
+                                      emit_tab, chunk=chunk, max_len=max_len)

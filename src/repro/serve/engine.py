@@ -16,8 +16,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..comm.compression import CompressionSpec, payload_stats
+from ..core.codebook import Codebook
 from ..core.encoder import (DEFAULT_CHUNK, chunk_counts_for, concat_chunks,
-                            decode_chunks_jit, encode_chunked_jit)
+                            encode_chunked_jit)
 from ..core.huffman import canonical_codes, canonical_decode_tables
 from ..models.common import ModelConfig
 from ..models.transformer import decode_step, init_caches, prefill
@@ -48,19 +49,26 @@ def make_serve_step(model_cfg: ModelConfig,
     receiving peer overlaps), and a decode-mismatch counter that must
     stay 0 (losslessness observed in production, not assumed).  The
     decode tables are rebuilt from the spec's canonical length vectors
-    at trace time — exactly what a receiving node holds.
+    at trace time — exactly what a receiving node holds — and the
+    decode runs the spec's ``decode_backend`` (scan / pallas /
+    multisym), so the verify path exercises the same decoder a
+    receiving peer would.
     """
-    tables = None
+    books = None
     if decode_chunk is None:
         decode_chunk = (comp_spec.chunk if comp_spec is not None
                         else DEFAULT_CHUNK)
     if (comp_spec is not None and comp_spec.enabled
             and comp_spec.mode == "bitexact"):
-        tables = {}
+        books = {}
         for plane, lens in comp_spec.plane_lengths:
             lv = np.asarray(lens, dtype=np.int32)
-            tables[plane] = (canonical_codes(lv), lv,
-                             canonical_decode_tables(lv))
+            books[plane] = Codebook(
+                book_id=-1,
+                key=(comp_spec.tensor_kind, comp_spec.scheme_name, plane),
+                lengths=lv, codes=canonical_codes(lv),
+                tables=canonical_decode_tables(lv),
+                source_counts=np.zeros(256, np.int64))
 
     def step(params, tokens, caches, pos):
         logits, caches = decode_step(params, tokens, caches, pos, model_cfg)
@@ -81,20 +89,18 @@ def make_serve_step(model_cfg: ModelConfig,
                     .wire_factor("all_gather", tp_degree))
                 metrics["act_wire_raw_bits"] = factor * s["raw_bits"]
                 metrics["act_wire_coded_bits"] = factor * s["coded_bits"]
-            if tables is not None:
+            if books is not None:
+                from ..comm.transport import decode_blocks
                 planes = comp_spec.scheme.to_symbols_jnp(h)
                 for plane, sym in planes.items():
-                    codes, lens, t = tables[plane]
+                    b = books[plane]
                     words, bits = encode_chunked_jit(
-                        sym, jnp.asarray(codes.astype(np.uint32)),
-                        jnp.asarray(lens), chunk=decode_chunk)
+                        sym, jnp.asarray(b.codes.astype(np.uint32)),
+                        jnp.asarray(b.lengths), chunk=decode_chunk)
                     counts = chunk_counts_for(int(sym.shape[0]), decode_chunk)
-                    out = decode_chunks_jit(
-                        words, jnp.asarray(counts),
-                        jnp.asarray(t.first_code), jnp.asarray(t.base_index),
-                        jnp.asarray(t.num_codes),
-                        jnp.asarray(t.sorted_symbols), chunk=decode_chunk,
-                        max_len=t.max_len)
+                    out = decode_blocks(words, jnp.asarray(counts), b,
+                                        decode_chunk,
+                                        comp_spec.decode_backend)
                     dec = concat_chunks(out, counts)
                     metrics["act_decoded_bits"] += bits.sum().astype(
                         jnp.float32)

@@ -429,6 +429,92 @@ class TestRingTransport:
             check=False)
         np.testing.assert_array_equal(ys[0], yp[0])
 
+    @pytest.mark.parametrize("op", ["all_reduce", "all_gather"])
+    def test_ring_multisym_decode_backend(self, op):
+        # the table-driven decoder on every hop: identical results and
+        # identical measured hop ledger (re-encoded bits don't depend on
+        # which decoder produced the symbols)
+        x = jnp.asarray(_int_valued((4, 4, 16), np.float32, -2, 3, 46),
+                        jnp.bfloat16)
+        books = _books_for_scheme(x, "bf16")
+        fn = ring_all_reduce if op == "all_reduce" else ring_all_gather
+        ys, ss_ = self._run(
+            lambda xs: fn(xs, "data", books, "bf16", chunk=32,
+                          decode_backend="scan"), x, 4, check=False)
+        ym, sm = self._run(
+            lambda xs: fn(xs, "data", books, "bf16", chunk=32,
+                          decode_backend="multisym"), x, 4, check=False)
+        np.testing.assert_array_equal(ys[0], ym[0])
+        np.testing.assert_array_equal(ss_["hop_coded_bits"],
+                                      sm["hop_coded_bits"])
+
+    @pytest.mark.parametrize("k", [2, 4])
+    def test_ring_f32_carry_bitexact_and_double_volume(self, k):
+        # f32 hop carry: results still exact for integer payloads, and
+        # the ledger pins exactly 2× raw hop volume (two wire-dtype
+        # components per hop) with the same hop count.
+        x = jnp.asarray(_int_valued((k, 4, 16), np.float32, -2, 3, 50 + k),
+                        jnp.bfloat16)
+        books = _books_for_scheme(x, "bf16")
+        yw, sw = self._run(
+            lambda xs: ring_all_reduce(xs, "data", books, "bf16", chunk=16,
+                                       decode_backend="scan"), x, k)
+        yf, sf = self._run(
+            lambda xs: ring_all_reduce(xs, "data", books, "bf16", chunk=16,
+                                       decode_backend="scan", carry="f32"),
+            x, k)
+        np.testing.assert_array_equal(yw[0], yf[0])     # ints: both exact
+        assert float(sf["raw_wire_bits"]) == pytest.approx(
+            2.0 * float(sw["raw_wire_bits"]))
+        assert float(sf["payload_header_bits"]) == pytest.approx(
+            2.0 * float(sw["payload_header_bits"]))
+        assert float(sf["hops"]) == float(sw["hops"]) == 2 * (k - 1)
+        assert sf["hop_coded_bits"].shape == (2 * (k - 1),)
+        # the payload probe describes the tensor, not the carry
+        assert float(sf["payload_raw_bits"]) == float(sw["payload_raw_bits"])
+        # two coded components cost more than one, but less than 2× raw
+        assert float(sf["coded_wire_bits"]) > float(sw["coded_wire_bits"])
+        assert float(sf["coded_wire_bits"]) < float(sf["raw_wire_bits"])
+
+    def test_ring_f32_carry_beats_wire_on_gaussian(self):
+        # the point of the f32 carry: hop-rounding error disappears into
+        # the residual component, so the reduction tracks f32 psum
+        rng = np.random.default_rng(60)
+        x = (rng.normal(size=(8, 4, 32)) * 3).astype(jnp.bfloat16)
+        books = _books_for(x)
+        mesh = _mesh_k(8)
+
+        @smap(mesh, P("data"), P("data"))
+        def plain(xs):
+            return jax.lax.psum(xs.astype(jnp.float32), "data")[None]
+
+        want = np.asarray(plain(jnp.asarray(x)), np.float32)[0]
+        yw, _ = self._run(
+            lambda xs: ring_all_reduce(xs, "data", books, "bf16", chunk=64,
+                                       decode_backend="scan"), x, 8)
+        yf, _ = self._run(
+            lambda xs: ring_all_reduce(xs, "data", books, "bf16", chunk=64,
+                                       decode_backend="scan", carry="f32"),
+            x, 8)
+        err_w = np.abs(yw[0].reshape(want.shape).astype(np.float32) - want)
+        err_f = np.abs(yf[0].reshape(want.shape).astype(np.float32) - want)
+        # f32 carry only rounds once (final bf16 cast); wire carry
+        # rounds every hop — strictly more error on Gaussian data
+        assert err_f.sum() < err_w.sum()
+        np.testing.assert_allclose(
+            yf[0].reshape(want.shape).astype(np.float32), want,
+            rtol=0.02, atol=0.02)
+
+    def test_non_ring_transports_reject_f32_carry(self):
+        from repro.comm import TRANSPORTS
+        x = jnp.ones((4, 8), jnp.bfloat16)
+        books = _books_for(np.asarray(x))
+        for name in ("monolithic", "chunked"):
+            with pytest.raises(ValueError, match="only supported by the "
+                                                 "ring"):
+                TRANSPORTS[name].all_reduce(x, "data", books, "bf16",
+                                            carry="f32")
+
     def test_ring_gather_ledger_parity_with_monolithic(self):
         # Re-encoding under the fixed codebook is bit-preserving, so the
         # summed per-hop traffic must equal the monolithic accounting

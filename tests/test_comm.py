@@ -18,6 +18,6 @@ def test_comm_suite_8_devices():
                         + " --xla_force_host_platform_device_count=8").strip()
     env["PYTHONPATH"] = str(pathlib.Path(__file__).parents[1] / "src")
     proc = subprocess.run([sys.executable, str(SUITE)], env=env,
-                          capture_output=True, text=True, timeout=900)
+                          capture_output=True, text=True, timeout=1800)
     assert proc.returncode == 0, (
         f"comm suite failed\nstdout:\n{proc.stdout}\nstderr:\n{proc.stderr}")

@@ -24,8 +24,8 @@ from repro.configs import get_config
 from repro.core.stats import shard_histograms
 from repro.core.symbols import SCHEMES
 from repro.data import DataConfig, SyntheticDataset
-from repro.models import ModelConfig, forward_train, model_init
-from repro.models.layers import mlp_apply, rmsnorm_apply
+from repro.models import ModelConfig, model_init
+from repro.models.layers import rmsnorm_apply
 from repro.optim import AdamWConfig
 from repro.train import make_train_step, train_state_init
 
@@ -89,7 +89,6 @@ def capture_ffn1_acts(params, cfg: ModelConfig, batch) -> List[np.ndarray]:
     acts = []
     group = params["groups"][0]
     sub = group[0]
-    from repro.models.blocks import block_apply
     for li in range(cfg.n_layers):
         layer = jax.tree.map(lambda a: a[li], sub)
         h = rmsnorm_apply(layer["norm_mix"], x, cfg.norm_eps)

@@ -33,7 +33,6 @@ from __future__ import annotations
 import os
 
 import numpy as np
-import jax
 import jax.numpy as jnp
 
 from repro.core.codebook import build_codebook

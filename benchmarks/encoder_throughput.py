@@ -12,14 +12,13 @@ is exact.
 from __future__ import annotations
 
 import numpy as np
-import jax
 import jax.numpy as jnp
 
 from repro.core.codebook import build_codebook
 from repro.core.encoder import single_stage_encode, three_stage_encode
 from repro.kernels import ops
 
-from .common import emit, ffn1_shard_hists, gemma_proxy, timed
+from .common import emit, gemma_proxy, timed
 from repro.core.symbols import bf16_planes_np
 
 

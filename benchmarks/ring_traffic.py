@@ -2,7 +2,13 @@
 
 Compares the three bitexact transports (monolithic / chunked / ring —
 see ``repro.comm.transport`` and ``docs/collectives.md``) on an 8-way
-all-reduce of the same payload:
+all-reduce of the same payload, then sweeps the rest of the ring
+collective family (``ring_rs`` reduce-scatter, ``ring_a2a``
+all-to-all, ``ring_hier`` hierarchical two-axis all-reduce on a 2×4
+mesh) — every op verified bit-exact against its ``jax.lax``
+counterpart before timing, with measured coded wire bits and the
+deterministic raw/coded ``*_wire_compression_speedup`` ratio rows that
+the CI ``--compare`` gate pins against ``BENCH_baseline.json``:
 
   * every transport's result is verified bit-exact against
     ``jax.lax.psum`` BEFORE any timing (integer-valued payload, so the
@@ -37,7 +43,7 @@ def _inner() -> None:
     import numpy as np
     from jax.sharding import PartitionSpec as P
 
-    from repro.comm import TRANSPORTS, ring_all_reduce
+    from repro.comm import TRANSPORTS
     from repro.core.codebook import build_codebook
     from repro.core.symbols import SCHEMES
 
@@ -105,6 +111,88 @@ def _inner() -> None:
          f"{float(hop_bits.max()):.0f}")
     emit("ring_traffic.ring.hop_latency_us", results["ring"][0] / hops, "")
     emit("ring_traffic.payload_raw_bits_per_dev", 0.0, f"{raw:.0f}")
+
+    def emit_op(name, us, stats, extra_hops=None):
+        raw_w = float(stats["raw_wire_bits"])
+        coded_w = float(stats["coded_wire_bits"])
+        emit(f"ring_traffic.{name}.op_us", us, "")
+        emit(f"ring_traffic.{name}.coded_wire_bits", 0.0, f"{coded_w:.0f}")
+        emit(f"ring_traffic.{name}.wire_ratio", 0.0,
+             f"{coded_w / (raw_w or 1.0):.4f}")
+        # deterministic (seeded data, exact coded sizes) raw/coded ratio:
+        # the machine-portable row the --compare gate pins tightly
+        emit(f"ring_traffic.{name}.wire_compression_speedup", 0.0,
+             f"{raw_w / (coded_w or 1.0):.4f}")
+        if extra_hops is not None:
+            emit(f"ring_traffic.{name}.hops", 0.0, f"{extra_hops}")
+
+    # --- ring reduce_scatter: the all_reduce's first phase alone ------
+    from repro.comm import (hierarchical_all_reduce, ring_all_to_all,
+                            ring_reduce_scatter)
+
+    @smap
+    def run_rs(xs):
+        y, stats = ring_reduce_scatter(xs[0], "data", books, "bf16",
+                                       chunk=_CHUNK)
+        want = jax.lax.psum_scatter(
+            xs[0].astype(jnp.float32).reshape(_N, -1), "data", tiled=True)
+        err = (y.astype(jnp.float32) != want.reshape(-1)).sum()
+        return y[None], {**{k: jax.lax.psum(v, "data")
+                            for k, v in stats.items()
+                            if getattr(v, "ndim", 0) == 0},
+                         "mismatch": jax.lax.psum(err, "data")}
+
+    _, stats = run_rs(x)
+    assert float(stats["mismatch"]) == 0, "ring_rs not bit-exact"
+    us, _ = timed(lambda: run_rs(x))
+    emit_op("ring_rs", us, stats, extra_hops=int(float(stats["hops"])))
+
+    # --- ring all_to_all: the MoE dispatch wire -----------------------
+    @smap
+    def run_a2a(xs):
+        xr = xs[0].reshape(_N, -1)
+        y, stats = ring_all_to_all(xr, "data", books, "bf16", chunk=_CHUNK)
+        want = jax.lax.all_to_all(xr, "data", split_axis=0, concat_axis=0)
+        err = (y.astype(jnp.float32) != want.astype(jnp.float32)).sum()
+        return y[None], {**{k: jax.lax.psum(v, "data")
+                            for k, v in stats.items()
+                            if getattr(v, "ndim", 0) == 0},
+                         "mismatch": jax.lax.psum(err, "data")}
+
+    _, stats = run_a2a(x)
+    assert float(stats["mismatch"]) == 0, "ring_a2a not bit-exact"
+    us, _ = timed(lambda: run_a2a(x))
+    emit_op("ring_a2a", us, stats, extra_hops=int(float(stats["hops"])))
+
+    # --- hierarchical two-axis ring on a 2 (outer) × 4 (inner) mesh ---
+    n_outer, n_inner = 2, _N // 2
+    mesh2 = jax.sharding.Mesh(
+        np.asarray(jax.devices()[:_N]).reshape(n_outer, n_inner),
+        ("outer", "inner"))
+
+    def smap2(fn):
+        return jax.jit(_shard_map(fn, mesh=mesh2,
+                                  in_specs=P("outer", "inner"),
+                                  out_specs=(P("outer", "inner"), P())))
+
+    xh = x.reshape(n_outer, n_inner, _PER_DEV)
+
+    @smap2
+    def run_hier(xs):
+        y, stats = hierarchical_all_reduce(xs[0, 0], ("inner", "outer"),
+                                           books, "bf16", chunk=_CHUNK)
+        want = jax.lax.psum(jax.lax.psum(
+            xs[0, 0].astype(jnp.float32), "inner"), "outer")
+        err = (y.astype(jnp.float32) != want).sum()
+        ps = {k: jax.lax.psum(jax.lax.psum(v, "inner"), "outer")
+              for k, v in stats.items() if getattr(v, "ndim", 0) == 0}
+        return y[None, None], {**ps, "mismatch": jax.lax.psum(
+            jax.lax.psum(err, "inner"), "outer")}
+
+    _, stats = run_hier(xh)
+    assert float(stats["mismatch"]) == 0, "ring_hier not bit-exact"
+    us, _ = timed(lambda: run_hier(xh))
+    emit_op("ring_hier", us, stats, extra_hops=int(float(stats["hops"])))
 
 
 def run() -> None:

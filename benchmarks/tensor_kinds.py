@@ -30,7 +30,6 @@ SYMBOL_BITS = 8
 
 def _ffn_tensors(params, cfg, batch) -> Dict[str, np.ndarray]:
     """One layer's FFN1/FFN2 weights + activations + their gradients."""
-    from repro.models.transformer import forward_train
 
     sub = params["groups"][0][0]
     layer0 = jax.tree.map(lambda a: a[0], sub)

@@ -7,12 +7,15 @@ monolithic endpoint-decode, chunked streaming, and the ppermute ring
 from .collectives import (all_gather, all_gather_bitexact,
                           all_gather_bitexact_chunked, all_gather_compressed,
                           all_reduce, all_reduce_compressed, all_to_all,
-                          merge_stats, ppermute, psum_bitexact,
-                          psum_bitexact_chunked, reduce_scatter, zero_stats)
+                          all_to_all_compressed, merge_stats, ppermute,
+                          psum_bitexact, psum_bitexact_chunked, reduce_scatter,
+                          reduce_scatter_compressed, zero_stats)
 from .compression import (KNOWN_TRANSPORTS, CompressionSpec, histogram256_xla,
                           payload_stats)
+from .hierarchy import hierarchical_all_reduce, hierarchical_wire_factor
 from .ledger import CollectiveLedger, LedgerEntry
-from .ring import ring_all_gather, ring_all_reduce
+from .ring import (ring_all_gather, ring_all_reduce, ring_all_to_all,
+                   ring_reduce_scatter)
 from .transport import (TRANSPORTS, ChunkedTransport, MonolithicTransport,
                         RingTransport, Transport, get_transport,
                         register_transport)

@@ -30,13 +30,15 @@ from ..core.codebook import Codebook
 from ..core.encoder import DEFAULT_CHUNK
 from .compression import CompressionSpec, payload_stats
 from .transport import (RING_FACTORS, TRANSPORTS, all_gather_compressed,
-                        all_reduce_compressed, axis_size)
+                        all_reduce_compressed, all_to_all_compressed,
+                        axis_size, reduce_scatter_compressed)
 
 __all__ = [
     "all_reduce", "all_gather", "reduce_scatter", "all_to_all", "ppermute",
     "all_gather_bitexact", "psum_bitexact",
     "all_gather_bitexact_chunked", "psum_bitexact_chunked",
     "all_gather_compressed", "all_reduce_compressed",
+    "reduce_scatter_compressed", "all_to_all_compressed",
     "merge_stats", "zero_stats",
 ]
 

@@ -21,13 +21,17 @@ Bitexact collectives additionally carry a **transport** selection (see
 ``repro.comm.transport``): ``monolithic`` (endpoint decode),
 ``chunked`` (streaming per-chunk collectives) or ``ring`` (ppermute
 ring, decode → reduce → re-encode on every hop).  The spec's
-``transport`` / ``chunk`` / ``decode_backend`` fields are static (part
-of the hashable spec) so they select the lowered program, not a runtime
-branch.
+``transport`` / ``chunk`` / ``decode_backend`` / ``axes`` fields are
+static (part of the hashable spec) so they select the lowered program,
+not a runtime branch.  ``axes = (inner, outer)`` names two mesh axes
+and routes ``all_reduce_compressed`` to the hierarchical two-axis ring
+(``repro.comm.hierarchy``: intra-axis reduce_scatter → inter-axis
+all_reduce on the shard → intra-axis all_gather); it requires the ring
+transport.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, Optional, Tuple
 
 import jax
@@ -43,7 +47,7 @@ __all__ = ["CompressionSpec", "payload_stats", "histogram256_xla",
 
 _MODES = ("off", "ledger", "bitexact")
 KNOWN_TRANSPORTS = ("monolithic", "chunked", "ring")
-_DECODE_BACKENDS = ("pallas", "scan", "multisym", "multisym_pallas")
+_DECODE_BACKENDS = ("multisym", "scan", "pallas", "multisym_pallas")
 _CARRIES = ("wire", "f32")
 
 
@@ -68,12 +72,19 @@ class CompressionSpec:
     # Bitexact wire strategy (repro.comm.transport registry).
     transport: str = "monolithic"        # monolithic | chunked | ring
     chunk: int = DEFAULT_CHUNK           # chunked/ring symbols per chunk
-    decode_backend: str = "pallas"       # pallas|scan|multisym|multisym_pallas
+    # Chunked-decode backend; the multi-symbol table walk is the default
+    # (fastest portable backend, pure XLA — docs/kernels.md).
+    decode_backend: str = "multisym"     # multisym|scan|pallas|multisym_pallas
     # Ring all-reduce accumulation dtype across hops: "wire" reduces in
     # the scheme dtype (honest link semantics); "f32" carries float32
     # partial sums as two wire-dtype components — training-grade
     # accuracy at 2× hop payload (repro.comm.ring).
     carry: str = "wire"                  # wire | f32
+    # Two-axis hierarchical ring: (inner, outer) mesh axis names.  When
+    # set, all_reduce_compressed runs intra-axis reduce_scatter →
+    # inter-axis all_reduce → intra-axis all_gather (repro.comm.hierarchy);
+    # ring transport only.  None → flat single-axis collectives.
+    axes: Optional[Tuple[str, str]] = None
 
     def __post_init__(self):
         if self.mode not in _MODES:
@@ -91,6 +102,17 @@ class CompressionSpec:
         if self.carry != "wire" and self.transport != "ring":
             raise ValueError(f"carry={self.carry!r} requires the ring "
                              f"transport, got {self.transport!r}")
+        if self.axes is not None:
+            if (not isinstance(self.axes, tuple) or len(self.axes) != 2
+                    or not all(isinstance(a, str) and a for a in self.axes)
+                    or self.axes[0] == self.axes[1]):
+                raise ValueError(
+                    f"axes must be two distinct mesh axis names "
+                    f"(inner, outer), got {self.axes!r}")
+            if self.transport != "ring":
+                raise ValueError(
+                    f"axes={self.axes!r} (hierarchical two-axis ring) "
+                    f"requires the ring transport, got {self.transport!r}")
         if self.chunk <= 0:
             raise ValueError(f"chunk must be positive, got {self.chunk}")
 
@@ -114,8 +136,10 @@ class CompressionSpec:
                       scheme_name: str = "bf16", mode: str = "ledger",
                       transport: str = "monolithic",
                       chunk: int = DEFAULT_CHUNK,
-                      decode_backend: str = "pallas",
-                      carry: str = "wire") -> "CompressionSpec":
+                      decode_backend: str = "multisym",
+                      carry: str = "wire",
+                      axes: Optional[Tuple[str, str]] = None
+                      ) -> "CompressionSpec":
         scheme = SCHEMES[scheme_name]
         lens = []
         ids = []
@@ -126,20 +150,23 @@ class CompressionSpec:
         return cls(mode=mode, scheme_name=scheme_name, tensor_kind=tensor_kind,
                    plane_lengths=tuple(lens), book_ids=tuple(ids),
                    transport=transport, chunk=chunk,
-                   decode_backend=decode_backend, carry=carry)
+                   decode_backend=decode_backend, carry=carry, axes=axes)
 
     @classmethod
     def from_books(cls, books: Dict[str, Codebook], scheme_name: str,
                    tensor_kind: str = "generic", mode: str = "ledger",
                    transport: str = "monolithic", chunk: int = DEFAULT_CHUNK,
-                   decode_backend: str = "pallas",
-                   carry: str = "wire") -> "CompressionSpec":
+                   decode_backend: str = "multisym",
+                   carry: str = "wire",
+                   axes: Optional[Tuple[str, str]] = None
+                   ) -> "CompressionSpec":
         lens = tuple((p, tuple(int(v) for v in b.lengths))
                      for p, b in books.items())
         ids = tuple((p, b.book_id) for p, b in books.items())
         return cls(mode=mode, scheme_name=scheme_name, tensor_kind=tensor_kind,
                    plane_lengths=lens, book_ids=ids, transport=transport,
-                   chunk=chunk, decode_backend=decode_backend, carry=carry)
+                   chunk=chunk, decode_backend=decode_backend, carry=carry,
+                   axes=axes)
 
 
 def _planes_of(x: jnp.ndarray, spec: CompressionSpec) -> Dict[str, jnp.ndarray]:

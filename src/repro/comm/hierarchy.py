@@ -1,0 +1,125 @@
+"""Hierarchical two-axis compressed rings (intra-pod × inter-pod).
+
+A flat n-device ring pays 2(n−1) hop latencies per all_reduce.  Real
+deployments are hierarchical: fast intra-pod links (ICI / die-to-die)
+and a much thinner inter-pod fabric (DCN).  The classic two-level
+algorithm keeps the slow axis's traffic at 1/n₁ of the payload by
+reducing locally first:
+
+    1. **intra-axis reduce_scatter**  (n₁−1 hops on the fast links):
+       every inner-ring device ends owning 1/n₁ of the pod-local sum;
+    2. **inter-axis all_reduce on the shard**  (2(n₂−1) hops on the slow
+       links, payload/n₁ each): segment owners reduce across pods;
+    3. **intra-axis all_gather**  (n₁−1 hops on the fast links):
+       the globally reduced segments travel the inner ring back out.
+
+Every stage is one of the compressed ring collectives from
+``repro.comm.ring`` — the payload stays Huffman-coded on all
+2(n₁−1) + 2(n₂−1) hops and every hop is measured in the combined
+``hop_coded_bits`` ledger (stage order: inner reduce-scatter hops, then
+outer all-reduce hops, then inner all-gather hops).
+
+Analytic per-device raw volume is the **sum of the per-axis terms**
+
+    (n₁−1)/n₁ · S  +  2(n₂−1)/(n₁n₂) · S  +  (n₁−1)/n₁ · S
+
+(S = local payload bits) versus a flat (n₁n₂)-ring's 2(n₁n₂−1)/(n₁n₂)·S:
+the totals are close, but the hierarchical form moves all but
+2(n₂−1)/(n₁n₂) of it onto the fast axis and cuts the slow-axis hop
+count from 2(n₁n₂−1) to 2(n₂−1) — see docs/collectives.md for when to
+pick which.
+
+Numerics: with ``carry="wire"`` every stage reduces in the scheme
+dtype, so the composition is bit-exact vs a two-axis ``jax.lax.psum``
+whenever the additions are exact in that dtype (integer-valued
+payloads — pinned in tests).  ``carry="f32"`` applies *within* each
+stage (f32 partial sums across that stage's hops, two wire components
+per hop); the stage boundary still rounds to the wire dtype, which is
+exactly what a hardware hierarchy whose pods exchange wire-dtype shards
+would do.
+
+Selection is spec-driven: ``CompressionSpec.axes = (inner, outer)``
+routes ``all_reduce_compressed`` here (see ``repro.comm.transport``).
+"""
+from __future__ import annotations
+
+from typing import Dict, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core.codebook import Codebook
+from ..core.encoder import DEFAULT_CHUNK
+from ..core.symbols import SCHEMES
+from .ring import (DEFAULT_RING_BACKEND, ring_all_gather, ring_all_reduce,
+                   ring_reduce_scatter)
+from .transport import axis_size
+
+__all__ = ["hierarchical_all_reduce", "hierarchical_wire_factor"]
+
+
+def hierarchical_wire_factor(n_inner: int, n_outer: int) -> float:
+    """Analytic per-device all_reduce egress (× local payload) of the
+    two-axis ring: sum of the per-axis terms (used by the train-step
+    ledger the same way ``Transport.wire_factor`` is for flat rings)."""
+    if n_inner <= 1 and n_outer <= 1:
+        return 0.0
+    return (2.0 * (n_inner - 1) / n_inner
+            + 2.0 * (n_outer - 1) / (n_inner * n_outer))
+
+
+def _check_axes(axis_names: Sequence[str]) -> Tuple[str, str]:
+    if (len(axis_names) != 2 or len(set(axis_names)) != 2
+            or not all(isinstance(a, str) and a for a in axis_names)):
+        raise ValueError(f"hierarchical ring needs two distinct mesh axis "
+                         f"names (inner, outer), got {axis_names!r}")
+    return axis_names[0], axis_names[1]
+
+
+def hierarchical_all_reduce(x, axis_names: Sequence[str],
+                            books: Dict[str, Codebook],
+                            scheme_name: str = "bf16", *,
+                            chunk: int = DEFAULT_CHUNK,
+                            decode_backend: str = DEFAULT_RING_BACKEND,
+                            carry: str = "wire"
+                            ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Two-axis ring all_reduce: intra-axis reduce_scatter → inter-axis
+    all_reduce on the owned segment → intra-axis all_gather.
+
+    ``axis_names = (inner, outer)``: ``inner`` is the fast axis (the
+    pod-local ring that carries the full payload), ``outer`` the slow
+    axis (each of its hops carries only 1/n_inner of the payload).  All
+    three stages are compressed ring collectives; the stats compose so
+    the transport conventions hold on the full two-axis mesh (a caller
+    psum over *both* axes reads global wire bits / hop counts, exactly
+    like a flat ring on one axis).
+    """
+    inner, outer = _check_axes(axis_names)
+    n1, n2 = axis_size(inner), axis_size(outer)
+    scheme = SCHEMES[scheme_name]
+
+    seg, s1 = ring_reduce_scatter(x, inner, books, scheme_name, chunk=chunk,
+                                  decode_backend=decode_backend, carry=carry)
+    red, s2 = ring_all_reduce(seg, outer, books, scheme_name, chunk=chunk,
+                              decode_backend=decode_backend, carry=carry)
+    full, s3 = ring_all_gather(red, inner, books, scheme_name, chunk=chunk,
+                               decode_backend=decode_backend)
+    # segments come back in inner-axis device order == flat segment
+    # order; trim the indivisible-size padding.
+    y = full[:x.size].reshape(x.shape).astype(x.dtype)
+
+    wire_keys = ("raw_wire_bits", "coded_wire_bits", "payload_header_bits")
+    stats = {k: s1[k] + s2[k] + s3[k] for k in wire_keys}
+    # payload keys follow the flat-ring convention (replicated global
+    # value): stage 1's probe is already inner-global, one more psum
+    # over the outer axis makes it mesh-global.
+    stats["payload_raw_bits"] = jnp.float32(
+        x.size * scheme.total_symbol_bits()) * (n1 * n2)
+    stats["payload_coded_bits"] = jax.lax.psum(s1["payload_coded_bits"],
+                                               outer)
+    # measured per-hop ledger, stage order: (n1−1) inner reduce-scatter
+    # hops, 2(n2−1) outer all-reduce hops, (n1−1) inner gather hops.
+    stats["hop_coded_bits"] = jnp.concatenate(
+        [s1["hop_coded_bits"], s2["hop_coded_bits"], s3["hop_coded_bits"]])
+    stats["hops"] = jnp.float32(2 * (n1 - 1) + 2 * (n2 - 1)) / (n1 * n2)
+    return y, stats

@@ -8,9 +8,7 @@ the roofline's collective term is scaled by.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
-
-import numpy as np
+from typing import Dict, List
 
 __all__ = ["CollectiveLedger", "LedgerEntry"]
 

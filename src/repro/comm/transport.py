@@ -10,7 +10,7 @@ wire bits are accounted.  The three built-ins:
   chunked    — the PR 1 streaming wire format: each plane's stream is
       cut into fixed-symbol chunks with per-chunk bit-count headers;
       each chunk rides its own collective so chunk N's decode overlaps
-      chunk N+1's transfer (Pallas decode kernel by default).
+      chunk N+1's transfer (multisym table decode by default).
   ring       — ``jax.lax.ppermute`` ring over ``ChunkedStream`` words;
       every hop decodes the incoming chunk, reduces (add for psum,
       append for gather) and re-encodes before forwarding, so the
@@ -18,11 +18,15 @@ wire bits are accounted.  The three built-ins:
       strictly per-hop wire bits (see ``repro.comm.ring``).
 
 Selection is registry-driven: ``CompressionSpec.transport`` names the
-transport and ``all_gather_compressed`` / ``all_reduce_compressed``
-dispatch through ``TRANSPORTS`` — one entry point instead of a per-op
-function zoo.  All transports return identical decoded results; the
-monolithic and chunked ledgers are estimates of a ring's traffic under
+transport and the ``*_compressed`` entry points (``all_gather`` /
+``all_reduce`` / ``reduce_scatter`` / ``all_to_all``) dispatch through
+``TRANSPORTS`` — one entry point per op instead of a per-op function
+zoo.  All transports return identical decoded results; the monolithic
+and chunked ledgers are estimates of a ring's traffic under
 re-encode-per-hop, the ring ledger is the measured per-hop accounting.
+Setting ``CompressionSpec.axes = (inner, outer)`` routes
+``all_reduce_compressed`` to the hierarchical two-axis ring
+(``repro.comm.hierarchy``).
 
 Stat convention (all transports): stats are replicated scalars equal to
 ``true_global_quantity / n`` so that a caller-side ``psum`` over the
@@ -51,9 +55,15 @@ __all__ = [
     "Transport", "MonolithicTransport", "ChunkedTransport", "RingTransport",
     "TRANSPORTS", "register_transport", "get_transport",
     "all_gather_compressed", "all_reduce_compressed",
+    "reduce_scatter_compressed", "all_to_all_compressed",
     "encode_planes", "decode_plane", "decode_blocks", "decode_gathered_chunk",
-    "reassemble", "axis_size", "RING_FACTORS",
+    "reassemble", "axis_size", "RING_FACTORS", "DEFAULT_DECODE_BACKEND",
 ]
+
+# Default chunked-decode backend for every transport entry point: the
+# multi-symbol table walk (pure XLA, fastest portable backend — see
+# docs/kernels.md; ``pallas`` / ``multisym_pallas`` opt into kernels).
+DEFAULT_DECODE_BACKEND = "multisym"
 
 # Analytic ring-algorithm egress factors per device (× payload), shared
 # by ledger mode and the transports' raw-bit accounting.
@@ -64,6 +74,19 @@ RING_FACTORS = {
     "all_to_all": lambda n: (n - 1) / n,
     "ppermute": lambda n: 1.0,
 }
+
+
+def moe_dispatch_raw_bits(n_tokens: int, experts_per_token: int,
+                          d_model: int, symbol_bits: int,
+                          n_moe_layers: int) -> float:
+    """Raw bits of one step's MoE expert-dispatch payload: every routed
+    token slot ships its d_model hidden once out (dispatch) and once
+    back (combine), per MoE layer.  The single formula behind the
+    train- and serve-side ``moe_wire_raw_bits`` accounting (scaled by
+    ``RING_FACTORS['all_to_all']``); the *coded* size is measured where
+    the buffers exist — ``models.moe.moe_apply_a2a``'s hop ledger."""
+    return float(n_tokens * experts_per_token * d_model * symbol_bits
+                 * 2 * n_moe_layers)
 
 
 def axis_size(axis_name: str) -> int:
@@ -174,8 +197,12 @@ class Transport:
     """One wire strategy for bitexact compressed collectives.
 
     Subclasses implement ``all_gather`` and ``all_reduce`` with the
-    shared signature; both return ``(result, stats)`` where stats follow
-    the module-level replication convention.
+    shared signature; every op returns ``(result, stats)`` where stats
+    follow the module-level replication convention.
+    ``reduce_scatter`` and ``all_to_all`` have endpoint-decode defaults
+    built on the subclass's ``all_gather`` (decode everything, keep /
+    reduce the local part, account the analytic (n−1)/n ring estimate);
+    the ring transport overrides them with true per-hop-coded rings.
     """
 
     name: str = "?"
@@ -187,13 +214,63 @@ class Transport:
 
     def all_gather(self, x, axis_name: str, books: Dict[str, Codebook],
                    scheme_name: str = "bf16", *, chunk: int = DEFAULT_CHUNK,
-                   decode_backend: str = "pallas"):
+                   decode_backend: str = DEFAULT_DECODE_BACKEND):
         raise NotImplementedError
 
     def all_reduce(self, x, axis_name: str, books: Dict[str, Codebook],
                    scheme_name: str = "bf16", *, chunk: int = DEFAULT_CHUNK,
-                   decode_backend: str = "pallas", carry: str = "wire"):
+                   decode_backend: str = DEFAULT_DECODE_BACKEND,
+                   carry: str = "wire"):
         raise NotImplementedError
+
+    def _rescale_wire(self, stats, op: str, n: int):
+        """Endpoint ops ship the same gathered streams as ``all_gather``;
+        the *estimate* of a ring's per-device egress for ``op`` rescales
+        the payload probe by the op's analytic ring factor."""
+        out = dict(stats)
+        f = self.wire_factor(op, n)
+        out["raw_wire_bits"] = stats["payload_raw_bits"] / n * f
+        out["coded_wire_bits"] = stats["payload_coded_bits"] / n * f
+        return out
+
+    def reduce_scatter(self, x, axis_name: str, books: Dict[str, Codebook],
+                       scheme_name: str = "bf16", *,
+                       chunk: int = DEFAULT_CHUNK,
+                       decode_backend: str = DEFAULT_DECODE_BACKEND,
+                       carry: str = "wire"):
+        """Endpoint-decode default: gather every peer's coded stream,
+        decode, reduce locally, keep this device's flat segment
+        (``jax.lax.psum_scatter(tiled=True)`` semantics on the
+        flattened tensor, tail zero-padded when indivisible)."""
+        _require_wire_carry(self.name, carry)
+        n = axis_size(axis_name)
+        g, st = self.all_gather(x, axis_name, books, scheme_name,
+                                chunk=chunk, decode_backend=decode_backend)
+        full = g.reshape((n,) + x.shape).sum(axis=0).astype(x.dtype)
+        flat = full.reshape(-1)
+        seg_len = -(-x.size // n)
+        if n * seg_len > x.size:
+            flat = jnp.concatenate(
+                [flat, jnp.zeros((n * seg_len - x.size,), x.dtype)])
+        i = jax.lax.axis_index(axis_name)
+        y = jax.lax.dynamic_slice(flat, (i * seg_len,), (seg_len,))
+        return y, self._rescale_wire(st, "reduce_scatter", n)
+
+    def all_to_all(self, x, axis_name: str, books: Dict[str, Codebook],
+                   scheme_name: str = "bf16", *, chunk: int = DEFAULT_CHUNK,
+                   decode_backend: str = DEFAULT_DECODE_BACKEND):
+        """Endpoint-decode default: gather every peer's coded payload
+        and keep the shards addressed to this device (``split_axis=0``
+        convention: x.shape[0] == n, shard j goes to device j)."""
+        n = axis_size(axis_name)
+        if x.shape[0] != n:
+            raise ValueError(f"all_to_all needs x.shape[0] == axis size "
+                             f"({n}), got {x.shape}")
+        g, st = self.all_gather(x, axis_name, books, scheme_name,
+                                chunk=chunk, decode_backend=decode_backend)
+        i = jax.lax.axis_index(axis_name)
+        y = jnp.take(g.reshape((n,) + x.shape), i, axis=1)
+        return y, self._rescale_wire(st, "all_to_all", n)
 
 
 TRANSPORTS: Dict[str, Transport] = {}
@@ -224,7 +301,7 @@ class MonolithicTransport(Transport):
     name = "monolithic"
 
     def all_gather(self, x, axis_name, books, scheme_name="bf16", *,
-                   chunk=DEFAULT_CHUNK, decode_backend="pallas"):
+                   chunk=DEFAULT_CHUNK, decode_backend=DEFAULT_DECODE_BACKEND):
         n = axis_size(axis_name)
         enc = encode_planes(x, books, scheme_name)
         out_planes = {}
@@ -245,7 +322,7 @@ class MonolithicTransport(Transport):
         return y, stats
 
     def all_reduce(self, x, axis_name, books, scheme_name="bf16", *,
-                   chunk=DEFAULT_CHUNK, decode_backend="pallas",
+                   chunk=DEFAULT_CHUNK, decode_backend=DEFAULT_DECODE_BACKEND,
                    carry="wire"):
         """Gather streams, decode, add at the endpoint (decode-then-add)."""
         _require_wire_carry(self.name, carry)
@@ -269,7 +346,7 @@ class ChunkedTransport(Transport):
     name = "chunked"
 
     def all_gather(self, x, axis_name, books, scheme_name="bf16", *,
-                   chunk=DEFAULT_CHUNK, decode_backend="pallas"):
+                   chunk=DEFAULT_CHUNK, decode_backend=DEFAULT_DECODE_BACKEND):
         n = axis_size(axis_name)
         enc = encode_planes(x, books, scheme_name, chunk=chunk)
         out_planes = {}
@@ -301,7 +378,7 @@ class ChunkedTransport(Transport):
         return y, stats
 
     def all_reduce(self, x, axis_name, books, scheme_name="bf16", *,
-                   chunk=DEFAULT_CHUNK, decode_backend="pallas",
+                   chunk=DEFAULT_CHUNK, decode_backend=DEFAULT_DECODE_BACKEND,
                    carry="wire"):
         """Per-chunk gather → decode → add; chunk-local reduction.
 
@@ -349,18 +426,33 @@ class RingTransport(Transport):
     name = "ring"
 
     def all_gather(self, x, axis_name, books, scheme_name="bf16", *,
-                   chunk=DEFAULT_CHUNK, decode_backend="pallas"):
+                   chunk=DEFAULT_CHUNK, decode_backend=DEFAULT_DECODE_BACKEND):
         from .ring import ring_all_gather
         return ring_all_gather(x, axis_name, books, scheme_name,
                                chunk=chunk, decode_backend=decode_backend)
 
     def all_reduce(self, x, axis_name, books, scheme_name="bf16", *,
-                   chunk=DEFAULT_CHUNK, decode_backend="pallas",
+                   chunk=DEFAULT_CHUNK, decode_backend=DEFAULT_DECODE_BACKEND,
                    carry="wire"):
         from .ring import ring_all_reduce
         return ring_all_reduce(x, axis_name, books, scheme_name,
                                chunk=chunk, decode_backend=decode_backend,
                                carry=carry)
+
+    def reduce_scatter(self, x, axis_name, books, scheme_name="bf16", *,
+                       chunk=DEFAULT_CHUNK,
+                       decode_backend=DEFAULT_DECODE_BACKEND, carry="wire"):
+        from .ring import ring_reduce_scatter
+        return ring_reduce_scatter(x, axis_name, books, scheme_name,
+                                   chunk=chunk, decode_backend=decode_backend,
+                                   carry=carry)
+
+    def all_to_all(self, x, axis_name, books, scheme_name="bf16", *,
+                   chunk=DEFAULT_CHUNK,
+                   decode_backend=DEFAULT_DECODE_BACKEND):
+        from .ring import ring_all_to_all
+        return ring_all_to_all(x, axis_name, books, scheme_name,
+                               chunk=chunk, decode_backend=decode_backend)
 
 
 # -------------------------------------------------------------- dispatch
@@ -374,8 +466,43 @@ def all_gather_compressed(x, axis_name: str, books: Dict[str, Codebook],
 
 def all_reduce_compressed(x, axis_name: str, books: Dict[str, Codebook],
                           spec) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
-    """Registry-driven bitexact all-reduce: transport named by the spec."""
+    """Registry-driven bitexact all-reduce: transport named by the spec.
+
+    When ``spec.axes = (inner, outer)`` is set the op runs as the
+    hierarchical two-axis ring over those mesh axes (``axis_name`` is
+    ignored — the spec carries the full topology).
+    """
+    if getattr(spec, "axes", None):
+        from .hierarchy import hierarchical_all_reduce
+        return hierarchical_all_reduce(
+            x, spec.axes, books, spec.scheme_name, chunk=spec.chunk,
+            decode_backend=spec.decode_backend,
+            carry=getattr(spec, "carry", "wire"))
     t = get_transport(spec.transport)
     return t.all_reduce(x, axis_name, books, spec.scheme_name,
                         chunk=spec.chunk, decode_backend=spec.decode_backend,
                         carry=getattr(spec, "carry", "wire"))
+
+
+def reduce_scatter_compressed(x, axis_name: str, books: Dict[str, Codebook],
+                              spec) -> Tuple[jnp.ndarray,
+                                             Dict[str, jnp.ndarray]]:
+    """Registry-driven bitexact reduce-scatter: transport from the spec.
+
+    Returns this device's flat ``ceil(size/n)`` segment of the global
+    sum (``jax.lax.psum_scatter(tiled=True)`` semantics).
+    """
+    t = get_transport(spec.transport)
+    return t.reduce_scatter(x, axis_name, books, spec.scheme_name,
+                            chunk=spec.chunk,
+                            decode_backend=spec.decode_backend,
+                            carry=getattr(spec, "carry", "wire"))
+
+
+def all_to_all_compressed(x, axis_name: str, books: Dict[str, Codebook],
+                          spec) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Registry-driven bitexact all-to-all (``split_axis=0`` convention:
+    ``x.shape[0]`` must equal the axis size)."""
+    t = get_transport(spec.transport)
+    return t.all_to_all(x, axis_name, books, spec.scheme_name,
+                        chunk=spec.chunk, decode_backend=spec.decode_backend)

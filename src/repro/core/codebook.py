@@ -25,8 +25,7 @@ from typing import Dict, Iterable, List, Optional, Tuple
 
 import numpy as np
 
-from .entropy import (compressibility, expected_code_length, pmf_from_counts,
-                      shannon_entropy)
+from .entropy import compressibility, expected_code_length, pmf_from_counts
 from .huffman import (MAX_CODE_LEN, MULTISYM_K, MULTISYM_SMAX,
                       CanonicalTables, MultiSymTables, build_multisym_tables,
                       canonical_codes, canonical_decode_tables,

@@ -12,7 +12,6 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
-import jax.numpy as jnp
 import numpy as np
 
 from .codebook import CodebookKey, CodebookRegistry

@@ -9,7 +9,7 @@ host-sharded arrays ready for `jax.device_put` against the batch pspec.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, Iterator, Optional
+from typing import Dict, Iterator
 
 import numpy as np
 

@@ -36,7 +36,6 @@ transitively, `core.encoder.decode_np`.
 from __future__ import annotations
 
 import functools
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -17,7 +17,6 @@ import numpy as np
 from ..core.codebook import Codebook
 from .encode import encode_lookup_pallas
 from .histogram import histogram256_pallas
-from . import ref as _ref
 
 INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
 

@@ -33,7 +33,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ..configs import (ARCH_IDS, SHAPES, get_config, input_pspecs,
                        input_specs, shape_plan, train_grad_accum)
-from ..models.common import Axes, ModelConfig
+from ..models.common import ModelConfig
 from ..models.transformer import (decode_step, forward_train, model_init,
                                   model_pspec)
 from ..optim.adamw import AdamWConfig, adamw_state_pspec
@@ -238,16 +238,22 @@ def ring_collective_check(n: int = 8, payload: int = 4096, chunk: int = 512,
                           verbose: bool = True) -> Dict[str, Any]:
     """Lower, compile and RUN the ring transport on an n-device submesh.
 
-    Proves the ring collectives (comm/ring.py) are distribution-coherent
-    the same way the model dry-runs are: the shard_map body must lower
-    and compile (2(n−1) collective-permutes per op expected in the HLO),
-    and the executed result must be bit-exact vs ``jax.lax.psum`` /
-    ``all_gather`` (integer-valued payload, so ring summation order is
-    exact) with the measured per-hop ledger matching the analytic ring
-    volume 2(n−1)/n × payload for all_reduce.
+    Proves the ring collectives (comm/ring.py, comm/hierarchy.py) are
+    distribution-coherent the same way the model dry-runs are: the
+    shard_map bodies must lower and compile (collective-permutes in the
+    HLO), and the executed results must be bit-exact vs their
+    ``jax.lax`` counterparts — ``psum`` / ``all_gather`` /
+    ``psum_scatter`` / ``all_to_all`` and, on a two-axis (2 × n/2)
+    mesh, the hierarchical all-reduce vs a double ``psum``
+    (integer-valued payload, so every ring summation order is exact) —
+    with the measured per-hop ledgers matching the analytic ring
+    volumes (2(n−1)/n for all_reduce, (n−1)/n for reduce_scatter /
+    all_to_all, the sum of per-axis terms for the hierarchy).
     """
     import numpy as np
-    from ..comm import ring_all_gather, ring_all_reduce
+    from ..comm import (hierarchical_all_reduce, hierarchical_wire_factor,
+                        ring_all_gather, ring_all_reduce, ring_all_to_all,
+                        ring_reduce_scatter)
     from ..core.codebook import build_codebook
     from ..core.symbols import SCHEMES
 
@@ -269,43 +275,108 @@ def ring_collective_check(n: int = 8, payload: int = 4096, chunk: int = 512,
                                  decode_backend="scan")
         yg, _ = ring_all_gather(xs, "data", books, "bf16", chunk=chunk,
                                 decode_backend="scan")
+        # the new ops run the default (multisym) hop decode backend
+        ys, ss = ring_reduce_scatter(xs[0], "data", books, "bf16",
+                                     chunk=chunk)
+        ya, sa = ring_all_to_all(xs[0].reshape(n, -1), "data", books,
+                                 "bf16", chunk=chunk)
         want_r = jax.lax.psum(xs[0].astype(jnp.float32), "data")
         want_g = jax.lax.all_gather(xs, "data", tiled=True)
-        stats = {k: jax.lax.psum(v, "data") for k, v in sr.items()
-                 if getattr(v, "ndim", 0) == 0}
-        return yr[None], yg[:1], want_r[None], want_g[:1], stats
+        want_s = jax.lax.psum_scatter(
+            xs[0].astype(jnp.float32).reshape(n, -1), "data", tiled=True)
+        want_a = jax.lax.all_to_all(xs[0].reshape(n, -1), "data",
+                                    split_axis=0, concat_axis=0)
+        def scalars(s):
+            return {k: jax.lax.psum(v, "data") for k, v in s.items()
+                    if getattr(v, "ndim", 0) == 0}
+        return (yr[None], yg[:1], ys[None], ya[None],
+                want_r[None], want_g[:1], want_s[None], want_a[None],
+                {"ar": scalars(sr), "rs": scalars(ss), "a2a": scalars(sa)})
 
     fn = jax.jit(_shard_map(body, mesh=mesh, in_specs=P("data"),
                             out_specs=(P("data"), P("data"), P("data"),
-                                       P("data"), P())))
+                                       P("data"), P("data"), P("data"),
+                                       P("data"), P("data"), P())))
     lowered = fn.lower(jax.ShapeDtypeStruct(x.shape, x.dtype))
     compiled = lowered.compile()
     n_permutes = compiled.as_text().count("collective-permute")
 
-    yr, yg, want_r, want_g, stats = fn(jnp.asarray(x))
-    ar_exact = bool((jnp.asarray(yr, jnp.float32)
-                     == jnp.asarray(want_r, jnp.float32)).all())
-    ag_exact = bool((jnp.asarray(yg, jnp.float32)
-                     == jnp.asarray(want_g, jnp.float32)).all())
-    raw_wire = float(stats["raw_wire_bits"])
+    (yr, yg, ys, ya, want_r, want_g, want_s, want_a,
+     stats) = fn(jnp.asarray(x))
+
+    def exact(a, b):
+        return bool((jnp.asarray(a, jnp.float32)
+                     == jnp.asarray(b, jnp.float32)).all())
+
+    ar_exact = exact(yr, want_r)
+    ag_exact = exact(yg, want_g)
+    rs_exact = exact(ys, want_s.reshape(ys.shape))
+    a2a_exact = exact(ya, want_a)
+
+    # --- hierarchical two-axis ring on a (2 × n//2) sub-mesh -----------
+    # (first n2·n1 devices; for odd n the flat checks above still cover
+    # every device, the hierarchy just uses one fewer)
+    n2, n1 = 2, n // 2
+    mesh2 = jax.sharding.Mesh(
+        np.asarray(jax.devices()[:n2 * n1]).reshape(n2, n1),
+        ("outer", "inner"))
+    xh = rng.integers(-2, 3, size=(n2, n1, payload)).astype(jnp.bfloat16)
+
+    def body2(xs):
+        y, s = hierarchical_all_reduce(xs[0, 0], ("inner", "outer"), books,
+                                       "bf16", chunk=chunk)
+        want = jax.lax.psum(jax.lax.psum(
+            xs[0, 0].astype(jnp.float32), "inner"), "outer")
+        stats = {k: jax.lax.psum(jax.lax.psum(v, "inner"), "outer")
+                 for k, v in s.items() if getattr(v, "ndim", 0) == 0}
+        return y[None, None], want[None, None], stats
+
+    fn2 = jax.jit(_shard_map(body2, mesh=mesh2, in_specs=P("outer", "inner"),
+                             out_specs=(P("outer", "inner"),
+                                        P("outer", "inner"), P())))
+    yh, want_h, sh = fn2(jnp.asarray(xh))
+    hier_exact = exact(yh, want_h)
+
+    raw_wire = float(stats["ar"]["raw_wire_bits"])
     analytic_raw = 2.0 * (n - 1) * payload * 16
+    rs_raw = float(stats["rs"]["raw_wire_bits"])
+    rs_analytic = (n - 1) * payload * 16
+    a2a_raw = float(stats["a2a"]["raw_wire_bits"])
+    a2a_analytic = (n - 1) * payload * 16
+    hier_raw = float(sh["raw_wire_bits"])
+    S = payload * 16
+    # sum of per-axis terms, via the same closed form the train ledger
+    # uses (repro.comm.hierarchy)
+    hier_analytic = (n1 * n2) * hierarchical_wire_factor(n1, n2) * S
+    volumes_ok = (abs(raw_wire - analytic_raw) < 1e-3
+                  and abs(rs_raw - rs_analytic) < 1e-3
+                  and abs(a2a_raw - a2a_analytic) < 1e-3
+                  and abs(hier_raw - hier_analytic) < 1e-3)
     rec = {
         "kind": "ring_check", "mesh": f"{n}x1(ring)", "n_devices": n,
         "payload_elems": payload, "chunk": chunk,
         "collective_permutes_lowered": int(n_permutes),
         "bitexact_all_reduce": ar_exact, "bitexact_all_gather": ag_exact,
+        "bitexact_reduce_scatter": rs_exact, "bitexact_all_to_all": a2a_exact,
+        "bitexact_hierarchical": hier_exact,
         "ar_raw_wire_bits": raw_wire, "ar_analytic_raw_bits": analytic_raw,
-        "ar_coded_wire_bits": float(stats["coded_wire_bits"]),
-        "ar_hops": int(float(stats["hops"])),    # psummed global/n stat
+        "ar_coded_wire_bits": float(stats["ar"]["coded_wire_bits"]),
+        "ar_hops": int(float(stats["ar"]["hops"])),  # psummed global/n stat
+        "rs_raw_wire_bits": rs_raw, "rs_analytic_raw_bits": rs_analytic,
+        "a2a_raw_wire_bits": a2a_raw, "a2a_analytic_raw_bits": a2a_analytic,
+        "hier_mesh": f"{n2}x{n1}", "hier_raw_wire_bits": hier_raw,
+        "hier_analytic_raw_bits": hier_analytic,
+        "hier_hops": int(float(sh["hops"])),
         "compile_s": round(time.time() - t0, 1),
-        "status": "ok" if (ar_exact and ag_exact
-                           and abs(raw_wire - analytic_raw) < 1e-3
+        "status": "ok" if (ar_exact and ag_exact and rs_exact and a2a_exact
+                           and hier_exact and volumes_ok
                            and n_permutes >= 2 * (n - 1)) else "FAILED",
     }
     if verbose:
         print(f"[dryrun] ring-check n={n} payload={payload} "
-              f"permutes={n_permutes} bitexact(ar/ag)="
-              f"{ar_exact}/{ag_exact} "
+              f"permutes={n_permutes} "
+              f"bitexact(ar/ag/rs/a2a/hier)="
+              f"{ar_exact}/{ag_exact}/{rs_exact}/{a2a_exact}/{hier_exact} "
               f"coded/raw={rec['ar_coded_wire_bits'] / raw_wire:.3f} "
               f"status={rec['status']}")
     return rec

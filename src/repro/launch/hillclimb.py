@@ -24,7 +24,7 @@ Usage:  python -m repro.launch.hillclimb [--pair qwen3] [--out results/hillclimb
 import argparse
 import json
 from dataclasses import replace
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List
 
 # Measured wire-compression ratios (coded/raw) from benchmarks on the
 # Gemma SFT proxy — fig4 (paper-faithful interleaved codebook) and

@@ -24,7 +24,7 @@ from ..comm.compression import CompressionSpec
 from ..comm.ledger import CollectiveLedger
 from ..configs import ARCH_IDS, get_config, train_grad_accum
 from ..core.codebook import CodebookRegistry
-from ..core.symbols import SCHEMES, bf16_planes_np
+from ..core.symbols import bf16_planes_np
 from ..data import DataConfig, SyntheticDataset
 from ..models.transformer import model_init, param_count
 from ..optim.adamw import AdamWConfig, cosine_schedule

@@ -15,13 +15,11 @@ report can show it.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field, replace
-from typing import Any, Callable, Dict, Optional, Tuple
+from dataclasses import dataclass, replace
+from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
-from jax.sharding import PartitionSpec as P
 
 __all__ = ["BlockGroup", "ModelConfig", "Axes", "shard_or_replicate",
            "param_dtype", "truncated_normal_init"]

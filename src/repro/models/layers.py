@@ -10,7 +10,7 @@ cfg.dtype (bf16) with f32 softmax/norm accumulators.
 """
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -12,7 +12,6 @@ The rotary part is decoupled: a single shared rope-key per token.
 """
 from __future__ import annotations
 
-from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -37,7 +37,8 @@ from .common import Axes, ModelConfig, shard_or_replicate, truncated_normal_init
 from .layers import mlp_apply, mlp_init, mlp_pspec
 
 __all__ = ["moe_init", "moe_pspec", "moe_apply", "moe_prefill", "moe_decode",
-           "moe_capacity", "moe_stream_capacity", "moe_stream_capacity_host"]
+           "moe_apply_a2a", "moe_capacity", "moe_stream_capacity",
+           "moe_stream_capacity_host"]
 
 
 def moe_capacity(n_tokens: int, cfg: ModelConfig) -> int:
@@ -112,6 +113,35 @@ def _route(params, xf, cfg: ModelConfig):
     return topw, topi, aux
 
 
+def _seq_dispatch(xs, ti_s, cfg: ModelConfig, cap: int, thr_slots, tok_idx):
+    """One sequence's streaming-capacity dispatch into expert buffers.
+
+    Dispatch positions come from this sequence's own causal prefix
+    only.  Returns ``(buf (E, C, d), flat_e, pos_c, keep, onehot)`` —
+    everything both the local expert path (``_moe_forward``) and the
+    all-to-all expert-parallel path (``moe_apply_a2a``) need to run
+    experts and combine.
+    """
+    e = cfg.n_experts
+    flat_e = ti_s.reshape(-1)                                # (S*k,)
+    onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)      # (S*k, E)
+    pos = (jnp.cumsum(onehot, axis=0) * onehot).sum(-1) - 1  # (S*k,)
+    keep = pos < thr_slots
+    pos_c = jnp.clip(pos, 0, cap - 1)
+    xd = xs[tok_idx] * keep[:, None].astype(xs.dtype)        # (S*k, d)
+    buf = jnp.zeros((e, cap, xs.shape[-1]), xs.dtype).at[flat_e, pos_c].add(
+        xd, mode="drop")                                     # (E, C, d)
+    return buf, flat_e, pos_c, keep, onehot
+
+
+def _seq_combine(out_buf, flat_e, pos_c, keep, tw_s, tok_idx, s: int, d: int):
+    """Inverse of ``_seq_dispatch``: gather expert outputs back to token
+    order and apply routing weights (dropped slots contribute zero)."""
+    yd = out_buf[flat_e, pos_c] * keep[:, None].astype(out_buf.dtype)
+    yd = yd * tw_s.reshape(-1)[:, None].astype(out_buf.dtype)
+    return jnp.zeros((s, d), out_buf.dtype).at[tok_idx].add(yd)
+
+
 def _moe_forward(params, x, cfg: ModelConfig):
     """Streaming-capacity MoE over full sequences.
 
@@ -122,7 +152,6 @@ def _moe_forward(params, x, cfg: ModelConfig):
     b, s, d = x.shape
     n = b * s
     k = cfg.experts_per_token
-    e = cfg.n_experts
     cap = moe_stream_capacity_host(s, cfg)
     xf = x.reshape(n, d)
 
@@ -136,25 +165,15 @@ def _moe_forward(params, x, cfg: ModelConfig):
     tok_idx = jnp.repeat(jnp.arange(s), k)
 
     def one_seq(xs, ti_s, tw_s):
-        # Dispatch positions from this sequence's own causal prefix only.
-        flat_e = ti_s.reshape(s * k)
-        onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)      # (S*k, E)
-        pos = (jnp.cumsum(onehot, axis=0) * onehot).sum(-1) - 1  # (S*k,)
-        keep = pos < thr_slots
-        pos_c = jnp.clip(pos, 0, cap - 1)
-
-        xd = xs[tok_idx] * keep[:, None].astype(xs.dtype)        # (S*k, d)
-        buf = jnp.zeros((e, cap, d), xs.dtype).at[flat_e, pos_c].add(
-            xd, mode="drop")                                     # (E, C, d)
+        buf, flat_e, pos_c, keep, onehot = _seq_dispatch(
+            xs, ti_s, cfg, cap, thr_slots, tok_idx)
 
         h = act(jnp.einsum("ecd,edf->ecf", buf, params["w_gate"]))
         h = h * jnp.einsum("ecd,edf->ecf", buf, params["w_up"])
         out_buf = jnp.einsum("ecf,efd->ecd", h, params["w_down"])
 
-        yd = out_buf[flat_e, pos_c] * keep[:, None].astype(xs.dtype)
-        yd = yd * tw_s.reshape(-1)[:, None].astype(xs.dtype)
-        y = jnp.zeros((s, d), xs.dtype).at[tok_idx].add(yd)
-        return y, onehot.sum(axis=0)                             # (E,) counts
+        y = _seq_combine(out_buf, flat_e, pos_c, keep, tw_s, tok_idx, s, d)
+        return y, onehot.sum(axis=0)                         # (E,) counts
 
     y, counts = jax.vmap(one_seq)(x, ti, tw)
     y = y.reshape(n, d)
@@ -220,6 +239,103 @@ def moe_decode(params, x, counts, pos, cfg: ModelConfig):
     if cfg.n_shared_experts > 0:
         y = y + mlp_apply(params["shared"], xf, cfg)
     return y.reshape(b, 1, d), new_counts
+
+
+def moe_apply_a2a(params, x, cfg: ModelConfig, axis_name: str, books, *,
+                  scheme_name: str = "bf16", chunk: int = 2048,
+                  decode_backend: str = "multisym"
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Expert-parallel MoE whose dispatch/combine rides a **compressed
+    ring all_to_all** — the exact die-to-die-shaped traffic the paper's
+    encoder targets, Huffman-coded on every wire transfer and measured
+    per hop.
+
+    Call inside ``shard_map`` over ``axis_name`` (size tp, with
+    ``cfg.n_experts % tp == 0``); ``x`` is this shard's (B_local, S, d)
+    token slab, ``params`` the full (replicated) MoE params — each shard
+    computes only its E/tp experts.  Pipeline:
+
+        route + streaming-capacity dispatch (local, per sequence)
+          → ring_all_to_all of the (E, C, d) buffers, grouped by owning
+            shard (coded wire out)
+          → local experts over every shard's buffers (one batched einsum)
+          → ring_all_to_all of the outputs back to their source shards
+            (coded wire back)
+          → gather-combine with routing weights (local)
+
+    The wire is lossless and values are forwarded unchanged, so the
+    result is **bit-identical** to ``moe_apply`` on the same global
+    batch (pinned in tests); drop decisions are made at the source from
+    the sequence's own causal prefix, so the streaming-capacity decode
+    guarantee is untouched.  The aux loss is the pmean of the per-shard
+    Switch losses (equal token counts per shard).
+
+    Returns ``(y, aux, wire_stats)`` — stats are the two all_to_all
+    ledgers merged (``hop_coded_bits`` concatenated dispatch-then-
+    combine; scalar keys summed), following the transport replication
+    conventions.  ``books`` may come from any tensor kind: the fixed
+    codebook is lossless for foreign data (the paper's setting).
+    """
+    from ..comm.ring import ring_all_to_all
+    from ..comm.transport import axis_size
+
+    tp = axis_size(axis_name)
+    e = cfg.n_experts
+    if e % tp != 0:
+        raise ValueError(f"n_experts={e} not divisible by axis "
+                         f"{axis_name!r} size {tp}")
+    e_local = e // tp
+    b, s, d = x.shape
+    k = cfg.experts_per_token
+    cap = moe_stream_capacity_host(s, cfg)
+    xf = x.reshape(b * s, d)
+
+    topw, topi, aux_local = _route(params, xf, cfg)
+    aux = jax.lax.pmean(aux_local, axis_name)
+    tw = topw.reshape(b, s, k)
+    ti = topi.reshape(b, s, k)
+    thr_slots = jnp.repeat(moe_stream_capacity(jnp.arange(1, s + 1), cfg), k)
+    tok_idx = jnp.repeat(jnp.arange(s), k)
+
+    buf, flat_e, pos_c, keep, _ = jax.vmap(
+        lambda xs, ti_s: _seq_dispatch(xs, ti_s, cfg, cap, thr_slots,
+                                       tok_idx))(x, ti)     # buf (B, E, C, d)
+
+    # --- dispatch wire: buffers grouped by the shard owning the expert
+    send = buf.reshape(b, tp, e_local, cap, d).transpose(1, 0, 2, 3, 4)
+    recv, s_disp = ring_all_to_all(send, axis_name, books, scheme_name,
+                                   chunk=chunk,
+                                   decode_backend=decode_backend)
+    hbuf = recv.reshape(tp * b, e_local, cap, d)   # every shard's tokens
+
+    # --- local experts: one batched einsum over (tp·B, E/tp, C)
+    off = jax.lax.axis_index(axis_name) * e_local
+    wg = jax.lax.dynamic_slice_in_dim(params["w_gate"], off, e_local, 0)
+    wu = jax.lax.dynamic_slice_in_dim(params["w_up"], off, e_local, 0)
+    wd = jax.lax.dynamic_slice_in_dim(params["w_down"], off, e_local, 0)
+    act = jax.nn.silu if cfg.ffn_activation == "silu" else jax.nn.gelu
+    h = act(jnp.einsum("zecd,edf->zecf", hbuf, wg))
+    h = h * jnp.einsum("zecd,edf->zecf", hbuf, wu)
+    out_loc = jnp.einsum("zecf,efd->zecd", h, wd)  # (tp·B, E/tp, C, d)
+
+    # --- combine wire: expert outputs return to their source shards
+    back, s_comb = ring_all_to_all(out_loc.reshape(tp, b, e_local, cap, d),
+                                   axis_name, books, scheme_name,
+                                   chunk=chunk,
+                                   decode_backend=decode_backend)
+    out_buf = back.transpose(1, 0, 2, 3, 4).reshape(b, e, cap, d)
+
+    y = jax.vmap(lambda ob, fe, pc, kp, tw_s: _seq_combine(
+        ob, fe, pc, kp, tw_s, tok_idx, s, d))(out_buf, flat_e, pos_c,
+                                              keep, tw)
+    y = y.reshape(b * s, d)
+    if cfg.n_shared_experts > 0:
+        y = y + mlp_apply(params["shared"], xf, cfg)
+
+    stats = {key: (jnp.concatenate([s_disp[key], s_comb[key]])
+                   if key == "hop_coded_bits" else s_disp[key] + s_comb[key])
+             for key in s_disp}
+    return y.reshape(b, s, d), aux, stats
 
 
 def moe_apply_eshard(params, x, cfg: ModelConfig

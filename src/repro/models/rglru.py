@@ -19,7 +19,6 @@ per model-axis shard.
 """
 from __future__ import annotations
 
-from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -12,7 +12,7 @@ dim N and groups stay replicated.
 """
 from __future__ import annotations
 
-from typing import Dict, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

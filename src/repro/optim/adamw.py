@@ -8,7 +8,7 @@ helper handles that by prepending the data axis to the largest dim.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Callable, NamedTuple, Optional, Tuple
+from typing import Any, Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp

@@ -21,9 +21,8 @@ from __future__ import annotations
 
 import re
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Dict
 
-import numpy as np
 
 __all__ = ["CollectiveStats", "parse_collectives", "RooflineReport",
            "roofline_report", "model_flops"]

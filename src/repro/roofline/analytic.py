@@ -18,7 +18,6 @@ Formulas (per device; N_act = active params, T = tokens global):
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
 from typing import Dict, Tuple
 
 from ..models.common import ModelConfig

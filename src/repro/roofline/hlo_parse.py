@@ -17,11 +17,10 @@ whiles conservatively count once.
 from __future__ import annotations
 
 import re
-from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
-from .analysis import (_FACTORS, _GROUPS_RE, _OP_RE, _SHAPE_RE,
-                       CollectiveStats, _group_size, _shape_bytes)
+from .analysis import (_FACTORS, _OP_RE, CollectiveStats, _group_size,
+                       _shape_bytes)
 
 __all__ = ["parse_collectives_loop_aware"]
 

@@ -9,7 +9,7 @@ from __future__ import annotations
 
 from dataclasses import dataclass
 from functools import partial
-from typing import Any, Dict, Optional, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -21,7 +21,7 @@ from ..core.encoder import (DEFAULT_CHUNK, chunk_counts_for, concat_chunks,
                             encode_chunked_jit)
 from ..core.huffman import canonical_codes, canonical_decode_tables
 from ..models.common import ModelConfig
-from ..models.transformer import decode_step, init_caches, prefill
+from ..models.transformer import decode_step, prefill
 
 __all__ = ["ServeConfig", "Engine", "make_serve_step"]
 
@@ -35,14 +35,22 @@ class ServeConfig:
 
 def make_serve_step(model_cfg: ModelConfig,
                     comp_spec: Optional[CompressionSpec] = None, *,
-                    decode_chunk: Optional[int] = None, tp_degree: int = 1):
+                    decode_chunk: Optional[int] = None, tp_degree: int = 1,
+                    ep_degree: int = 1):
     """(params, tokens (B,1), caches, pos) → (logits, caches, metrics).
 
     With a CompressionSpec, the step also reports the coded size of the
     decode activations payload (what a TP all-gather of the token's
     hidden state would ship) and — via the spec's transport — the wire
     bits that gather costs on a ``tp_degree``-way link
-    (``act_wire_*_bits``; 0 when tp_degree == 1).  In ``bitexact`` mode
+    (``act_wire_*_bits``; 0 when tp_degree == 1).  For MoE models served
+    expert-parallel, ``ep_degree > 1`` additionally accounts the
+    per-token expert-dispatch all_to_all (``moe_wire_raw_bits``: B ×
+    top-k × d_model × wire bits, ×2 dispatch+combine, per MoE layer,
+    scaled by the (n−1)/n all-to-all ring factor; the *coded* dispatch
+    size is measured where the buffers exist — the per-hop ledger of
+    ``models.moe.moe_apply_a2a`` / ``comm.ring.ring_all_to_all``).
+    In ``bitexact`` mode
     the step additionally runs the full decompression path — chunked
     encode → chunked decode at the spec's chunk size — and accounts it:
     decoded payload bits, chunk count (the streaming granularity a
@@ -70,13 +78,24 @@ def make_serve_step(model_cfg: ModelConfig,
                 tables=canonical_decode_tables(lv),
                 source_counts=np.zeros(256, np.int64))
 
+    n_moe = sum(1 for kind in model_cfg.layer_kinds if "moe" in kind)
+
     def step(params, tokens, caches, pos):
         logits, caches = decode_step(params, tokens, caches, pos, model_cfg)
         z = jnp.zeros((), jnp.float32)
         metrics = {"act_raw_bits": z, "act_coded_bits": z,
                    "act_wire_raw_bits": z, "act_wire_coded_bits": z,
                    "act_decoded_bits": z, "act_decode_chunks": z,
-                   "act_decode_mismatch": z}
+                   "act_decode_mismatch": z, "moe_wire_raw_bits": z}
+        if (comp_spec is not None and comp_spec.enabled
+                and ep_degree > 1 and n_moe):
+            from ..comm.transport import RING_FACTORS, moe_dispatch_raw_bits
+            dispatch_raw = jnp.float32(moe_dispatch_raw_bits(
+                tokens.shape[0], model_cfg.experts_per_token,
+                model_cfg.d_model, comp_spec.scheme.total_symbol_bits(),
+                n_moe))
+            metrics["moe_wire_raw_bits"] = jnp.float32(
+                RING_FACTORS["all_to_all"](ep_degree)) * dispatch_raw
         if comp_spec is not None and comp_spec.enabled:
             h = logits.astype(jnp.bfloat16)
             s = payload_stats(h, comp_spec)
@@ -117,12 +136,13 @@ class Engine:
 
     def __init__(self, params, model_cfg: ModelConfig, serve_cfg: ServeConfig,
                  comp_spec: Optional[CompressionSpec] = None,
-                 tp_degree: int = 1):
+                 tp_degree: int = 1, ep_degree: int = 1):
         self.params = params
         self.cfg = model_cfg
         self.serve = serve_cfg
         self._step = jax.jit(make_serve_step(model_cfg, comp_spec,
-                                             tp_degree=tp_degree))
+                                             tp_degree=tp_degree,
+                                             ep_degree=ep_degree))
         self._prefill = jax.jit(
             partial(prefill, cfg=model_cfg, cache_len=serve_cfg.max_cache_len))
         self._key = jax.random.PRNGKey(serve_cfg.seed)
@@ -156,6 +176,7 @@ class Engine:
             out.append(tok)
         for k in ("act_raw_bits", "act_coded_bits", "act_wire_raw_bits",
                   "act_wire_coded_bits", "act_decoded_bits",
-                  "act_decode_chunks", "act_decode_mismatch"):
+                  "act_decode_chunks", "act_decode_mismatch",
+                  "moe_wire_raw_bits"):
             totals.setdefault(k, 0.0)                  # stable for 1-token gens
         return np.concatenate([np.asarray(t) for t in out], axis=1), totals

@@ -14,14 +14,12 @@ bytes by it.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-from functools import partial
 from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from ..comm.compression import CompressionSpec, payload_stats
+from ..comm.compression import CompressionSpec
 from ..models.common import ModelConfig
 from ..models.transformer import forward_train
 from ..optim.adamw import (AdamWConfig, AdamWState, adamw_init, adamw_update)
@@ -83,20 +81,68 @@ def make_train_step(model_cfg: ModelConfig, opt_cfg: AdamWConfig,
                     schedule_fn: Optional[Callable] = None,
                     grad_accum: int = 1,
                     comp_spec: Optional[CompressionSpec] = None,
-                    dp_degree: int = 1):
+                    dp_degree: int = 1,
+                    grad_sync: str = "all_reduce",
+                    dp_axis_sizes: Optional[Tuple[int, int]] = None,
+                    ep_degree: int = 1):
     """Build the jit-able train step: (state, batch) → (state, metrics).
 
     Batch leaves are (B, ...) global arrays; with grad_accum=A they are
     reshaped to (A, B/A, ...) and scanned.
 
     With a CompressionSpec the metrics additionally report the gradient
-    all-reduce *wire* traffic under the spec's transport: the payload
-    probe scaled by the transport's analytic all-reduce egress factor
-    for a ``dp_degree``-way ring (2(n−1)/n — identical for monolithic,
-    chunked and ring transports; the ring's measured per-hop numbers
-    come from the collective itself, see ``repro.comm.ring``).
-    ``dp_degree=1`` means no data-parallel wire, so wire bits are 0.
+    sync *wire* traffic under the spec's transport, scaling the payload
+    probe by the analytic ring egress factors for a ``dp_degree``-way
+    ring (the ring transport's measured per-hop numbers come from the
+    collective itself, see ``repro.comm.ring``).  ``grad_sync`` selects
+    the sync strategy being accounted:
+
+      ``"all_reduce"``      one 2(n−1)/n all-reduce of the gradients
+                            (``grad_wire_*_bits``).
+      ``"reduce_scatter"``  the ZeRO-style two-leg path: reduce_scatter
+                            the gradients ((n−1)/n), update the local
+                            optimizer shard, all_gather the refreshed
+                            params ((n−1)/n).  Metrics split the legs
+                            (``grad_wire_rs_*`` / ``grad_wire_ag_*``)
+                            and ``grad_wire_*_bits`` stays their sum —
+                            same total volume as the all-reduce, but
+                            each leg is independently compressible and
+                            the gather leg's payload is *parameters*
+                            (the gradient probe stands in for it here;
+                            the measured ledger of a real run comes from
+                            ``ring_reduce_scatter``/``ring_all_gather``).
+
+    When ``comp_spec.axes`` names a two-axis hierarchical ring,
+    ``dp_axis_sizes = (n_inner, n_outer)`` (product = ``dp_degree``)
+    accounts the hierarchical sum of per-axis terms — the total equals
+    the flat 2(n−1)/n volume (the hierarchy redistributes traffic, it
+    doesn't shrink it), so the useful additions are the per-axis split
+    metrics ``grad_wire_{inner,outer}_{raw,coded}_bits``: the outer
+    (slow, inter-pod) axis carries only 2(n₂−1)/(n₁n₂) of the payload
+    (``repro.comm.hierarchy``).
+
+    ``ep_degree > 1`` additionally accounts the MoE expert-dispatch
+    all_to_all wire (``moe_wire_raw_bits``): tokens × top-k × d_model ×
+    wire bits, ×2 (dispatch + combine), per MoE layer, scaled by the
+    (n−1)/n all-to-all factor.  The coded size of that wire is a
+    property of the activations, so it is *measured* where the buffers
+    exist — ``models.moe.moe_apply_a2a``'s per-hop ledger — rather than
+    estimated here.  ``dp_degree=1`` / ``ep_degree=1`` mean no wire, so
+    the corresponding bits are 0.
     """
+    if grad_sync not in ("all_reduce", "reduce_scatter"):
+        raise ValueError(f"unknown grad_sync {grad_sync!r}; one of "
+                         f"('all_reduce', 'reduce_scatter')")
+    if dp_axis_sizes is not None:
+        n1, n2 = dp_axis_sizes
+        if n1 * n2 != dp_degree:
+            raise ValueError(f"dp_axis_sizes {dp_axis_sizes} must multiply "
+                             f"to dp_degree={dp_degree}")
+        if grad_sync == "reduce_scatter":
+            raise ValueError(
+                "grad_sync='reduce_scatter' accounting is flat-ring only; "
+                "drop dp_axis_sizes (hierarchical ZeRO legs are not "
+                "modeled yet)")
 
     def loss_fn(params, micro):
         logits, aux = forward_train(params, micro, model_cfg)
@@ -133,17 +179,67 @@ def make_train_step(model_cfg: ModelConfig, opt_cfg: AdamWConfig,
                     else jnp.float32(1.0))
         params, opt, om = adamw_update(grads, state.opt, state.params,
                                        opt_cfg, lr_scale)
+        rs_factor = ag_factor = jnp.float32(0.0)
         if comp_spec is not None and comp_spec.enabled and dp_degree > 1:
             from ..comm.transport import get_transport
-            factor = jnp.float32(get_transport(comp_spec.transport)
-                                 .wire_factor("all_reduce", dp_degree))
-        else:
-            factor = jnp.float32(0.0)
+            transport = get_transport(comp_spec.transport)
+            if grad_sync == "reduce_scatter":
+                # ZeRO-style: rs the grads, ag the refreshed params —
+                # each leg ships (n−1)/n × payload.
+                rs_factor = jnp.float32(
+                    transport.wire_factor("reduce_scatter", dp_degree))
+                ag_factor = jnp.float32(
+                    (dp_degree - 1) / dp_degree)   # (n−1) × shard/n
+            elif comp_spec.axes is not None and dp_axis_sizes is not None:
+                from ..comm.hierarchy import hierarchical_wire_factor
+                # total == the flat 2(n-1)/n volume (the hierarchy
+                # redistributes traffic, it doesn't shrink it); the
+                # useful numbers are the per-axis split emitted below.
+                rs_factor = jnp.float32(
+                    hierarchical_wire_factor(*dp_axis_sizes))
+            else:
+                rs_factor = jnp.float32(
+                    transport.wire_factor("all_reduce", dp_degree))
         metrics = {"loss": loss, "ce": ce, "aux": aux,
                    "grad_raw_bits": comp["raw_bits"],
                    "grad_coded_bits": comp["coded_bits"],
-                   "grad_wire_raw_bits": factor * comp["raw_bits"],
-                   "grad_wire_coded_bits": factor * comp["coded_bits"], **om}
+                   "grad_wire_raw_bits": (rs_factor + ag_factor)
+                   * comp["raw_bits"],
+                   "grad_wire_coded_bits": (rs_factor + ag_factor)
+                   * comp["coded_bits"], **om}
+        if grad_sync == "reduce_scatter":
+            metrics["grad_wire_rs_raw_bits"] = rs_factor * comp["raw_bits"]
+            metrics["grad_wire_rs_coded_bits"] = rs_factor * comp["coded_bits"]
+            metrics["grad_wire_ag_raw_bits"] = ag_factor * comp["raw_bits"]
+            metrics["grad_wire_ag_coded_bits"] = ag_factor * comp["coded_bits"]
+        if (comp_spec is not None and comp_spec.enabled and dp_degree > 1
+                and comp_spec.axes is not None and dp_axis_sizes is not None):
+            # per-axis split of the hierarchical volume — the slow
+            # (outer) axis is the constrained resource the two-axis
+            # ring exists to relieve (repro.comm.hierarchy)
+            n1h, n2h = dp_axis_sizes
+            inner_f = jnp.float32(2.0 * (n1h - 1) / n1h)
+            outer_f = jnp.float32(2.0 * (n2h - 1) / (n1h * n2h))
+            metrics["grad_wire_inner_raw_bits"] = inner_f * comp["raw_bits"]
+            metrics["grad_wire_inner_coded_bits"] = (inner_f
+                                                    * comp["coded_bits"])
+            metrics["grad_wire_outer_raw_bits"] = outer_f * comp["raw_bits"]
+            metrics["grad_wire_outer_coded_bits"] = (outer_f
+                                                     * comp["coded_bits"])
+        if comp_spec is not None and comp_spec.enabled:
+            from ..comm.transport import RING_FACTORS, moe_dispatch_raw_bits
+            n_moe = sum(1 for kind in model_cfg.layer_kinds if "moe" in kind)
+            if ep_degree > 1 and n_moe:
+                n_tok = batch["tokens"].shape[0] * batch["tokens"].shape[1]
+                dispatch_raw = jnp.float32(moe_dispatch_raw_bits(
+                    n_tok, model_cfg.experts_per_token, model_cfg.d_model,
+                    comp_spec.scheme.total_symbol_bits(), n_moe))
+                metrics["moe_dispatch_raw_bits"] = dispatch_raw
+                metrics["moe_wire_raw_bits"] = jnp.float32(
+                    RING_FACTORS["all_to_all"](ep_degree)) * dispatch_raw
+            else:
+                metrics["moe_dispatch_raw_bits"] = jnp.float32(0.0)
+                metrics["moe_wire_raw_bits"] = jnp.float32(0.0)
         for k, v in comp.items():
             if k.startswith("hist_"):
                 metrics[f"grad_{k}"] = v

@@ -15,9 +15,12 @@ from jax.sharding import PartitionSpec as P
 from repro.comm import (CollectiveLedger, CompressionSpec, all_gather,
                         all_gather_bitexact, all_gather_bitexact_chunked,
                         all_gather_compressed, all_reduce,
-                        all_reduce_compressed, psum_bitexact,
-                        psum_bitexact_chunked, ring_all_gather,
-                        ring_all_reduce)
+                        all_reduce_compressed, all_to_all_compressed,
+                        hierarchical_all_reduce, hierarchical_wire_factor,
+                        psum_bitexact, psum_bitexact_chunked,
+                        reduce_scatter_compressed, ring_all_gather,
+                        ring_all_reduce, ring_all_to_all,
+                        ring_reduce_scatter)
 from repro.core.codebook import build_codebook
 from repro.core.symbols import SCHEMES, bf16_planes_np
 
@@ -594,3 +597,310 @@ class TestRingTransport:
         from repro.comm import get_transport
         with pytest.raises(ValueError, match="unknown transport"):
             get_transport("carrier-pigeon")
+
+
+# ---------------------------------------------------------------------------
+# Ring reduce_scatter / all_to_all: the rest of the collective family.
+# The parametrized sweeps run the scan hop decoder (cheapest to compile
+# on CPU — backend-independence of the hop codec is pinned separately
+# below and in TestRingTransport); ledger assertions ride the same
+# compiled program as the bit-exactness checks.
+# ---------------------------------------------------------------------------
+class TestRingReduceScatter:
+    def _run(self, fn, x, k, check=True):
+        mesh = _mesh_k(k)
+
+        @smap(mesh, P("data"), (P("data"), P()), check=check)
+        def f(xs):
+            y, stats = fn(xs)
+            return y[None], _psum_stats(stats)
+
+        y, stats = f(jnp.asarray(x))
+        return np.asarray(y), {s: np.asarray(v) for s, v in stats.items()}
+
+    @pytest.mark.parametrize("k", [2, 4, 8])
+    @pytest.mark.parametrize("scheme", ["bf16", "e4m3"])
+    def test_bitexact_and_ledger_vs_psum_scatter(self, k, scheme):
+        # Integer-valued payloads: partial sums exact in the wire dtype,
+        # so the ring-order reduction matches psum_scatter bit for bit.
+        dt = jnp.bfloat16 if scheme == "bf16" else jnp.float8_e4m3fn
+        x = jnp.asarray(_int_valued((k, 4, 16), np.float32, -2, 3, 70 + k),
+                        dt)
+        books = _books_for_scheme(x, scheme)
+        y, s = self._run(
+            lambda xs: ring_reduce_scatter(xs, "data", books, scheme,
+                                           chunk=16, decode_backend="scan"),
+            x, k)
+        # device d owns flat segment d of the global sum; stacking the
+        # per-device rows in device order rebuilds the flat tensor
+        want = np.asarray(x, np.float32).sum(0).reshape(-1)
+        got = y.reshape(-1).astype(np.float32)
+        np.testing.assert_array_equal(got, want)
+        # ledger: psummed raw wire == analytic ring RS volume
+        # (n-1)/n × global payload, measured hops sum to the coded total
+        bits = 16 if scheme == "bf16" else 8
+        per_dev_raw = 4 * 16 * bits
+        assert float(s["raw_wire_bits"]) == pytest.approx(
+            (k - 1) * per_dev_raw)
+        assert float(s["hops"]) == k - 1
+        assert s["hop_coded_bits"].shape == (k - 1,)
+        assert (s["hop_coded_bits"] > 0).all()
+        assert 0 < float(s["coded_wire_bits"]) <= float(s["raw_wire_bits"])
+        assert float(s["hop_coded_bits"].sum()) == pytest.approx(
+            float(s["coded_wire_bits"]), rel=1e-6)
+
+    def test_default_backend_matches_scan(self, k=2):
+        # the spec default (multisym) decodes the same hops bit-exactly
+        x = jnp.asarray(_int_valued((k, 4, 16), np.float32, -2, 3, 75),
+                        jnp.bfloat16)
+        books = _books_for_scheme(x, "bf16")
+        ys, ss = self._run(
+            lambda xs: ring_reduce_scatter(xs, "data", books, "bf16",
+                                           chunk=16, decode_backend="scan"),
+            x, k)
+        ym, sm = self._run(
+            lambda xs: ring_reduce_scatter(xs, "data", books, "bf16",
+                                           chunk=16), x, k)
+        np.testing.assert_array_equal(ys, ym)
+        np.testing.assert_array_equal(ss["hop_coded_bits"],
+                                      sm["hop_coded_bits"])
+
+    def test_f32_carry_exact_and_double_volume(self, k=4):
+        x = jnp.asarray(_int_valued((k, 4, 16), np.float32, -2, 3, 77),
+                        jnp.bfloat16)
+        books = _books_for_scheme(x, "bf16")
+        yw, sw = self._run(
+            lambda xs: ring_reduce_scatter(xs, "data", books, "bf16",
+                                           chunk=16, decode_backend="scan"),
+            x, k)
+        yf, sf = self._run(
+            lambda xs: ring_reduce_scatter(xs, "data", books, "bf16",
+                                           chunk=16, decode_backend="scan",
+                                           carry="f32"), x, k)
+        np.testing.assert_array_equal(yw, yf)           # ints: both exact
+        assert float(sf["raw_wire_bits"]) == pytest.approx(
+            2.0 * float(sw["raw_wire_bits"]))
+        assert float(sf["hops"]) == float(sw["hops"]) == k - 1
+
+
+class TestRingAllToAll:
+    def _run(self, fn, x, k, n_out=2, check=True):
+        mesh = _mesh_k(k)
+        out = tuple([P("data")] * n_out) + (P(),)
+
+        @smap(mesh, P("data"), out, check=check)
+        def f(xs):
+            return fn(xs)
+
+        res = f(jnp.asarray(x))
+        return ([np.asarray(r) for r in res[:-1]]
+                + [{s: np.asarray(v) for s, v in res[-1].items()}])
+
+    @pytest.mark.parametrize("k", [2, 4, 8])
+    @pytest.mark.parametrize("scheme", ["bf16", "e4m3"])
+    def test_bitexact_and_ledger_vs_lax_all_to_all(self, k, scheme):
+        # values are forwarded unchanged → exact for ANY input
+        dt = jnp.bfloat16 if scheme == "bf16" else jnp.float8_e4m3fn
+        rng = np.random.default_rng(80 + k)
+        x = jnp.asarray(rng.normal(size=(k, k, 8)), dt)
+        books = _books_for_scheme(x, scheme)
+
+        def body(xs):
+            y, s = ring_all_to_all(xs[0], "data", books, scheme, chunk=8,
+                                   decode_backend="scan")
+            want = jax.lax.all_to_all(xs[0], "data", split_axis=0,
+                                      concat_axis=0)
+            return y[None], want[None], _psum_stats(s)
+
+        y, want, s = self._run(body, x, k)
+        assert (y.astype(np.float32) == want.astype(np.float32)).all()
+        # ledger: each shard leaves its source exactly once — the
+        # analytic a2a minimum (n-1)/n × global payload
+        bits = 16 if scheme == "bf16" else 8
+        per_dev_raw = k * 8 * bits
+        assert float(s["raw_wire_bits"]) == pytest.approx(
+            (k - 1) * per_dev_raw)
+        assert float(s["hops"]) == k - 1
+        assert s["hop_coded_bits"].shape == (k - 1,)
+        assert float(s["hop_coded_bits"].sum()) == pytest.approx(
+            float(s["coded_wire_bits"]), rel=1e-6)
+
+    @pytest.mark.parametrize("op", ["reduce_scatter", "all_to_all"])
+    def test_dispatch_parity_across_transports(self, op, k=4):
+        # one registry entry point; endpoint-decode estimates and the
+        # per-hop-coded ring produce identical results
+        x = jnp.asarray(_int_valued((k, k, 8), np.float32, -2, 3, 83),
+                        jnp.bfloat16)
+        books = _books_for_scheme(x, "bf16")
+        entry = (reduce_scatter_compressed if op == "reduce_scatter"
+                 else all_to_all_compressed)
+        outs = {}
+        for transport in ("monolithic", "chunked", "ring"):
+            spec = CompressionSpec.from_books(
+                books, "bf16", mode="bitexact", transport=transport,
+                chunk=32, decode_backend="scan")
+
+            def body(xs, s=spec):
+                y, st = entry(xs[0], "data", books, s)
+                return y[None], _psum_stats(st)
+
+            outs[transport], _ = self._run(body, x, k, n_out=1)
+        assert (outs["monolithic"] == outs["chunked"]).all()
+        assert (outs["monolithic"] == outs["ring"]).all()
+
+
+# ---------------------------------------------------------------------------
+# Hierarchical two-axis ring (intra-pod + inter-pod)
+# ---------------------------------------------------------------------------
+def _mesh_2d(n_outer, n_inner):
+    devs = np.asarray(jax.devices()[:n_outer * n_inner])
+    return jax.sharding.Mesh(devs.reshape(n_outer, n_inner),
+                             ("outer", "inner"))
+
+
+class TestHierarchicalRing:
+    def _run(self, fn, x, n_outer, n_inner, n_out=1):
+        mesh = _mesh_2d(n_outer, n_inner)
+        out = tuple([P("outer", "inner")] * n_out) + (P(),)
+
+        @smap(mesh, P("outer", "inner"), out)
+        def f(xs):
+            res = fn(xs[0, 0])
+            stats = {k: jax.lax.psum(jax.lax.psum(v, "inner"), "outer")
+                     for k, v in res[-1].items()}
+            return tuple(r[None, None] for r in res[:-1]) + (stats,)
+
+        res = f(jnp.asarray(x))
+        return ([np.asarray(r) for r in res[:-1]]
+                + [{s: np.asarray(v) for s, v in res[-1].items()}])
+
+    @pytest.mark.parametrize("n_outer,n_inner,scheme", [
+        (2, 2, "bf16"), (2, 2, "e4m3"), (2, 4, "bf16"), (4, 2, "e4m3")])
+    def test_bitexact_and_ledger_vs_two_axis_psum(self, n_outer, n_inner,
+                                                  scheme):
+        dt = jnp.bfloat16 if scheme == "bf16" else jnp.float8_e4m3fn
+        x = jnp.asarray(_int_valued((n_outer, n_inner, 4, 16), np.float32,
+                                    -2, 3, 90 + n_inner), dt)
+        books = _books_for_scheme(x, scheme)
+
+        def body(xl):
+            y, s = hierarchical_all_reduce(xl, ("inner", "outer"), books,
+                                           scheme, chunk=16,
+                                           decode_backend="scan")
+            want = jax.lax.psum(jax.lax.psum(
+                xl.astype(jnp.float32), "inner"), "outer")
+            return y, want, s
+
+        y, want, stats = self._run(body, x, n_outer, n_inner, n_out=2)
+        got = y[0, 0].astype(np.float32)
+        np.testing.assert_array_equal(got, want[0, 0])
+        # ledger: the sum of per-axis analytic terms — inner RS +
+        # outer AR on the 1/n_inner shard + inner AG
+        n = n_outer * n_inner
+        bits = 16 if scheme == "bf16" else 8
+        S = 4 * 16 * bits                            # local payload bits
+        analytic = n * ((n_inner - 1) / n_inner * S
+                        + 2 * (n_outer - 1) / (n_inner * n_outer) * S
+                        + (n_inner - 1) / n_inner * S)
+        assert float(stats["raw_wire_bits"]) == pytest.approx(analytic)
+        hops = 2 * (n_inner - 1) + 2 * (n_outer - 1)
+        assert float(stats["hops"]) == hops
+        assert stats["hop_coded_bits"].shape == (hops,)
+        assert (stats["hop_coded_bits"] > 0).all()
+        assert float(stats["hop_coded_bits"].sum()) == pytest.approx(
+            float(stats["coded_wire_bits"]), rel=1e-6)
+        assert 0 < float(stats["payload_coded_bits"]) < float(
+            stats["payload_raw_bits"])
+        # …and the per-axis terms sum to the flat-ring volume: the
+        # hierarchy redistributes traffic, it doesn't change the total
+        assert hierarchical_wire_factor(n_inner, n_outer) == pytest.approx(
+            2.0 * (n - 1) / n)
+
+    def test_spec_axes_dispatch(self, n_outer=2, n_inner=2):
+        # CompressionSpec.axes routes all_reduce_compressed to the
+        # hierarchical ring; result identical to the direct call.
+        x = jnp.asarray(_int_valued((n_outer, n_inner, 4, 16), np.float32,
+                                    -2, 3, 97), jnp.bfloat16)
+        books = _books_for_scheme(x, "bf16")
+        spec = CompressionSpec.from_books(
+            books, "bf16", mode="bitexact", transport="ring", chunk=16,
+            decode_backend="scan", axes=("inner", "outer"))
+
+        def body(xl):
+            y, s = all_reduce_compressed(xl, None, books, spec)
+            yd, _ = hierarchical_all_reduce(xl, ("inner", "outer"), books,
+                                            "bf16", chunk=16,
+                                            decode_backend="scan")
+            return y, yd, s
+
+        y, yd, _ = self._run(body, x, n_outer, n_inner, n_out=2)
+        assert (y == yd).all()
+
+    def test_spec_axes_validation(self):
+        with pytest.raises(ValueError, match="two distinct mesh axis"):
+            CompressionSpec(transport="ring", axes=("a", "a"))
+        with pytest.raises(ValueError, match="requires the ring"):
+            CompressionSpec(transport="chunked", axes=("a", "b"))
+        with pytest.raises(ValueError, match="two distinct mesh axis"):
+            hierarchical_all_reduce(jnp.ones((4,), jnp.bfloat16),
+                                    ("a", "a"), {})
+
+
+# ---------------------------------------------------------------------------
+# MoE expert dispatch over the compressed all_to_all wire
+# ---------------------------------------------------------------------------
+class TestMoEDispatchA2A:
+    def test_matches_single_device_forward(self):
+        from repro.models.common import Axes, ModelConfig
+        from repro.models.moe import moe_apply, moe_apply_a2a, moe_init
+
+        cfg = ModelConfig(name="moe-a2a", arch_type="moe", d_model=16,
+                          vocab_size=32, blocks=(), n_experts=4,
+                          experts_per_token=2, moe_d_ff=32)
+        params = moe_init(jax.random.PRNGKey(0), cfg, Axes())
+        rng = np.random.default_rng(11)
+        x = jnp.asarray(rng.normal(size=(4, 8, 16)) * 0.5, jnp.bfloat16)
+        y_ref, aux_ref = moe_apply(params, x, cfg)
+        books = _books_for(x)
+        tp = 4
+        mesh = jax.sharding.Mesh(np.asarray(jax.devices()[:tp]), ("model",))
+
+        @smap(mesh, P("model"), (P("model"), P(), P()))
+        def f(xs):
+            y, aux, stats = moe_apply_a2a(params, xs, cfg, "model", books,
+                                          chunk=256, decode_backend="scan")
+            return y, aux, {k: jax.lax.psum(v, "model")
+                            for k, v in stats.items()}
+
+        y, aux, stats = f(x)
+        # the wire is lossless and the expert math identical → bit-exact
+        np.testing.assert_array_equal(np.asarray(y, np.float32),
+                                      np.asarray(y_ref, np.float32))
+        # dispatch + combine = two (n-1)-round all_to_alls, all coded
+        assert float(stats["hops"]) == 2 * (tp - 1)
+        assert stats["hop_coded_bits"].shape == (2 * (tp - 1),)
+        assert 0 < float(stats["coded_wire_bits"]) < float(
+            stats["raw_wire_bits"])
+        # aux is the pmean of per-shard Switch losses — same signal,
+        # not bit-matched to the global-batch aux
+        assert float(aux) == pytest.approx(float(aux_ref), rel=0.1)
+
+    def test_rejects_indivisible_experts(self):
+        from repro.models.common import Axes, ModelConfig
+        from repro.models.moe import moe_apply_a2a, moe_init
+
+        cfg = ModelConfig(name="moe-bad", arch_type="moe", d_model=8,
+                          vocab_size=32, blocks=(), n_experts=3,
+                          experts_per_token=1, moe_d_ff=16)
+        params = moe_init(jax.random.PRNGKey(0), cfg, Axes())
+        x = jnp.zeros((2, 4, 8), jnp.bfloat16)
+        books = _books_for(x)
+        mesh = _mesh_k(2)
+
+        @smap(mesh, P("data"), (P("data"), P(), P()))
+        def f(xs):
+            return moe_apply_a2a(params, xs, cfg, "data", books,
+                                 decode_backend="scan")
+
+        with pytest.raises(ValueError, match="not divisible"):
+            f(x)

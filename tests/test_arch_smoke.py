@@ -5,7 +5,6 @@ exercised only by the dry-run (ShapeDtypeStruct, no allocation).
 """
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.configs import ARCH_IDS, EXTRA_IDS, get_config, input_specs, SHAPES

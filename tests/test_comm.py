@@ -1,23 +1,50 @@
 """Runner for the multi-device compressed-collective suite.
 
 The suite needs 8 forced host devices, which must be set before jax
-initializes — so it runs in a subprocess (the main pytest process keeps
-the real 1-device view, per the project convention).
+initializes — so it runs in subprocesses (the main pytest process keeps
+the real 1-device view, per the project convention).  The suite is split
+into two halves so each subprocess stays well inside its timeout and
+the two can shard across pytest-xdist workers in CI:
+
+  * legacy half — ledger / bitexact / chunked wire + the flat ring
+    transport (all_reduce / all_gather, carries, backends);
+  * family half — the PR 4 additions: ring reduce_scatter, ring
+    all_to_all, the hierarchical two-axis ring and the MoE a2a
+    dispatch wire.
 """
 import os
 import pathlib
 import subprocess
 import sys
 
+import pytest
+
 SUITE = pathlib.Path(__file__).parent / "_comm_suite.py"
 
+_FAMILY = ("TestRingReduceScatter or TestRingAllToAll "
+           "or TestHierarchicalRing or TestMoEDispatchA2A")
 
-def test_comm_suite_8_devices():
+# The two longest tier-1 items (full multi-device collective suites in
+# subprocesses); CI runs the slow marks in their own sharded job.
+pytestmark = pytest.mark.slow
+
+
+def _run_suite(select: str) -> None:
     env = dict(os.environ)
     env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
                         + " --xla_force_host_platform_device_count=8").strip()
     env["PYTHONPATH"] = str(pathlib.Path(__file__).parents[1] / "src")
-    proc = subprocess.run([sys.executable, str(SUITE)], env=env,
-                          capture_output=True, text=True, timeout=1800)
+    proc = subprocess.run([sys.executable, str(SUITE), "-k", select],
+                          env=env, capture_output=True, text=True,
+                          timeout=1800)
     assert proc.returncode == 0, (
-        f"comm suite failed\nstdout:\n{proc.stdout}\nstderr:\n{proc.stderr}")
+        f"comm suite (-k {select!r}) failed\nstdout:\n{proc.stdout}\n"
+        f"stderr:\n{proc.stderr}")
+
+
+def test_comm_suite_8_devices():
+    _run_suite(f"not ({_FAMILY})")
+
+
+def test_comm_suite_ring_family_8_devices():
+    _run_suite(_FAMILY)

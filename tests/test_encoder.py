@@ -1,7 +1,6 @@
 """Roundtrip and cross-implementation tests for the single-stage encoder."""
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core.codebook import build_codebook, CodebookRegistry

@@ -1,11 +1,10 @@
 """Unit tests for roofline machinery: loop-aware HLO collective parsing,
 shape/byte accounting, ring factors, analytic terms."""
-import numpy as np
 import pytest
 
 from repro.launch.mesh import TPU_V5E
-from repro.roofline.analysis import (CollectiveStats, _group_size,
-                                     _shape_bytes, parse_collectives)
+from repro.roofline.analysis import (_group_size, _shape_bytes,
+                                     parse_collectives)
 from repro.roofline.hlo_parse import (_split_computations, _trip_count,
                                       parse_collectives_loop_aware)
 

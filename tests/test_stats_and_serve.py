@@ -5,7 +5,7 @@ import numpy as np
 import pytest
 
 from repro.core.codebook import CodebookRegistry, build_codebook
-from repro.core.entropy import pmf_from_counts, shannon_entropy
+from repro.core.entropy import pmf_from_counts
 from repro.core.stats import (ShardStatsCollector, per_shard_report,
                               shard_histograms)
 from repro.core.symbols import SCHEMES
@@ -102,3 +102,50 @@ class TestServing:
             pos = prompt.shape[1] - 1 + i
             want = int(jnp.argmax(logits[0, pos]))
             assert int(out[0, i]) == want
+
+
+class TestServeMoEWireAccounting:
+    def test_moe_dispatch_wire_per_decode_step(self):
+        from repro.comm import CompressionSpec
+
+        cfg = ModelConfig(name="s-moe", arch_type="moe", d_model=64,
+                          vocab_size=128,
+                          blocks=(BlockGroup(("attn_moe",), 2),), n_heads=2,
+                          n_kv_heads=1, head_dim=32, n_experts=4,
+                          experts_per_token=2, moe_d_ff=64, remat="none")
+        params = model_init(cfg, jax.random.PRNGKey(0))
+        registry = CodebookRegistry()
+        registry.install(("act", "bf16", "lo"), np.ones(256))
+        registry.install(("act", "bf16", "hi"), np.ones(256))
+        spec = CompressionSpec.from_registry(registry, "act", "bf16",
+                                             "ledger")
+        ep = 4
+        eng = Engine(params, cfg, ServeConfig(max_cache_len=64),
+                     comp_spec=spec, ep_degree=ep)
+        prompts = jnp.ones((2, 8), jnp.int32)
+        n_new = 4
+        _, totals = eng.generate(prompts, n_new)
+        # per decode step: B × top-k × d × bf16 bits × 2 dirs × 2 layers,
+        # scaled by the (n−1)/n all-to-all factor; generate() runs
+        # n_new − 1 jitted decode steps after the prefill
+        per_step = (ep - 1) / ep * (2 * 2 * cfg.d_model * 16 * 2 * 2)
+        assert totals["moe_wire_raw_bits"] == pytest.approx(
+            (n_new - 1) * per_step)
+
+    def test_moe_wire_zero_for_dense_or_no_ep(self):
+        from repro.comm import CompressionSpec
+
+        cfg = ModelConfig(name="s-dense", arch_type="dense", d_model=64,
+                          vocab_size=128,
+                          blocks=(BlockGroup(("attn",), 2),), n_heads=2,
+                          n_kv_heads=1, head_dim=32, d_ff=128, remat="none")
+        params = model_init(cfg, jax.random.PRNGKey(0))
+        registry = CodebookRegistry()
+        registry.install(("act", "bf16", "lo"), np.ones(256))
+        registry.install(("act", "bf16", "hi"), np.ones(256))
+        spec = CompressionSpec.from_registry(registry, "act", "bf16",
+                                             "ledger")
+        eng = Engine(params, cfg, ServeConfig(max_cache_len=64),
+                     comp_spec=spec, ep_degree=4)
+        _, totals = eng.generate(jnp.ones((1, 8), jnp.int32), 3)
+        assert totals["moe_wire_raw_bits"] == 0.0

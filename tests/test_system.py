@@ -1,14 +1,12 @@
 """End-to-end behaviour tests for the paper's system: the full
 observe → build → encode → ship → decode → account lifecycle."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.comm import CollectiveLedger, CompressionSpec, payload_stats
-from repro.core import (CodebookRegistry, compressibility, decode_with_book,
-                        shannon_entropy, single_stage_encode,
-                        three_stage_encode)
+from repro.comm import CompressionSpec, payload_stats
+from repro.core import (CodebookRegistry, decode_with_book,
+                        single_stage_encode, three_stage_encode)
 from repro.core.symbols import bf16_planes_np
 
 

@@ -11,6 +11,8 @@ Prints ``name,us_per_call,derived`` CSV rows (collected in
   encoder single-stage vs three-stage timing + wire accounting
   decoder backend (scan/pallas/multisym) × chunk-size sweep
   traffic end-to-end compressed-training ledger
+  drift  stale vs lifecycle-refreshed vs per-batch-oracle codebooks
+         on a shifting workload (docs/lifecycle.md)
 
 Perf trajectory:
   ``--json PATH``          write this run's results as JSON;
@@ -82,9 +84,9 @@ def compare_results(baseline: Dict[str, dict], current: Dict[str, dict],
 
 def main(argv=None) -> None:
     from . import (codelen_ablation, collective_traffic, common,
-                   decoder_throughput, dtype_sweep, encoder_throughput,
-                   fig1_pmf, fig2_per_shard, fig3_kl, fig4_fixed_codebook,
-                   ring_traffic, tensor_kinds)
+                   decoder_throughput, drift, dtype_sweep,
+                   encoder_throughput, fig1_pmf, fig2_per_shard, fig3_kl,
+                   fig4_fixed_codebook, ring_traffic, tensor_kinds)
 
     suites = [
         ("fig1", fig1_pmf.run),
@@ -98,6 +100,7 @@ def main(argv=None) -> None:
         ("decoder", decoder_throughput.run),
         ("traffic", collective_traffic.run),
         ("ring_traffic", ring_traffic.run),
+        ("drift", drift.run),
     ]
     parser = argparse.ArgumentParser(
         prog="benchmarks.run", description=__doc__,

@@ -5,6 +5,8 @@ Layers:
   repro.core     — fixed-codebook Huffman coding (the paper)
   repro.kernels  — Pallas TPU kernels for the encode hot path
   repro.comm     — compressed collectives + traffic ledger
+  repro.lifecycle— codebook drift monitoring, epoch-versioned
+                   registries, synchronized hot-refresh
   repro.models   — the assigned architecture pool
   repro.configs  — exact assigned configurations + input shapes
   repro.data / optim / train / serve / checkpoint — substrate

@@ -11,7 +11,7 @@ from .collectives import (all_gather, all_gather_bitexact,
                           psum_bitexact, psum_bitexact_chunked, reduce_scatter,
                           reduce_scatter_compressed, zero_stats)
 from .compression import (KNOWN_TRANSPORTS, CompressionSpec, histogram256_xla,
-                          payload_stats)
+                          payload_stats, shannon_bits_xla)
 from .hierarchy import hierarchical_all_reduce, hierarchical_wire_factor
 from .ledger import CollectiveLedger, LedgerEntry
 from .ring import (ring_all_gather, ring_all_reduce, ring_all_to_all,

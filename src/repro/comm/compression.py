@@ -43,7 +43,7 @@ from ..core.encoder import DEFAULT_CHUNK
 from ..core.symbols import SCHEMES, SymbolScheme
 
 __all__ = ["CompressionSpec", "payload_stats", "histogram256_xla",
-           "KNOWN_TRANSPORTS"]
+           "shannon_bits_xla", "KNOWN_TRANSPORTS"]
 
 _MODES = ("off", "ledger", "bitexact")
 KNOWN_TRANSPORTS = ("monolithic", "chunked", "ring")
@@ -58,6 +58,21 @@ def histogram256_xla(sym: jnp.ndarray) -> jnp.ndarray:
     return jnp.zeros((256,), jnp.int32).at[sym.reshape(-1).astype(jnp.int32)].add(1)
 
 
+def shannon_bits_xla(hist: jnp.ndarray) -> jnp.ndarray:
+    """Shannon payload bits of a histogram (``total × H``), in-graph.
+
+    The drift probe's third leg: ``coded_bits − shannon_bits`` is the
+    per-batch redundancy the lifecycle monitor thresholds
+    (``repro.lifecycle.monitor``), computed from the same histogram the
+    coded-bits dot product already uses — one extra log per bin.
+    """
+    h = hist.astype(jnp.float32)
+    total = jnp.maximum(h.sum(), 1.0)
+    p = h / total
+    logp = jnp.where(p > 0, jnp.log2(jnp.where(p > 0, p, 1.0)), 0.0)
+    return -(h * logp).sum()
+
+
 @jax.tree_util.register_static
 @dataclass(frozen=True, eq=True)
 class CompressionSpec:
@@ -69,6 +84,11 @@ class CompressionSpec:
     # hashable => usable as a jit static argument).
     plane_lengths: Optional[Tuple[Tuple[str, Tuple[int, ...]], ...]] = None
     book_ids: Optional[Tuple[Tuple[str, int], ...]] = None
+    # Registry epoch the books were snapshotted from (repro.lifecycle):
+    # rides alongside book_ids so a receiver can reject a stale-epoch
+    # spec, and — being static — makes an epoch flip a deliberate
+    # recompile of every step that bakes the spec in.
+    book_epoch: int = 0
     # Bitexact wire strategy (repro.comm.transport registry).
     transport: str = "monolithic"        # monolithic | chunked | ring
     chunk: int = DEFAULT_CHUNK           # chunked/ring symbols per chunk
@@ -115,6 +135,9 @@ class CompressionSpec:
                     f"requires the ring transport, got {self.transport!r}")
         if self.chunk <= 0:
             raise ValueError(f"chunk must be positive, got {self.chunk}")
+        if self.book_epoch < 0:
+            raise ValueError(f"book_epoch must be >= 0, "
+                             f"got {self.book_epoch}")
 
     @property
     def scheme(self) -> SymbolScheme:
@@ -138,7 +161,8 @@ class CompressionSpec:
                       chunk: int = DEFAULT_CHUNK,
                       decode_backend: str = "multisym",
                       carry: str = "wire",
-                      axes: Optional[Tuple[str, str]] = None
+                      axes: Optional[Tuple[str, str]] = None,
+                      book_epoch: Optional[int] = None
                       ) -> "CompressionSpec":
         scheme = SCHEMES[scheme_name]
         lens = []
@@ -147,10 +171,15 @@ class CompressionSpec:
             book = registry.get((tensor_kind, scheme_name, plane))
             lens.append((plane, tuple(int(v) for v in book.lengths)))
             ids.append((plane, book.book_id))
+        if book_epoch is None:
+            # registries expose book_epoch; RegistrySnapshots expose epoch
+            book_epoch = getattr(registry, "book_epoch",
+                                 getattr(registry, "epoch", 0))
         return cls(mode=mode, scheme_name=scheme_name, tensor_kind=tensor_kind,
                    plane_lengths=tuple(lens), book_ids=tuple(ids),
                    transport=transport, chunk=chunk,
-                   decode_backend=decode_backend, carry=carry, axes=axes)
+                   decode_backend=decode_backend, carry=carry, axes=axes,
+                   book_epoch=book_epoch)
 
     @classmethod
     def from_books(cls, books: Dict[str, Codebook], scheme_name: str,
@@ -158,7 +187,8 @@ class CompressionSpec:
                    transport: str = "monolithic", chunk: int = DEFAULT_CHUNK,
                    decode_backend: str = "multisym",
                    carry: str = "wire",
-                   axes: Optional[Tuple[str, str]] = None
+                   axes: Optional[Tuple[str, str]] = None,
+                   book_epoch: int = 0
                    ) -> "CompressionSpec":
         lens = tuple((p, tuple(int(v) for v in b.lengths))
                      for p, b in books.items())
@@ -166,7 +196,7 @@ class CompressionSpec:
         return cls(mode=mode, scheme_name=scheme_name, tensor_kind=tensor_kind,
                    plane_lengths=lens, book_ids=ids, transport=transport,
                    chunk=chunk, decode_backend=decode_backend, carry=carry,
-                   axes=axes)
+                   axes=axes, book_epoch=book_epoch)
 
 
 def _planes_of(x: jnp.ndarray, spec: CompressionSpec) -> Dict[str, jnp.ndarray]:
@@ -176,23 +206,42 @@ def _planes_of(x: jnp.ndarray, spec: CompressionSpec) -> Dict[str, jnp.ndarray]:
     return scheme.to_symbols_jnp(x)
 
 
-def payload_stats(x: jnp.ndarray, spec: CompressionSpec) -> Dict[str, jnp.ndarray]:
+def payload_stats(x: jnp.ndarray, spec: CompressionSpec, *,
+                  with_hists: bool = False) -> Dict[str, jnp.ndarray]:
     """Exact (raw_bits, coded_bits) of tensor ``x`` under the fixed codebook.
 
     raw_bits counts the payload at the scheme's true symbol width (so the
     sub-byte formats are charged their own footprint, as in the paper).
     Cost: one histogram + one 256-dot per plane — the 'probe' a hardware
     encoder gets for free while streaming.
+
+    ``with_hists=True`` additionally returns ``shannon_bits`` (the
+    payload's exact entropy floor) and the per-plane histograms
+    (``hist_<plane>``) so a host-side lifecycle manager can observe the
+    real traffic and refresh books off the critical path
+    (``repro.lifecycle``).
     """
     if not spec.enabled:
         z = jnp.zeros((), jnp.float32)
-        return {"raw_bits": z, "coded_bits": z}
+        out = {"raw_bits": z, "coded_bits": z}
+        if with_hists:
+            out["shannon_bits"] = z
+        return out
     planes = _planes_of(x, spec)
     scheme = spec.scheme
     raw = jnp.float32(x.size * scheme.total_symbol_bits())
     coded = jnp.zeros((), jnp.float32)
+    shannon = jnp.zeros((), jnp.float32)
+    out = {}
     for plane, sym in planes.items():
-        hist = histogram256_xla(sym).astype(jnp.float32)
+        hist = histogram256_xla(sym)
         lens = jnp.asarray(spec.lengths_for(plane), jnp.float32)
-        coded = coded + jnp.dot(hist, lens)
-    return {"raw_bits": raw, "coded_bits": coded}
+        coded = coded + jnp.dot(hist.astype(jnp.float32), lens)
+        if with_hists:
+            shannon = shannon + shannon_bits_xla(hist)
+            out[f"hist_{plane}"] = hist
+    out["raw_bits"] = raw
+    out["coded_bits"] = coded
+    if with_hists:
+        out["shannon_bits"] = shannon
+    return out

@@ -57,8 +57,17 @@ __all__ = [
     "all_gather_compressed", "all_reduce_compressed",
     "reduce_scatter_compressed", "all_to_all_compressed",
     "encode_planes", "decode_plane", "decode_blocks", "decode_gathered_chunk",
-    "reassemble", "axis_size", "RING_FACTORS", "DEFAULT_DECODE_BACKEND",
+    "reassemble", "axis_size", "shard_map_compat", "RING_FACTORS",
+    "DEFAULT_DECODE_BACKEND",
 ]
+
+# jax.shard_map landed after 0.4.x; the experimental API has the same
+# (mesh, in_specs, out_specs) surface.  One shared accessor so callers
+# don't each carry the try/except (see also ``axis_size`` below).
+try:
+    shard_map_compat = jax.shard_map
+except AttributeError:
+    from jax.experimental.shard_map import shard_map as shard_map_compat
 
 # Default chunked-decode backend for every transport entry point: the
 # multi-symbol table walk (pure XLA, fastest portable backend — see

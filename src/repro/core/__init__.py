@@ -1,6 +1,8 @@
 """Core of the reproduction: single-stage Huffman coding with fixed
 codebooks (Agrawal et al., 2026)."""
-from .codebook import Codebook, CodebookKey, CodebookRegistry, build_codebook
+from .codebook import (Codebook, CodebookKey, CodebookRegistry,
+                       RegistrySnapshot, build_codebook,
+                       registry_content_hash)
 from .encoder import (EncodeResult, decode_jit, decode_np, decode_with_book,
                       encode_jit, encode_np, encoded_size_bits,
                       packed_words_capacity, single_stage_encode,

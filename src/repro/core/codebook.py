@@ -19,6 +19,7 @@ the averaging window never saw.
 """
 from __future__ import annotations
 
+import hashlib
 import threading
 from dataclasses import dataclass, field
 from typing import Dict, Iterable, List, Optional, Tuple
@@ -31,7 +32,8 @@ from .huffman import (MAX_CODE_LEN, MULTISYM_K, MULTISYM_SMAX,
                       canonical_codes, canonical_decode_tables,
                       package_merge_lengths, validate_prefix_free)
 
-__all__ = ["Codebook", "CodebookKey", "CodebookRegistry", "build_codebook"]
+__all__ = ["Codebook", "CodebookKey", "CodebookRegistry", "RegistrySnapshot",
+           "build_codebook", "registry_content_hash"]
 
 CodebookKey = Tuple[str, str, str]  # (tensor_kind, dtype_scheme, plane)
 
@@ -117,6 +119,47 @@ class _RunningPMF:
         self.n_batches += 1
 
 
+def registry_content_hash(books: Iterable[Codebook]) -> str:
+    """Deterministic digest of a registry's *coding content* — the
+    (book_id, key, lengths) triples that define what every encoder and
+    decoder on the fleet must agree on.  Canonical codes and decode
+    tables are pure functions of the lengths, so hashing lengths pins
+    the whole wire format; EMA observation state is deliberately
+    excluded (it differs across replicas without breaking the wire)."""
+    h = hashlib.sha256()
+    for book in books:
+        h.update(np.int64(book.book_id).tobytes())
+        h.update("\x1f".join(book.key).encode() + b"\x1e")
+        h.update(np.ascontiguousarray(book.lengths, dtype=np.int32).tobytes())
+    return h.hexdigest()
+
+
+@dataclass(frozen=True)
+class RegistrySnapshot:
+    """Immutable view of one registry epoch (repro.lifecycle).
+
+    ``books`` are in ``book_id`` order; ``content_hash`` is
+    ``registry_content_hash`` over them.  A snapshot never mutates, so a
+    train/serve step may keep encoding against epoch N while the
+    lifecycle manager builds epoch N+1 on the host.
+    """
+    epoch: int
+    books: Tuple[Codebook, ...]
+    content_hash: str
+
+    def get(self, key: CodebookKey) -> Codebook:
+        for book in self.books:
+            if book.key == key:
+                return book
+        raise KeyError(key)
+
+    def keys(self) -> List[CodebookKey]:
+        return [book.key for book in self.books]
+
+    def __len__(self) -> int:
+        return len(self.books)
+
+
 class CodebookRegistry:
     """Shared registry of fixed codebooks, mirrored on every node.
 
@@ -124,6 +167,11 @@ class CodebookRegistry:
     off critical path); `rebuild()` refreshes the codebooks; `get()` /
     `select_best()` serve the encoder.  Thread-safe: a background stats
     thread may observe while the train loop encodes.
+
+    Every ``rebuild()`` that refreshes at least one book bumps the
+    monotone ``book_epoch``; ``snapshot()`` captures the current epoch as
+    an immutable ``RegistrySnapshot`` whose ``content_hash`` lets peers
+    verify they hold the same books (repro.lifecycle.sync).
     """
 
     def __init__(self, n_symbols: int = 256, *, ema: float = 0.9,
@@ -135,6 +183,18 @@ class CodebookRegistry:
         self._running: Dict[CodebookKey, _RunningPMF] = {}
         self._books: Dict[CodebookKey, Codebook] = {}
         self._by_id: List[Codebook] = []
+        self._epoch = 0
+
+    @property
+    def book_epoch(self) -> int:
+        with self._lock:
+            return self._epoch
+
+    def snapshot(self) -> RegistrySnapshot:
+        with self._lock:
+            books = tuple(self._by_id)
+            return RegistrySnapshot(epoch=self._epoch, books=books,
+                                    content_hash=registry_content_hash(books))
 
     # ---------------------------------------------------------- observation
     def observe(self, key: CodebookKey, counts: np.ndarray) -> None:
@@ -167,6 +227,8 @@ class CodebookRegistry:
                     self._by_id.append(book)
                 else:
                     self._by_id[book_id] = book
+            if todo:
+                self._epoch += 1
 
     def install(self, key: CodebookKey, counts: np.ndarray) -> Codebook:
         """Observe + rebuild in one shot (bootstrap path)."""
@@ -212,21 +274,63 @@ class CodebookRegistry:
 
     # ---------------------------------------------------------- persistence
     def save(self, path: str) -> None:
+        """Persist the FULL registry state: books in ``book_id`` order,
+        the EMA observation state, the epoch, and the build parameters.
+
+        A ``load`` of this blob reproduces the registry exactly — same
+        ``book_id``s, same lengths (codebook construction is
+        deterministic), same EMA counts/``n_batches`` — so a spec built
+        ``from_registry`` on the reload is hash-identical to the
+        original.  That exactness is what makes the lifecycle manifest
+        (repro.lifecycle.manager) trustworthy.
+        """
         with self._lock:
-            blob = {}
+            blob = {
+                "format": np.array(2),
+                "n_books": np.array(len(self._by_id)),
+                "n_symbols": np.array(self.n_symbols),
+                "ema": np.array(self.ema, np.float64),
+                "max_len": np.array(self.max_len),
+                "book_epoch": np.array(self._epoch),
+            }
             for i, book in enumerate(self._by_id):
                 blob[f"lengths_{i}"] = book.lengths
                 blob[f"counts_{i}"] = book.source_counts
                 blob[f"key_{i}"] = np.array(list(book.key))
-            blob["n_books"] = np.array(len(self._by_id))
-            blob["n_symbols"] = np.array(self.n_symbols)
+            rkeys = list(self._running)
+            blob["n_running"] = np.array(len(rkeys))
+            for j, key in enumerate(rkeys):
+                blob[f"rkey_{j}"] = np.array(list(key))
+                blob[f"rcounts_{j}"] = self._running[key].counts
+                blob[f"rbatches_{j}"] = np.array(self._running[key].n_batches)
         np.savez(path, **blob)
 
     @classmethod
     def load(cls, path: str) -> "CodebookRegistry":
         blob = np.load(path, allow_pickle=False)
-        reg = cls(n_symbols=int(blob["n_symbols"]))
+        if "format" not in blob.files:
+            # Legacy (pre-lifecycle) blobs: books only, EMA state lost.
+            reg = cls(n_symbols=int(blob["n_symbols"]))
+            for i in range(int(blob["n_books"])):
+                key = tuple(str(s) for s in blob[f"key_{i}"])
+                reg.install(key, blob[f"counts_{i}"])
+            return reg
+        reg = cls(n_symbols=int(blob["n_symbols"]), ema=float(blob["ema"]),
+                  max_len=int(blob["max_len"]))
         for i in range(int(blob["n_books"])):
             key = tuple(str(s) for s in blob[f"key_{i}"])
-            reg.install(key, blob[f"counts_{i}"])
+            book = build_codebook(blob[f"counts_{i}"], book_id=i, key=key,
+                                  max_len=reg.max_len)
+            if not np.array_equal(book.lengths, blob[f"lengths_{i}"]):
+                raise ValueError(
+                    f"codebook {i} ({key}) did not rebuild to its saved "
+                    f"lengths — blob corrupt or builder drifted")
+            reg._books[key] = book
+            reg._by_id.append(book)
+        for j in range(int(blob["n_running"])):
+            key = tuple(str(s) for s in blob[f"rkey_{j}"])
+            reg._running[key] = _RunningPMF(
+                np.asarray(blob[f"rcounts_{j}"], np.float64),
+                n_batches=int(blob[f"rbatches_{j}"]))
+        reg._epoch = int(blob["book_epoch"])
         return reg

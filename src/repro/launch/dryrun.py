@@ -254,13 +254,9 @@ def ring_collective_check(n: int = 8, payload: int = 4096, chunk: int = 512,
     from ..comm import (hierarchical_all_reduce, hierarchical_wire_factor,
                         ring_all_gather, ring_all_reduce, ring_all_to_all,
                         ring_reduce_scatter)
+    from ..comm.transport import shard_map_compat as _shard_map
     from ..core.codebook import build_codebook
     from ..core.symbols import SCHEMES
-
-    try:
-        _shard_map = jax.shard_map
-    except AttributeError:
-        from jax.experimental.shard_map import shard_map as _shard_map
 
     t0 = time.time()
     mesh = jax.sharding.Mesh(np.asarray(jax.devices()[:n]), ("data",))
@@ -382,6 +378,132 @@ def ring_collective_check(n: int = 8, payload: int = 4096, chunk: int = 512,
     return rec
 
 
+def drift_check(n: int = 8, payload: int = 4096, chunk: int = 512,
+                verbose: bool = True) -> Dict[str, Any]:
+    """Induce synthetic distribution shift and prove the codebook
+    lifecycle end-to-end (repro.lifecycle, docs/lifecycle.md):
+
+      1. books installed from a base distribution; traffic then shifts —
+         the drift monitor must raise the staleness signal within its
+         patience window;
+      2. ``maybe_refresh`` flips to a new, monotonically higher epoch
+         with a changed registry content hash;
+      3. the ring transport stays **bit-exact** vs ``jax.lax.psum`` on
+         the shifted payload under BOTH the stale epoch-N books and the
+         refreshed epoch-N+1 books (a total fixed book is lossless on
+         any data — staleness costs bits, never correctness), and the
+         refreshed books code the shifted traffic strictly smaller;
+      4. the epoch-agreement collective passes when every device holds
+         the new fingerprint and fails loudly (``EpochSyncError``) when
+         one peer lags an epoch behind.
+    """
+    import numpy as np
+    from ..comm.ring import ring_all_reduce
+    from ..comm.transport import shard_map_compat as _shard_map
+    from ..core.symbols import SCHEMES
+    from ..lifecycle import (BookLifecycleManager, DriftThresholds,
+                             EpochSyncError, epoch_fingerprint,
+                             verify_epoch_agreement)
+
+    t0 = time.time()
+    rng = np.random.default_rng(0)
+    kind = "act"
+    scheme = SCHEMES["bf16"]
+    mgr = BookLifecycleManager(thresholds=DriftThresholds(
+        kl_bits=0.05, excess_bits=0.05, min_symbols=1024, patience=2))
+
+    # Integer-valued payloads whose byte distribution shifts hard between
+    # phases; the 8-way sums stay <= 256, so every value and every ring
+    # partial sum is exact in bf16 and the psum comparison is bit-for-bit.
+    base = rng.integers(-2, 3, size=(n, payload)).astype(jnp.bfloat16)
+    shifted = rng.integers(-32, 33, size=(n, payload)).astype(jnp.bfloat16)
+
+    for plane, sym in scheme.to_symbols(np.asarray(base)).items():
+        mgr.install((kind, "bf16", plane), np.bincount(sym, minlength=256))
+    epoch0 = mgr.book_epoch
+    snap0 = mgr.snapshot
+
+    # --- 1. shifted traffic must trip the monitor within patience -----
+    shift_hists = {p: np.bincount(s, minlength=256) for p, s in
+                   scheme.to_symbols(np.asarray(shifted)).items()}
+    windows = 0
+    while not mgr.stale_keys() and windows < 6:
+        for plane, h in shift_hists.items():
+            mgr.observe((kind, "bf16", plane), h)
+        windows += 1
+    stale_detected = bool(mgr.stale_keys())
+
+    # --- 2. monitored refresh opens a strictly newer epoch ------------
+    new_epoch = mgr.maybe_refresh()
+    epoch_flip_ok = (new_epoch == epoch0 + 1
+                     and mgr.snapshot.content_hash != snap0.content_hash)
+
+    # --- 3. ring all_reduce bit-exact under both epochs' books --------
+    mesh = jax.sharding.Mesh(np.asarray(jax.devices()[:n]), ("data",))
+    old_books = {p: snap0.get((kind, "bf16", p)) for p in scheme.planes}
+    new_books = mgr.books(kind, "bf16")
+
+    def check_books(books):
+        def body(xs):
+            y, s = ring_all_reduce(xs[0], "data", books, "bf16", chunk=chunk)
+            want = jax.lax.psum(xs[0].astype(jnp.float32), "data")
+            err = (y.astype(jnp.float32) != want).sum()
+            return (y[None],
+                    {"coded": jax.lax.psum(s["coded_wire_bits"], "data"),
+                     "mismatch": jax.lax.psum(err, "data")})
+
+        fn = jax.jit(_shard_map(body, mesh=mesh, in_specs=P("data"),
+                                out_specs=(P("data"), P())))
+        _, s = fn(jnp.asarray(shifted))
+        return float(s["mismatch"]) == 0, float(s["coded"])
+
+    stale_exact, stale_coded = check_books(old_books)
+    fresh_exact, fresh_coded = check_books(new_books)
+    coded_improved = fresh_coded < stale_coded
+
+    # --- 4. epoch agreement: unanimous passes, a laggard fails --------
+    fp_new = epoch_fingerprint(mgr)
+    agree_ok = True
+    try:
+        verify_epoch_agreement(np.tile(fp_new, (n, 1)), "data", mesh=mesh)
+    except EpochSyncError:
+        agree_ok = False
+    mixed = np.tile(fp_new, (n, 1))
+    mixed[n // 2] = epoch_fingerprint(snap0)
+    mismatch_detected = False
+    try:
+        verify_epoch_agreement(mixed, "data", mesh=mesh)
+    except EpochSyncError:
+        mismatch_detected = True
+
+    ok = (stale_detected and epoch_flip_ok and stale_exact and fresh_exact
+          and coded_improved and agree_ok and mismatch_detected)
+    rec = {
+        "kind": "drift_check", "n_devices": n, "payload_elems": payload,
+        "chunk": chunk, "stale_windows_to_signal": windows,
+        "stale_detected": stale_detected,
+        "epoch_before": epoch0, "epoch_after": int(new_epoch or -1),
+        "epoch_flip_ok": epoch_flip_ok,
+        "bitexact_stale_books": stale_exact,
+        "bitexact_refreshed_books": fresh_exact,
+        "stale_coded_wire_bits": stale_coded,
+        "refreshed_coded_wire_bits": fresh_coded,
+        "coded_improved": coded_improved,
+        "epoch_agreement_ok": agree_ok,
+        "epoch_mismatch_detected": mismatch_detected,
+        "compile_s": round(time.time() - t0, 1),
+        "status": "ok" if ok else "FAILED",
+    }
+    if verbose:
+        print(f"[dryrun] drift-check n={n} stale@{windows}w "
+              f"epoch {epoch0}→{new_epoch} "
+              f"bitexact(stale/fresh)={stale_exact}/{fresh_exact} "
+              f"coded {stale_coded:.0f}→{fresh_coded:.0f} "
+              f"agree={agree_ok} mismatch_raises={mismatch_detected} "
+              f"status={rec['status']}")
+    return rec
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=ARCH_IDS + ("gemma2-2b",))
@@ -393,21 +515,29 @@ def main() -> None:
     ap.add_argument("--ring-check", action="store_true",
                     help="lower/compile/run the ring transport collectives "
                          "on an 8-device submesh and cost-check the ledger")
+    ap.add_argument("--drift-check", action="store_true",
+                    help="induce synthetic distribution shift; verify "
+                         "stale-book detection, a bit-exact ring epoch "
+                         "flip, and loud epoch-mismatch failure")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
 
-    if args.ring_check:
-        rec = ring_collective_check()
+    if args.ring_check or args.drift_check:
+        recs = []
+        if args.ring_check:
+            recs.append(ring_collective_check())
+        if args.drift_check:
+            recs.append(drift_check())
         if args.out:
             results = []
             if os.path.exists(args.out):
                 with open(args.out) as f:
                     results = json.load(f)
-            results.append(rec)
+            results.extend(recs)
             os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
             with open(args.out, "w") as f:
                 json.dump(results, f, indent=1, default=str)
-        if rec["status"] != "ok":
+        if any(rec["status"] != "ok" for rec in recs):
             raise SystemExit(1)
         return
 

@@ -20,30 +20,30 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..comm.compression import CompressionSpec
 from ..comm.ledger import CollectiveLedger
 from ..configs import ARCH_IDS, get_config, train_grad_accum
-from ..core.codebook import CodebookRegistry
 from ..core.symbols import bf16_planes_np
 from ..data import DataConfig, SyntheticDataset
+from ..lifecycle import BookLifecycleManager, DriftThresholds
 from ..models.transformer import model_init, param_count
 from ..optim.adamw import AdamWConfig, cosine_schedule
 from ..train.step import make_train_step, train_state_init
 from ..checkpoint import save_pytree
 
 
-def bootstrap_codebooks(state, registry: CodebookRegistry,
+def bootstrap_codebooks(state, lifecycle: BookLifecycleManager,
                         tensor_kind: str = "grad") -> None:
     """Paper §4: codebooks come from PREVIOUS data — here, from the
     initial parameter distribution as the step-0 stand-in; the loop
-    re-observes real gradients and rebuilds off the critical path."""
+    re-observes real gradients and the lifecycle manager rebuilds off
+    the critical path when the drift monitor flags staleness."""
     sample = np.concatenate([
         np.asarray(leaf).reshape(-1)[:65536].astype(np.float32)
         for leaf in jax.tree.leaves(state.params)[:8]])
     planes = bf16_planes_np(sample.astype(jnp.bfloat16))
     for plane, sym in planes.items():
-        registry.install((tensor_kind, "bf16", plane),
-                         np.bincount(sym, minlength=256))
+        lifecycle.install((tensor_kind, "bf16", plane),
+                          np.bincount(sym, minlength=256))
 
 
 def main(argv: Optional[list] = None) -> None:
@@ -59,7 +59,13 @@ def main(argv: Optional[list] = None) -> None:
     ap.add_argument("--grad-accum", type=int, default=None)
     ap.add_argument("--compress", action="store_true",
                     help="enable the fixed-codebook gradient probe")
-    ap.add_argument("--rebuild-every", type=int, default=10)
+    ap.add_argument("--refresh-every", "--rebuild-every", type=int,
+                    default=10, dest="refresh_every",
+                    help="steps between lifecycle refresh checks (the "
+                         "drift monitor decides whether books rebuild)")
+    ap.add_argument("--save-books", default=None,
+                    help="directory for the epoch manifest + registry "
+                         "blob at the end of the run")
     ap.add_argument("--checkpoint", default=None)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
@@ -75,17 +81,22 @@ def main(argv: Optional[list] = None) -> None:
     print(f"[train] params: {param_count(params):,}")
     state = train_state_init(params)
 
-    registry = CodebookRegistry()
-    comp_spec = None
-    if args.compress:
-        bootstrap_codebooks(state, registry)
-        comp_spec = CompressionSpec.from_registry(registry, "grad", "bf16",
-                                                  mode="ledger")
+    lifecycle = BookLifecycleManager(
+        thresholds=DriftThresholds(min_symbols=1024))
+    compress = args.compress
+    if compress:
+        bootstrap_codebooks(state, lifecycle)
 
     sched = cosine_schedule(args.lr, warmup=max(args.steps // 20, 1),
                             total=args.steps)
-    step_fn = jax.jit(make_train_step(cfg, AdamWConfig(lr=args.lr), sched,
-                                      grad_accum=ga, comp_spec=comp_spec))
+
+    def build_step(mgr):
+        spec = (mgr.spec("grad", "bf16", mode="ledger") if compress
+                else None)
+        return jax.jit(make_train_step(cfg, AdamWConfig(lr=args.lr), sched,
+                                       grad_accum=ga, comp_spec=spec))
+
+    step_fn = lifecycle.compiled("train_step", build_step)
     ds = iter(SyntheticDataset(cfg, DataConfig(args.batch_size, args.seq_len,
                                                seed=args.seed)))
     ledger = CollectiveLedger()
@@ -93,35 +104,41 @@ def main(argv: Optional[list] = None) -> None:
     for i in range(args.steps):
         batch = {k: jnp.asarray(v) for k, v in next(ds).items()}
         state, m = step_fn(state, batch)
-        if comp_spec is not None:
+        if compress:
             # DP all-reduce of grads: ring factor 2(n-1)/n with n = data
             # parallelism (1 on this host; ledger keys stay meaningful).
             ledger.record("grad/all_reduce(dp)", {
                 "raw_wire_bits": float(m["grad_raw_bits"]),
                 "coded_wire_bits": float(m["grad_coded_bits"])})
             # Observe the real gradient PMFs (paper §4: codebooks track
-            # previous batches) and periodically rebuild off-path.
-            for plane in ("lo", "hi"):
-                registry.observe(("grad", "bf16", plane),
-                                 np.asarray(m[f"grad_hist_{plane}"]))
-            if (i + 1) % args.rebuild_every == 0:
-                registry.rebuild()
-                comp_spec = CompressionSpec.from_registry(
-                    registry, "grad", "bf16", mode="ledger")
-                step_fn = jax.jit(make_train_step(
-                    cfg, AdamWConfig(lr=args.lr), sched, grad_accum=ga,
-                    comp_spec=comp_spec))
-                print(f"[train] step {i}: codebooks rebuilt from observed "
-                      f"gradient PMFs")
+            # previous batches); the drift monitor decides when the EMA
+            # has moved far enough to justify a rebuild + recompile.
+            reports = lifecycle.observe_train_metrics(m)
+            if args.refresh_every > 0 and (i + 1) % args.refresh_every == 0:
+                new_epoch = lifecycle.maybe_refresh()
+                if new_epoch is not None:
+                    step_fn = lifecycle.compiled("train_step", build_step)
+                    worst = max(reports.values(),
+                                key=lambda r: r.excess_bits)
+                    print(f"[train] step {i}: stale books rebuilt → epoch "
+                          f"{new_epoch} (kl={worst.kl_bits:.3f} "
+                          f"excess={worst.excess_bits:.3f} bits/sym); "
+                          f"recompiles={lifecycle.n_recompiles}")
         if i % max(args.steps // 10, 1) == 0 or i == args.steps - 1:
             print(f"[train] step {i:>4} loss={float(m['loss']):.4f} "
                   f"ce={float(m['ce']):.4f} gnorm={float(m['grad_norm']):.3f}")
     dt = time.time() - t0
     print(f"[train] {args.steps} steps in {dt:.1f}s "
           f"({args.steps / dt:.2f} steps/s)")
-    if comp_spec is not None:
+    if compress:
+        print(f"[train] lifecycle: epoch={lifecycle.book_epoch} "
+              f"refreshes={lifecycle.n_refreshes} "
+              f"recompiles={lifecycle.n_recompiles}")
         print("[train] collective-compression ledger:")
         print(ledger.report())
+        if args.save_books:
+            path = lifecycle.save(args.save_books)
+            print(f"[train] epoch manifest → {path}")
     if args.checkpoint:
         save_pytree(args.checkpoint, state.params,
                     {"arch": cfg.name, "steps": args.steps})

@@ -1,0 +1,28 @@
+"""Codebook lifecycle subsystem: drift monitoring, epoch-versioned
+registries, synchronized hot-refresh off the critical path.
+
+See ``docs/lifecycle.md``.  The three layers:
+
+  * ``monitor``  — online drift measurement per ``CodebookKey`` (KL vs
+    the book's source PMF, excess coded bits vs per-batch Shannon);
+  * ``manager``  — ``BookLifecycleManager``: epoch-versioned registry
+    snapshots, EMA feeding, monitored rebuilds, the epoch-keyed
+    compiled-step cache, manifest save/load;
+  * ``sync``     — cross-device (epoch, content-hash) agreement; any
+    divergence is a hard ``EpochSyncError``.
+"""
+from .manager import BookLifecycleManager
+from .monitor import DriftMonitor, DriftReport, DriftThresholds
+from .sync import (EpochSyncError, epoch_agreement, epoch_fingerprint,
+                   verify_epoch_agreement)
+
+__all__ = [
+    "BookLifecycleManager",
+    "DriftMonitor",
+    "DriftReport",
+    "DriftThresholds",
+    "EpochSyncError",
+    "epoch_agreement",
+    "epoch_fingerprint",
+    "verify_epoch_agreement",
+]

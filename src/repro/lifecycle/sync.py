@@ -1,0 +1,111 @@
+"""Cross-device epoch agreement — all shards flip books together.
+
+A fixed-book transport where peers hold different books does not fail:
+it silently mis-decodes every ring hop (the canonical tables are pure
+functions of the code lengths, so a one-bit lengths difference scrambles
+whole chunks).  The agreement protocol therefore treats any divergence
+as a **hard error**:
+
+  1. each replica derives a 64-bit **fingerprint** from its lifecycle
+     state: ``(book_epoch, registry-content-hash digest)``;
+  2. at a step boundary the fingerprints ride one tiny ``all_gather``
+     (8 bytes/device — noise next to the payload collectives);
+  3. every device compares the gathered table against its own entry;
+     any mismatch raises ``EpochSyncError`` on the host before the next
+     compressed collective can run.
+
+The flip protocol: the manager prepares epoch N+1 off the critical path,
+every replica rebuilds from the same observed histograms (identical EMA
+inputs → identical package-merge output → identical content hash), and
+the step boundary runs ``verify_epoch_agreement`` before the first
+encode against the new books.  In single-controller SPMD there is one
+host registry and agreement is trivial; the check exists for the
+multi-host deployment the paper targets, where each host feeds its own
+manager.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.codebook import CodebookRegistry, RegistrySnapshot
+
+__all__ = ["EpochSyncError", "epoch_fingerprint", "epoch_agreement",
+           "verify_epoch_agreement"]
+
+
+class EpochSyncError(RuntimeError):
+    """Replicas disagree on (book_epoch, registry content)."""
+
+
+def epoch_fingerprint(state: Union[RegistrySnapshot, CodebookRegistry,
+                                   "object"]) -> np.ndarray:
+    """(2,) uint32 ``[epoch, content-hash digest]`` for the wire.
+
+    Accepts a ``RegistrySnapshot``, a ``CodebookRegistry`` or a
+    ``BookLifecycleManager`` (anything exposing ``snapshot``).
+    """
+    snap = state
+    if isinstance(state, CodebookRegistry):
+        snap = state.snapshot()
+    elif not isinstance(state, RegistrySnapshot):
+        snap = getattr(state, "snapshot", None)
+        snap = snap() if callable(snap) else snap
+        if not isinstance(snap, RegistrySnapshot):
+            raise TypeError(f"cannot fingerprint {type(state).__name__}")
+    digest = int(snap.content_hash[:8], 16)
+    return np.array([snap.epoch & 0xFFFFFFFF, digest], dtype=np.uint32)
+
+
+def epoch_agreement(fp: jnp.ndarray, axis_name: str) -> jnp.ndarray:
+    """In-graph agreement check (call inside ``shard_map``).
+
+    ``fp`` is this device's (2,) uint32 fingerprint; returns the number
+    of peers (including self-disagreement = 0) whose fingerprint differs
+    from ours — identical on every device when all agree, positive
+    everywhere when any replica diverges (the gather makes the check
+    symmetric: every device sees the mismatch, not just the odd one
+    out).
+    """
+    gathered = jax.lax.all_gather(fp, axis_name)            # (n, 2)
+    return (gathered != fp[None, :]).any(axis=-1).sum().astype(jnp.int32)
+
+
+def verify_epoch_agreement(fingerprints: Union[np.ndarray, Sequence],
+                           axis_name: str = "data", *,
+                           mesh: Optional[jax.sharding.Mesh] = None) -> None:
+    """Host-level hard gate over per-device fingerprints.
+
+    ``fingerprints`` is (n, 2) uint32 — one ``epoch_fingerprint`` row per
+    device (each host contributes its local manager's view).  With a
+    ``mesh`` the check runs the real in-graph ``epoch_agreement``
+    collective over it (lower + compile + run — what a deployment
+    executes at the flip boundary); without one it compares on host.
+    Raises ``EpochSyncError`` on any disagreement, listing the distinct
+    (epoch, digest) pairs so the operator can see who lagged.
+    """
+    fps = np.asarray(fingerprints, dtype=np.uint32)
+    if fps.ndim != 2 or fps.shape[-1] != 2:
+        raise ValueError(f"expected (n, 2) fingerprints, got {fps.shape}")
+    if mesh is not None:
+        from jax.sharding import PartitionSpec as P
+
+        from ..comm.transport import shard_map_compat as _shard_map
+
+        fn = jax.jit(_shard_map(
+            lambda f: epoch_agreement(f[0], axis_name)[None],
+            mesh=mesh, in_specs=P(axis_name), out_specs=P(axis_name)))
+        mismatches = int(np.asarray(fn(jnp.asarray(fps))).max())
+    else:
+        mismatches = int((fps != fps[0]).any(axis=-1).sum())
+    if mismatches:
+        pairs = sorted({(int(e), int(d)) for e, d in fps})
+        raise EpochSyncError(
+            f"replicas disagree on codebook epoch/content: {mismatches} "
+            f"mismatching peers; distinct (epoch, digest32) = "
+            f"{[(e, hex(d)) for e, d in pairs]} — a mixed-book fleet "
+            f"would silently corrupt every compressed hop, refusing to "
+            f"proceed")

@@ -10,8 +10,10 @@ Kinds:
   mamba       Mamba-2 mixer (no separate FFN — mirrors the reference stack)
 
 Every block is pre-norm with residuals.  ``block_apply`` returns
-(x, aux) where aux is the MoE load-balance loss (0 elsewhere);
-``block_decode`` returns (x, new_cache).
+(x, aux, wire) where aux is the MoE load-balance loss (0 elsewhere) and
+wire is the measured coded bits of the block's compressed MoE dispatch
+(non-zero only under ``moe_impl="a2a"``); ``block_decode`` returns
+(x, new_cache).
 """
 from __future__ import annotations
 
@@ -26,8 +28,8 @@ from .layers import (attn_apply, attn_cache_init, attn_cache_pspec,
                      mlp_pspec, rmsnorm_apply, rmsnorm_init, rmsnorm_pspec)
 from .mla import (mla_apply, mla_cache_init, mla_cache_pspec, mla_decode,
                   mla_init, mla_pspec)
-from .moe import (moe_apply, moe_apply_eshard, moe_decode, moe_init,
-                  moe_prefill, moe_pspec)
+from .moe import (moe_apply, moe_apply_a2a_block, moe_apply_eshard,
+                  moe_decode, moe_init, moe_prefill, moe_pspec)
 from .rglru import (rglru_apply, rglru_cache_init, rglru_cache_pspec,
                     rglru_decode, rglru_init, rglru_pspec)
 from .ssm import (mamba_apply, mamba_cache_init, mamba_cache_pspec,
@@ -92,8 +94,11 @@ def block_pspec(kind: str, cfg: ModelConfig, axes: Axes):
 
 
 # ----------------------------------------------------------------- apply
+_MOE_IMPLS = ("scatter", "eshard", "a2a")
+
+
 def block_apply(kind: str, params, x, cfg: ModelConfig
-                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+                ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     from jax.ad_checkpoint import checkpoint_name
 
     mixer, windowed, ffn = _parse(kind)
@@ -112,17 +117,24 @@ def block_apply(kind: str, params, x, cfg: ModelConfig
     h = checkpoint_name(h, "mixer_out")
     x = x + h
     aux = jnp.zeros((), jnp.float32)
+    wire = jnp.zeros((), jnp.float32)
     if ffn != "none":
         h = rmsnorm_apply(params["norm_ffn"], x, cfg.norm_eps)
         if ffn == "moe":
-            apply_fn = (moe_apply_eshard if cfg.moe_impl == "eshard"
-                        else moe_apply)
-            h, aux = apply_fn(params["ffn"], h, cfg)
+            if cfg.moe_impl not in _MOE_IMPLS:
+                raise ValueError(f"unknown moe_impl {cfg.moe_impl!r}; "
+                                 f"one of {_MOE_IMPLS}")
+            if cfg.moe_impl == "a2a":
+                h, aux, wire = moe_apply_a2a_block(params["ffn"], h, cfg)
+            elif cfg.moe_impl == "eshard":
+                h, aux = moe_apply_eshard(params["ffn"], h, cfg)
+            else:
+                h, aux = moe_apply(params["ffn"], h, cfg)
         else:
             h = mlp_apply(params["ffn"], h, cfg)
         h = checkpoint_name(h, "ffn_out")
         x = x + h
-    return x, aux
+    return x, aux, wire
 
 
 # ----------------------------------------------------------------- cache

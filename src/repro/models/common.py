@@ -68,6 +68,10 @@ class ModelConfig:
     # "eshard": shard_map expert-sharded compute — every model shard runs
     #   its local experts over its data shard's tokens and a single psum
     #   combines (§Perf lever; needs a ("data","model") mesh in context).
+    # "a2a": expert-parallel dispatch over the compressed ring all_to_all
+    #   (models.moe.moe_apply_a2a_block) — bit-identical to "scatter",
+    #   Huffman-coded dispatch wire measured per hop; needs an ambient
+    #   mesh with a "model" axis, falls back to "scatter" without one.
     moe_impl: str = "scatter"
     # ---- mla (deepseek) ----
     use_mla: bool = False

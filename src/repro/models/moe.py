@@ -37,8 +37,8 @@ from .common import Axes, ModelConfig, shard_or_replicate, truncated_normal_init
 from .layers import mlp_apply, mlp_init, mlp_pspec
 
 __all__ = ["moe_init", "moe_pspec", "moe_apply", "moe_prefill", "moe_decode",
-           "moe_apply_a2a", "moe_capacity", "moe_stream_capacity",
-           "moe_stream_capacity_host"]
+           "moe_apply_a2a", "moe_apply_a2a_block", "configure_a2a_wire",
+           "moe_capacity", "moe_stream_capacity", "moe_stream_capacity_host"]
 
 
 def moe_capacity(n_tokens: int, cfg: ModelConfig) -> int:
@@ -241,6 +241,43 @@ def moe_decode(params, x, counts, pos, cfg: ModelConfig):
     return y.reshape(b, 1, d), new_counts
 
 
+def _a2a_wire(send, axis_name: str, books, scheme_name: str, chunk: int,
+              decode_backend: str):
+    """``ring_all_to_all`` with an exact straight-through VJP.
+
+    The compressed wire is value-wise identical to
+    ``jax.lax.all_to_all(split_axis=0, concat_axis=0)`` — a linear
+    permutation of the global data — so its transpose is that same
+    permutation applied to the cotangent.  Routing the backward pass
+    through the plain collective (instead of differentiating the
+    integer encode/decode graph, which has no useful gradient) makes
+    the compressed dispatch usable inside ``value_and_grad`` train
+    steps with mathematically exact gradients.
+    """
+    from ..comm.ring import ring_all_to_all
+
+    def fwd_impl(s):
+        return ring_all_to_all(s, axis_name, books, scheme_name,
+                               chunk=chunk, decode_backend=decode_backend)
+
+    wire = jax.custom_vjp(fwd_impl)
+
+    def fwd(s):
+        return fwd_impl(s), None
+
+    def bwd(_, ct):
+        ct_recv, _ct_stats = ct
+        return (jax.lax.all_to_all(ct_recv, axis_name, split_axis=0,
+                                   concat_axis=0),)
+
+    wire.defvjp(fwd, bwd)
+    recv, stats = wire(send)
+    # The ledger is a measurement, not a function to differentiate —
+    # cut it out of the AD graph so its zero cotangents never reach the
+    # shard_map/scan transpose machinery.
+    return recv, jax.tree.map(jax.lax.stop_gradient, stats)
+
+
 def moe_apply_a2a(params, x, cfg: ModelConfig, axis_name: str, books, *,
                   scheme_name: str = "bf16", chunk: int = 2048,
                   decode_backend: str = "multisym"
@@ -275,8 +312,11 @@ def moe_apply_a2a(params, x, cfg: ModelConfig, axis_name: str, books, *,
     combine; scalar keys summed), following the transport replication
     conventions.  ``books`` may come from any tensor kind: the fixed
     codebook is lossless for foreign data (the paper's setting).
+
+    Differentiable: both wire hops carry an exact straight-through VJP
+    (``_a2a_wire``), so the op can sit inside a train step's
+    ``value_and_grad``.
     """
-    from ..comm.ring import ring_all_to_all
     from ..comm.transport import axis_size
 
     tp = axis_size(axis_name)
@@ -303,9 +343,8 @@ def moe_apply_a2a(params, x, cfg: ModelConfig, axis_name: str, books, *,
 
     # --- dispatch wire: buffers grouped by the shard owning the expert
     send = buf.reshape(b, tp, e_local, cap, d).transpose(1, 0, 2, 3, 4)
-    recv, s_disp = ring_all_to_all(send, axis_name, books, scheme_name,
-                                   chunk=chunk,
-                                   decode_backend=decode_backend)
+    recv, s_disp = _a2a_wire(send, axis_name, books, scheme_name, chunk,
+                             decode_backend)
     hbuf = recv.reshape(tp * b, e_local, cap, d)   # every shard's tokens
 
     # --- local experts: one batched einsum over (tp·B, E/tp, C)
@@ -319,10 +358,9 @@ def moe_apply_a2a(params, x, cfg: ModelConfig, axis_name: str, books, *,
     out_loc = jnp.einsum("zecf,efd->zecd", h, wd)  # (tp·B, E/tp, C, d)
 
     # --- combine wire: expert outputs return to their source shards
-    back, s_comb = ring_all_to_all(out_loc.reshape(tp, b, e_local, cap, d),
-                                   axis_name, books, scheme_name,
-                                   chunk=chunk,
-                                   decode_backend=decode_backend)
+    back, s_comb = _a2a_wire(out_loc.reshape(tp, b, e_local, cap, d),
+                             axis_name, books, scheme_name, chunk,
+                             decode_backend)
     out_buf = back.transpose(1, 0, 2, 3, 4).reshape(b, e, cap, d)
 
     y = jax.vmap(lambda ob, fe, pc, kp, tw_s: _seq_combine(
@@ -336,6 +374,133 @@ def moe_apply_a2a(params, x, cfg: ModelConfig, axis_name: str, books, *,
                    if key == "hop_coded_bits" else s_disp[key] + s_comb[key])
              for key in s_disp}
     return y.reshape(b, s, d), aux, stats
+
+
+# ------------------------------------------------------------------ a2a
+# Block-stack wiring for the compressed dispatch (``moe_impl="a2a"``).
+# The wire codec is process-global configuration, not model state: fixed
+# books come from *previous data* (paper §4) and every replica must hold
+# the same ones, exactly like the collective transports.  At bootstrap a
+# deterministic activation-shaped sample stands in; deployments install
+# real books (e.g. from a ``BookLifecycleManager`` snapshot) via
+# ``configure_a2a_wire``.
+_A2A_WIRE = {"books": None, "scheme_name": "bf16", "chunk": 512,
+             "decode_backend": "multisym"}
+_A2A_DEFAULT_BOOKS = {}
+
+
+def configure_a2a_wire(books=None, scheme_name: str = None,
+                       chunk: int = None, decode_backend: str = None) -> None:
+    """Set the codec the ``moe_impl="a2a"`` block path encodes with.
+
+    Any argument left ``None`` keeps its current value; ``books`` maps
+    plane → ``Codebook`` for the configured scheme (pass a lifecycle
+    manager's ``books(tensor_kind)``).  Changing the wire config only
+    affects steps traced afterwards — pair it with an epoch-keyed
+    compiled-step cache (``repro.lifecycle``) so a book refresh is a
+    deliberate recompile.
+    """
+    if books is not None:
+        _A2A_WIRE["books"] = dict(books)
+    if scheme_name is not None:
+        _A2A_WIRE["scheme_name"] = scheme_name
+    if chunk is not None:
+        _A2A_WIRE["chunk"] = int(chunk)
+    if decode_backend is not None:
+        _A2A_WIRE["decode_backend"] = decode_backend
+
+
+def _a2a_wire_books(scheme_name: str):
+    if _A2A_WIRE["books"] is not None:
+        return _A2A_WIRE["books"]
+    if scheme_name not in _A2A_DEFAULT_BOOKS:
+        from ..core.codebook import build_codebook
+        from ..core.symbols import SCHEMES
+        rng = np.random.default_rng(0)
+        sample = rng.normal(0.0, 1.0, 1 << 16).astype(jnp.bfloat16)
+        planes = SCHEMES[scheme_name].to_symbols(np.asarray(sample))
+        _A2A_DEFAULT_BOOKS[scheme_name] = {
+            p: build_codebook(np.bincount(s, minlength=256),
+                              key=("moe_dispatch", scheme_name, p))
+            for p, s in planes.items()}
+    return _A2A_DEFAULT_BOOKS[scheme_name]
+
+
+def _ambient_mesh():
+    """The mesh the surrounding pjit context established, if any
+    (jax-version compatible: abstract mesh on new jax, the physical
+    mesh context on 0.4.x)."""
+    get = getattr(jax.sharding, "get_abstract_mesh", None)
+    if get is not None:
+        mesh = get()
+        if mesh is not None and getattr(mesh, "axis_names", ()):
+            return mesh
+    try:
+        from jax.interpreters.pxla import thread_resources
+        mesh = thread_resources.env.physical_mesh
+    except (ImportError, AttributeError):
+        return None
+    if mesh is not None and not mesh.empty:
+        return mesh
+    return None
+
+
+def moe_apply_a2a_block(params, x, cfg: ModelConfig
+                        ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """``moe_impl="a2a"``: the compressed-dispatch MoE inside the block
+    stack.
+
+    Requires an ambient mesh with a ``"model"`` axis whose size divides
+    ``n_experts`` and the global batch (tokens shard over every mesh
+    axis, experts over ``model``); anything else falls back to the
+    scatter path — same numerics (``moe_apply_a2a`` is pinned
+    bit-identical to ``moe_apply``), no wire.
+
+    Returns ``(y, aux, wire_coded_bits)`` — the scalar is the *measured*
+    global coded size of this layer's dispatch+combine traffic from the
+    a2a hop ledger, which ``forward_train`` accumulates into the train
+    step's ``moe_wire_coded_bits`` metric (the counterpart of the
+    analytic ``moe_wire_raw_bits``).
+    """
+    mesh = _ambient_mesh()
+    zero = jnp.zeros((), jnp.float32)
+    if mesh is None or "model" not in mesh.axis_names:
+        y, aux = moe_apply(params, x, cfg)
+        return y, aux, zero
+    tp = mesh.shape["model"]
+    data_axes = tuple(a for a in mesh.axis_names if a != "model")
+    dp = 1
+    for a in data_axes:
+        dp *= mesh.shape[a]
+    if tp == 1 or cfg.n_experts % tp != 0 or x.shape[0] % (dp * tp) != 0:
+        y, aux = moe_apply(params, x, cfg)
+        return y, aux, zero
+
+    wire = _A2A_WIRE
+    books = _a2a_wire_books(wire["scheme_name"])
+    batch_axes = data_axes + ("model",)
+    dspec = P(batch_axes if len(batch_axes) > 1 else batch_axes[0],
+              None, None)
+
+    def body(xs, p):
+        y, aux, stats = moe_apply_a2a(
+            p, xs, cfg, "model", books, scheme_name=wire["scheme_name"],
+            chunk=wire["chunk"], decode_backend=wire["decode_backend"])
+        # stats follow the global/n replication convention: psum over
+        # the a2a axis recovers one data-group's total; data groups ran
+        # independent a2as, so their totals sum.
+        coded = jax.lax.psum(stats["coded_wire_bits"], "model")
+        for a in data_axes:
+            aux = jax.lax.pmean(aux, a)
+            coded = jax.lax.psum(coded, a)
+        return y, aux, coded
+
+    from ..comm.transport import shard_map_compat as _shard_map
+    y, aux, coded = _shard_map(
+        body, mesh=mesh,
+        in_specs=(dspec, jax.tree.map(lambda _: P(), params)),
+        out_specs=(dspec, P(), P()))(x, params)
+    return y, aux, coded
 
 
 def moe_apply_eshard(params, x, cfg: ModelConfig

@@ -83,10 +83,12 @@ def _group_apply(pattern, stacked_subs, x, cfg: ModelConfig):
     def body(carry, layer_subs):
         x = carry
         aux = jnp.zeros((), jnp.float32)
+        wire = jnp.zeros((), jnp.float32)
         for i, kind in enumerate(pattern):
-            x, a = block_apply(kind, layer_subs[i], x, cfg)
+            x, a, w = block_apply(kind, layer_subs[i], x, cfg)
             aux = aux + a
-        return x, aux
+            wire = wire + w
+        return x, (aux, wire)
 
     if cfg.remat == "block":
         body = jax.checkpoint(body)
@@ -94,8 +96,8 @@ def _group_apply(pattern, stacked_subs, x, cfg: ModelConfig):
         body = jax.checkpoint(
             body, policy=jax.checkpoint_policies.save_only_these_names(
                 "mixer_out", "ffn_out"))
-    x, auxs = jax.lax.scan(body, x, stacked_subs)
-    return x, auxs.sum()
+    x, (auxs, wires) = jax.lax.scan(body, x, stacked_subs)
+    return x, auxs.sum(), wires.sum()
 
 
 def _embed_inputs(params, batch: Dict[str, jnp.ndarray], cfg: ModelConfig):
@@ -114,18 +116,29 @@ def _embed_inputs(params, batch: Dict[str, jnp.ndarray], cfg: ModelConfig):
     return x * jnp.asarray(cfg.d_model ** 0.5, cfg.dtype)
 
 
-def forward_train(params, batch: Dict[str, jnp.ndarray], cfg: ModelConfig
-                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Full-sequence forward.  Returns (logits over token positions, aux)."""
+def forward_train(params, batch: Dict[str, jnp.ndarray], cfg: ModelConfig,
+                  *, with_stats: bool = False):
+    """Full-sequence forward.  Returns (logits over token positions, aux).
+
+    ``with_stats=True`` appends a stats dict — currently the measured
+    global coded bits of the compressed MoE dispatch wire summed over
+    layers (``moe_wire_coded_bits``, non-zero only under
+    ``moe_impl="a2a"``) — so the train step can surface the a2a hop
+    ledger next to its analytic ``moe_wire_raw_bits``.
+    """
     x = _embed_inputs(params, batch, cfg)
     aux = jnp.zeros((), jnp.float32)
+    wire = jnp.zeros((), jnp.float32)
     for bg, subs in zip(cfg.blocks, params["groups"]):
-        x, a = _group_apply(bg.pattern, subs, x, cfg)
+        x, a, w = _group_apply(bg.pattern, subs, x, cfg)
         aux = aux + a
+        wire = wire + w
     x = rmsnorm_apply(params["final_norm"], x, cfg.norm_eps)
     if "prefix_embeds" in batch and "tokens" in batch:
         x = x[:, batch["prefix_embeds"].shape[1]:]
     logits = unembed_apply(params["embed"], x, cfg)
+    if with_stats:
+        return logits, aux, {"moe_wire_coded_bits": wire}
     return logits, aux
 
 

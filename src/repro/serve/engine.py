@@ -98,9 +98,16 @@ def make_serve_step(model_cfg: ModelConfig,
                 RING_FACTORS["all_to_all"](ep_degree)) * dispatch_raw
         if comp_spec is not None and comp_spec.enabled:
             h = logits.astype(jnp.bfloat16)
-            s = payload_stats(h, comp_spec)
+            s = payload_stats(h, comp_spec, with_hists=True)
             metrics["act_raw_bits"] = s["raw_bits"]
             metrics["act_coded_bits"] = s["coded_bits"]
+            # drift probe (repro.lifecycle): per-batch Shannon floor,
+            # the coding epoch, and the per-plane histograms a host
+            # lifecycle manager observes to refresh books off-path
+            metrics["act_shannon_bits"] = s["shannon_bits"]
+            metrics["book_epoch"] = jnp.float32(comp_spec.book_epoch)
+            for plane in comp_spec.scheme.planes:
+                metrics[f"act_hist_{plane}"] = s[f"hist_{plane}"]
             if tp_degree > 1:
                 from ..comm.transport import get_transport
                 factor = jnp.float32(
@@ -132,20 +139,62 @@ def make_serve_step(model_cfg: ModelConfig,
 
 
 class Engine:
-    """Minimal batched-request engine over the pure-function model API."""
+    """Minimal batched-request engine over the pure-function model API.
+
+    With a ``lifecycle`` manager (``repro.lifecycle``), the engine feeds
+    every decode step's activation histograms into the manager and —
+    every ``refresh_every`` generated tokens — lets it rebuild stale
+    books.  An epoch flip re-binds the spec to the new books and swaps
+    in a freshly compiled serve step from the manager's epoch-keyed
+    compiled-step cache: the recompile is deliberate, amortized over the
+    whole epoch, and happens between decode steps, never inside one.
+    """
 
     def __init__(self, params, model_cfg: ModelConfig, serve_cfg: ServeConfig,
                  comp_spec: Optional[CompressionSpec] = None,
-                 tp_degree: int = 1, ep_degree: int = 1):
+                 tp_degree: int = 1, ep_degree: int = 1,
+                 lifecycle=None, refresh_every: int = 16):
         self.params = params
         self.cfg = model_cfg
         self.serve = serve_cfg
-        self._step = jax.jit(make_serve_step(model_cfg, comp_spec,
-                                             tp_degree=tp_degree,
-                                             ep_degree=ep_degree))
+        self.lifecycle = lifecycle
+        self.refresh_every = refresh_every
+        self._tp = tp_degree
+        self._ep = ep_degree
+        self._spec = comp_spec
+        if lifecycle is not None and comp_spec is None:
+            raise ValueError("a lifecycle manager needs a comp_spec naming "
+                             "the tensor kind / scheme / wire config")
+        self._step = self._compile_step()
         self._prefill = jax.jit(
             partial(prefill, cfg=model_cfg, cache_len=serve_cfg.max_cache_len))
         self._key = jax.random.PRNGKey(serve_cfg.seed)
+
+    def _compile_step(self):
+        build = lambda _=None: jax.jit(make_serve_step(  # noqa: E731
+            self.cfg, self._spec, tp_degree=self._tp, ep_degree=self._ep))
+        if self.lifecycle is None:
+            return build()
+        # The cache name carries every build-changing knob — engine
+        # degrees AND the spec's full wire config — so two engines
+        # sharing one manager never collide on a compiled step.
+        s = self._spec
+        name = (f"serve_step/{self.cfg.name}/{s.tensor_kind}"
+                f"/tp{self._tp}ep{self._ep}/{s.mode}/{s.scheme_name}"
+                f"/{s.transport}/c{s.chunk}/{s.decode_backend}/{s.carry}"
+                f"/{s.axes}")
+        return self.lifecycle.compiled(name, build)
+
+    def _maybe_refresh(self) -> bool:
+        """Let the manager rebuild stale books; swap in the new epoch's
+        spec + compiled step.  Returns True on an epoch flip."""
+        if self.lifecycle is None:
+            return False
+        if self.lifecycle.maybe_refresh() is None:
+            return False
+        self._spec = self.lifecycle.respec(self._spec)
+        self._step = self._compile_step()
+        return True
 
     def _sample(self, logits):
         if self.serve.temperature <= 0.0:
@@ -171,12 +220,26 @@ class Engine:
             pos = jnp.int32(prompt_len + i)
             logits, caches, m = self._step(self.params, tok, caches, pos)
             for k, v in m.items():
-                totals[k] = totals.get(k, 0.0) + float(v)
+                if getattr(v, "ndim", 0) > 0:          # per-plane histograms
+                    if self.lifecycle is not None and k.startswith("act_hist_"):
+                        self.lifecycle.observe(
+                            (self._spec.tensor_kind, self._spec.scheme_name,
+                             k[len("act_hist_"):]), np.asarray(v))
+                    continue
+                if k == "book_epoch":                  # level, not a count
+                    totals[k] = float(v)
+                else:
+                    totals[k] = totals.get(k, 0.0) + float(v)
+            if (self.lifecycle is not None and self.refresh_every > 0
+                    and (i + 1) % self.refresh_every == 0):
+                if self._maybe_refresh():
+                    totals["book_refreshes"] = totals.get(
+                        "book_refreshes", 0.0) + 1.0
             tok = self._sample(logits).astype(jnp.int32)
             out.append(tok)
-        for k in ("act_raw_bits", "act_coded_bits", "act_wire_raw_bits",
-                  "act_wire_coded_bits", "act_decoded_bits",
-                  "act_decode_chunks", "act_decode_mismatch",
-                  "moe_wire_raw_bits"):
+        for k in ("act_raw_bits", "act_coded_bits", "act_shannon_bits",
+                  "act_wire_raw_bits", "act_wire_coded_bits",
+                  "act_decoded_bits", "act_decode_chunks",
+                  "act_decode_mismatch", "moe_wire_raw_bits", "book_epoch"):
             totals.setdefault(k, 0.0)                  # stable for 1-token gens
         return np.concatenate([np.asarray(t) for t in out], axis=1), totals

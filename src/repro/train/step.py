@@ -53,11 +53,13 @@ def grad_payload_stats(grads, spec: Optional[CompressionSpec]
     codebook — summed per leaf, no giant concat.  Also returns the
     per-plane symbol histograms so the host registry can keep observing
     real gradient PMFs and rebuild codebooks off the critical path
-    (paper §4 lifecycle)."""
+    (paper §4 lifecycle), plus the payload's exact Shannon bits: the
+    ``coded − shannon`` gap is the in-graph half of the drift probe the
+    lifecycle monitor thresholds (``repro.lifecycle``)."""
     if spec is None or not spec.enabled:
         z = jnp.zeros((), jnp.float32)
-        return {"raw_bits": z, "coded_bits": z}
-    from ..comm.compression import histogram256_xla
+        return {"raw_bits": z, "coded_bits": z, "shannon_bits": z}
+    from ..comm.compression import histogram256_xla, shannon_bits_xla
     from ..core.symbols import bf16_planes_jnp
     raw = jnp.zeros((), jnp.float32)
     coded = jnp.zeros((), jnp.float32)
@@ -71,7 +73,10 @@ def grad_payload_stats(grads, spec: Optional[CompressionSpec]
             hists[plane] = hists[plane] + h
             lens = jnp.asarray(spec.lengths_for(plane), jnp.float32)
             coded = coded + jnp.dot(h.astype(jnp.float32), lens)
-    out = {"raw_bits": raw, "coded_bits": coded}
+    shannon = jnp.zeros((), jnp.float32)
+    for h in hists.values():
+        shannon = shannon + shannon_bits_xla(h)
+    out = {"raw_bits": raw, "coded_bits": coded, "shannon_bits": shannon}
     for p, h in hists.items():
         out[f"hist_{p}"] = h
     return out
@@ -129,6 +134,15 @@ def make_train_step(model_cfg: ModelConfig, opt_cfg: AdamWConfig,
     exist — ``models.moe.moe_apply_a2a``'s per-hop ledger — rather than
     estimated here.  ``dp_degree=1`` / ``ep_degree=1`` mean no wire, so
     the corresponding bits are 0.
+
+    With ``model_cfg.moe_impl="a2a"`` running over a real mesh, that
+    measured ledger surfaces as ``moe_wire_coded_bits`` (the coded
+    counterpart of ``moe_wire_raw_bits``).  With a spec the metrics also
+    carry the drift probe: ``grad_shannon_bits`` (the payload's exact
+    per-batch Shannon bits — ``grad_coded_bits − grad_shannon_bits`` is
+    the redundancy the lifecycle monitor thresholds) and ``book_epoch``
+    (the registry epoch the spec's books came from, so logs show
+    exactly when a hot-refresh flipped).
     """
     if grad_sync not in ("all_reduce", "reduce_scatter"):
         raise ValueError(f"unknown grad_sync {grad_sync!r}; one of "
@@ -145,31 +159,33 @@ def make_train_step(model_cfg: ModelConfig, opt_cfg: AdamWConfig,
                 "modeled yet)")
 
     def loss_fn(params, micro):
-        logits, aux = forward_train(params, micro, model_cfg)
+        logits, aux, fstats = forward_train(params, micro, model_cfg,
+                                            with_stats=True)
         mask = micro.get("loss_mask")
         ce = cross_entropy_loss(logits, micro["labels"], mask)
-        return ce + aux, (ce, aux)
+        return ce + aux, (ce, aux, fstats["moe_wire_coded_bits"])
 
     grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
 
     def step(state: TrainState, batch: Dict[str, jnp.ndarray]):
         if grad_accum == 1:
-            (loss, (ce, aux)), grads = grad_fn(state.params, batch)
+            (loss, (ce, aux, moe_coded)), grads = grad_fn(state.params, batch)
         else:
             micro_batches = jax.tree.map(
                 lambda x: x.reshape((grad_accum, x.shape[0] // grad_accum)
                                     + x.shape[1:]), batch)
 
             def micro_step(carry, micro):
-                g_acc, l_acc, ce_acc, aux_acc = carry
-                (l, (ce, aux)), g = grad_fn(state.params, micro)
+                g_acc, l_acc, ce_acc, aux_acc, w_acc = carry
+                (l, (ce, aux, w)), g = grad_fn(state.params, micro)
                 g_acc = jax.tree.map(jnp.add, g_acc, g)
-                return (g_acc, l_acc + l, ce_acc + ce, aux_acc + aux), None
+                return (g_acc, l_acc + l, ce_acc + ce, aux_acc + aux,
+                        w_acc + w), None
 
             zeros = jax.tree.map(
                 lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
-            (grads, loss, ce, aux), _ = jax.lax.scan(
-                micro_step, (zeros, 0.0, 0.0, 0.0), micro_batches)
+            (grads, loss, ce, aux, moe_coded), _ = jax.lax.scan(
+                micro_step, (zeros, 0.0, 0.0, 0.0, 0.0), micro_batches)
             inv = 1.0 / grad_accum
             grads = jax.tree.map(lambda g: g * inv, grads)
             loss, ce, aux = loss * inv, ce * inv, aux * inv
@@ -203,6 +219,14 @@ def make_train_step(model_cfg: ModelConfig, opt_cfg: AdamWConfig,
         metrics = {"loss": loss, "ce": ce, "aux": aux,
                    "grad_raw_bits": comp["raw_bits"],
                    "grad_coded_bits": comp["coded_bits"],
+                   # drift probe (repro.lifecycle): the per-batch Shannon
+                   # floor and the epoch of the books doing the coding
+                   "grad_shannon_bits": comp["shannon_bits"],
+                   "book_epoch": jnp.float32(
+                       comp_spec.book_epoch if comp_spec is not None else 0),
+                   # measured coded MoE dispatch wire (a2a hop ledger;
+                   # 0 unless moe_impl="a2a" ran over a real mesh)
+                   "moe_wire_coded_bits": moe_coded,
                    "grad_wire_raw_bits": (rs_factor + ag_factor)
                    * comp["raw_bits"],
                    "grad_wire_coded_bits": (rs_factor + ag_factor)

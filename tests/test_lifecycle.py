@@ -1,0 +1,315 @@
+"""Codebook lifecycle subsystem: drift monitor properties, epoch-versioned
+registry + manifest round-trips, compiled-step cache, epoch sync."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.comm import CompressionSpec
+from repro.core.codebook import (CodebookRegistry, build_codebook,
+                                 registry_content_hash)
+from repro.core.huffman import validate_prefix_free
+from repro.lifecycle import (BookLifecycleManager, DriftMonitor,
+                             DriftThresholds, EpochSyncError,
+                             epoch_fingerprint, verify_epoch_agreement)
+
+
+def _hist_from_seed(seed: int, support: slice = slice(0, 128),
+                    total: int = 1 << 14) -> np.ndarray:
+    """A random histogram with mass confined to ``support``."""
+    rng = np.random.default_rng(seed)
+    h = np.zeros(256, np.int64)
+    n = support.stop - support.start
+    w = rng.dirichlet(np.full(n, 0.5))
+    h[support] = np.round(w * total).astype(np.int64)
+    h[support.start] += total - h.sum()       # exact total, keeps mass inside
+    return np.maximum(h, 0)                   # rounding slack can't go < 0
+
+
+class TestDriftMonitorProperties:
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(min_value=0, max_value=10_000))
+    def test_zero_on_own_source_distribution(self, seed):
+        """KL and the excess coded-bits gap are exactly 0 when the
+        observed window IS the book's source distribution."""
+        book = build_codebook(_hist_from_seed(seed), key=("k", "bf16", "hi"))
+        mon = DriftMonitor(DriftThresholds(min_symbols=1))
+        rep = mon.observe(("k", "bf16", "hi"), book.source_counts, book)
+        assert rep.kl_bits == 0.0
+        assert rep.excess_bits == 0.0
+        assert not rep.stale
+
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(min_value=0, max_value=10_000))
+    def test_monotone_under_mixing_toward_disjoint(self, seed):
+        """Mixing the source with a support-disjoint distribution makes
+        both KL and the excess gap grow with the mixing weight."""
+        base = _hist_from_seed(seed, slice(0, 128))
+        book = build_codebook(base, key=("k", "bf16", "hi"))
+        disjoint = _hist_from_seed(seed + 1, slice(128, 256),
+                                   total=int(base.sum()))
+        mon = DriftMonitor(DriftThresholds(min_symbols=1))
+        kls, gaps = [], []
+        for t in (0.0, 0.25, 0.5, 0.75):
+            window = (1 - t) * book.source_counts.astype(np.float64) \
+                + t * disjoint
+            rep = mon.observe(("k", "bf16", "hi"), window, book)
+            kls.append(rep.kl_bits)
+            gaps.append(rep.excess_bits)
+        assert kls[0] == 0.0
+        assert all(b > a for a, b in zip(kls, kls[1:])), kls
+        assert all(b > a for a, b in zip(gaps, gaps[1:])), gaps
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(min_value=0, max_value=2 ** 31), st.integers(
+        min_value=1, max_value=256))
+    def test_floor_smoothing_total_under_adversarial_histograms(
+            self, seed, n_support):
+        """Any histogram — empty, single-spike, huge counts, random
+        support — yields a TOTAL prefix-free code within the length
+        limit (every symbol decodable; Kraft equality)."""
+        rng = np.random.default_rng(seed)
+        h = np.zeros(256, np.int64)
+        idx = rng.choice(256, size=n_support, replace=False)
+        h[idx] = rng.integers(0, 1 << 40, size=n_support)
+        if seed % 5 == 0:
+            h[:] = 0                           # the empty-window edge
+        if seed % 7 == 0:
+            h[:] = 0
+            h[seed % 256] = 1 << 50            # one colossal spike
+        book = build_codebook(h)
+        assert book.lengths.shape == (256,)
+        assert int(book.lengths.min()) >= 1
+        assert int(book.lengths.max()) <= book.max_len
+        validate_prefix_free(book.lengths)     # Kraft sum == 1 (complete)
+
+    def test_patience_gates_the_signal(self):
+        base = _hist_from_seed(3)
+        book = build_codebook(base, key=("k", "bf16", "hi"))
+        shifted = _hist_from_seed(4, slice(128, 256))
+        mon = DriftMonitor(DriftThresholds(min_symbols=1, patience=3))
+        key = ("k", "bf16", "hi")
+        for i in range(2):
+            rep = mon.observe(key, shifted, book)
+            assert rep.stale and not rep.signal, i
+        assert mon.stale_keys() == []
+        rep = mon.observe(key, shifted, book)
+        assert rep.signal
+        assert mon.stale_keys() == [key]
+        # one healthy window resets the streak
+        mon.observe(key, book.source_counts, book)
+        assert mon.stale_keys() == []
+
+    def test_small_windows_are_ignored(self):
+        base = _hist_from_seed(5)
+        book = build_codebook(base, key=("k", "bf16", "hi"))
+        mon = DriftMonitor(DriftThresholds(min_symbols=1 << 20, patience=1))
+        rep = mon.observe(("k", "bf16", "hi"),
+                          _hist_from_seed(6, slice(128, 256)), book)
+        assert rep.kl_bits > 1.0 and not rep.stale
+
+
+class TestRegistryRoundTrip:
+    def _populated(self):
+        reg = CodebookRegistry(ema=0.7)
+        rng = np.random.default_rng(0)
+        for kind in ("grad", "act"):
+            for plane in ("lo", "hi"):
+                key = (kind, "bf16", plane)
+                # several EMA observations → non-trivial running state
+                for step in range(3):
+                    reg.observe(key, rng.integers(0, 1000, 256))
+                reg.rebuild([key])
+        reg.rebuild()                          # one more epoch bump
+        return reg
+
+    def test_save_load_reproduces_books_and_ema(self, tmp_path):
+        reg = self._populated()
+        path = str(tmp_path / "reg.npz")
+        reg.save(path)
+        back = CodebookRegistry.load(path)
+        assert back.book_epoch == reg.book_epoch
+        assert back.ema == reg.ema and back.max_len == reg.max_len
+        assert len(back) == len(reg)
+        for key in reg.keys():
+            a, b = reg.get(key), back.get(key)
+            assert a.book_id == b.book_id
+            np.testing.assert_array_equal(a.lengths, b.lengths)
+            np.testing.assert_array_equal(a.codes, b.codes)
+            ra, rb = reg._running[key], back._running[key]
+            assert ra.n_batches == rb.n_batches
+            np.testing.assert_array_equal(ra.counts, rb.counts)
+        # EMA state must CONTINUE identically: one more observe+rebuild
+        # on both sides yields identical books
+        h = np.arange(256)
+        for r in (reg, back):
+            r.observe(("grad", "bf16", "hi"), h)
+            r.rebuild([("grad", "bf16", "hi")])
+        np.testing.assert_array_equal(reg.get(("grad", "bf16", "hi")).lengths,
+                                      back.get(("grad", "bf16", "hi")).lengths)
+
+    def test_reloaded_spec_is_hash_identical(self, tmp_path):
+        reg = self._populated()
+        path = str(tmp_path / "reg.npz")
+        reg.save(path)
+        back = CodebookRegistry.load(path)
+        for kind in ("grad", "act"):
+            s1 = CompressionSpec.from_registry(reg, kind, "bf16",
+                                               mode="bitexact",
+                                               transport="ring")
+            s2 = CompressionSpec.from_registry(back, kind, "bf16",
+                                               mode="bitexact",
+                                               transport="ring")
+            assert s1 == s2
+            assert hash(s1) == hash(s2)
+            assert s1.book_epoch == reg.book_epoch
+
+    def test_content_hash_tracks_books_not_observations(self):
+        reg = self._populated()
+        h0 = reg.snapshot().content_hash
+        reg.observe(("grad", "bf16", "hi"), np.arange(256))
+        assert reg.snapshot().content_hash == h0       # observing ≠ coding
+        reg.rebuild([("grad", "bf16", "hi")])
+        assert reg.snapshot().content_hash != h0       # rebuild = new wire
+
+    def test_epoch_is_monotone(self):
+        reg = CodebookRegistry()
+        assert reg.book_epoch == 0
+        reg.install(("k", "bf16", "hi"), np.ones(256))
+        e1 = reg.book_epoch
+        assert e1 == 1
+        reg.rebuild([])                        # empty rebuild: no flip
+        assert reg.book_epoch == e1
+        reg.rebuild()
+        assert reg.book_epoch == e1 + 1
+
+
+class TestLifecycleManager:
+    def _manager(self, **kw):
+        mgr = BookLifecycleManager(thresholds=DriftThresholds(
+            min_symbols=1, patience=2, **kw))
+        for plane in ("lo", "hi"):
+            mgr.install(("act", "bf16", plane), _hist_from_seed(1))
+        return mgr
+
+    def test_observe_detect_refresh_flow(self):
+        mgr = self._manager()
+        e0 = mgr.book_epoch
+        assert mgr.maybe_refresh() is None     # healthy: no flip
+        shifted = _hist_from_seed(9, slice(128, 256))
+        for _ in range(2):
+            for plane in ("lo", "hi"):
+                rep = mgr.observe(("act", "bf16", plane), shifted)
+        assert rep.signal
+        assert len(mgr.stale_keys()) == 2
+        snap0 = mgr.snapshot
+        assert mgr.maybe_refresh() == e0 + 1
+        assert mgr.snapshot.content_hash != snap0.content_hash
+        assert mgr.stale_keys() == []          # streaks reset
+        assert mgr.n_refreshes == 1
+        # the old snapshot is still intact (immutable per-epoch view)
+        assert snap0.epoch == e0
+
+    def test_compiled_step_cache_recompiles_once_per_epoch(self):
+        mgr = self._manager()
+        calls = []
+
+        def build(m):
+            calls.append(m.book_epoch)
+            return ("step", m.book_epoch)
+
+        s1 = mgr.compiled("train", build)
+        s2 = mgr.compiled("train", build)
+        assert s1 is s2 and calls == [mgr.book_epoch]
+        mgr.maybe_refresh(force=True)
+        s3 = mgr.compiled("train", build)
+        assert s3 != s1 and len(calls) == 2
+        assert mgr.n_recompiles == 2
+
+    def test_spec_cache_and_respec(self):
+        mgr = self._manager()
+        s1 = mgr.spec("act", "bf16", mode="bitexact", transport="ring",
+                      chunk=128)
+        assert mgr.spec("act", "bf16", mode="bitexact", transport="ring",
+                        chunk=128) is s1
+        assert s1.book_epoch == mgr.book_epoch
+        mgr.maybe_refresh(force=True)
+        s2 = mgr.respec(s1)
+        assert s2.book_epoch == s1.book_epoch + 1
+        assert (s2.transport, s2.chunk, s2.mode) == ("ring", 128, "bitexact")
+
+    def test_manifest_roundtrip_and_tamper_detection(self, tmp_path):
+        mgr = self._manager()
+        mgr.maybe_refresh(force=True)
+        d = str(tmp_path / "books")
+        mgr.save(d)
+        back = BookLifecycleManager.load(d)
+        assert back.book_epoch == mgr.book_epoch
+        assert back.snapshot.content_hash == mgr.snapshot.content_hash
+        # tamper: manifest from a different epoch must be rejected
+        import json
+        import os
+        mpath = os.path.join(d, "manifest.json")
+        with open(mpath) as f:
+            manifest = json.load(f)
+        manifest["book_epoch"] += 1
+        with open(mpath, "w") as f:
+            json.dump(manifest, f)
+        with pytest.raises(ValueError, match="epoch"):
+            BookLifecycleManager.load(d)
+
+    def test_observe_train_metrics_feeds_planes(self):
+        mgr = self._manager()
+        mgr2_key = ("grad", "bf16", "hi")
+        mgr.install(mgr2_key, _hist_from_seed(2))
+        mgr.install(("grad", "bf16", "lo"), _hist_from_seed(2))
+        metrics = {"loss": 1.0,
+                   "grad_hist_hi": _hist_from_seed(3),
+                   "grad_hist_lo": _hist_from_seed(4)}
+        reports = mgr.observe_train_metrics(metrics)
+        assert set(reports) == {"hi", "lo"}
+        assert all(r.n_symbols > 0 for r in reports.values())
+
+
+class TestEpochSync:
+    def test_fingerprint_sources_agree(self):
+        mgr = BookLifecycleManager()
+        mgr.install(("k", "bf16", "hi"), np.ones(256))
+        fps = [epoch_fingerprint(mgr), epoch_fingerprint(mgr.snapshot),
+               epoch_fingerprint(mgr.registry)]
+        assert all(np.array_equal(fps[0], f) for f in fps[1:])
+        assert fps[0].dtype == np.uint32
+
+    def test_unanimous_passes_mismatch_raises(self):
+        mgr = BookLifecycleManager()
+        mgr.install(("k", "bf16", "hi"), np.ones(256))
+        snap0 = mgr.snapshot
+        mgr.registry.observe(("k", "bf16", "hi"), np.arange(256))
+        mgr.maybe_refresh(force=True)
+        fp = epoch_fingerprint(mgr)
+        verify_epoch_agreement(np.tile(fp, (8, 1)))
+        mixed = np.tile(fp, (8, 1))
+        mixed[3] = epoch_fingerprint(snap0)
+        with pytest.raises(EpochSyncError, match="disagree"):
+            verify_epoch_agreement(mixed)
+
+    def test_content_divergence_without_epoch_divergence_raises(self):
+        """Same epoch number, different books — the content hash is what
+        catches the silently-corrupting case."""
+        a, b = CodebookRegistry(), CodebookRegistry()
+        a.install(("k", "bf16", "hi"), np.ones(256))
+        b.install(("k", "bf16", "hi"), np.arange(1, 257) ** 2)
+        fa, fb = epoch_fingerprint(a), epoch_fingerprint(b)
+        assert fa[0] == fb[0] and fa[1] != fb[1]
+        with pytest.raises(EpochSyncError):
+            verify_epoch_agreement(np.stack([fa, fb]))
+
+    def test_content_hash_is_order_and_length_sensitive(self):
+        h1 = registry_content_hash([build_codebook(np.ones(256), book_id=0,
+                                                   key=("a", "bf16", "hi"))])
+        h2 = registry_content_hash([build_codebook(np.ones(256), book_id=1,
+                                                   key=("a", "bf16", "hi"))])
+        h3 = registry_content_hash([build_codebook(np.arange(1, 257),
+                                                   book_id=0,
+                                                   key=("a", "bf16", "hi"))])
+        assert len({h1, h2, h3}) == 3

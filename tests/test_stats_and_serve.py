@@ -149,3 +149,70 @@ class TestServeMoEWireAccounting:
                      comp_spec=spec, ep_degree=4)
         _, totals = eng.generate(jnp.ones((1, 8), jnp.int32), 3)
         assert totals["moe_wire_raw_bits"] == 0.0
+
+
+class TestServeLifecycle:
+    """Engine + BookLifecycleManager: drift observation from the decode
+    loop, hot-refresh through the epoch-keyed compiled-step cache."""
+
+    def _engine(self, refresh_every=2):
+        from repro.comm import CompressionSpec
+        from repro.lifecycle import BookLifecycleManager, DriftThresholds
+
+        cfg = ModelConfig(name="s-life", arch_type="dense", d_model=64,
+                          vocab_size=128,
+                          blocks=(BlockGroup(("attn",), 2),), n_heads=2,
+                          n_kv_heads=1, head_dim=32, d_ff=128, remat="none")
+        params = model_init(cfg, jax.random.PRNGKey(0))
+        mgr = BookLifecycleManager(thresholds=DriftThresholds(
+            min_symbols=1, patience=1, kl_bits=0.01, excess_bits=0.01))
+        # deliberately-foreign bootstrap books (uniform): the first
+        # observed decode activations must read as drifted
+        for plane in ("lo", "hi"):
+            mgr.install(("act", "bf16", plane), np.ones(256))
+        spec = mgr.spec("act", "bf16", mode="ledger")
+        eng = Engine(params, cfg, ServeConfig(max_cache_len=64),
+                     comp_spec=spec, lifecycle=mgr,
+                     refresh_every=refresh_every)
+        return eng, mgr
+
+    def test_drift_metrics_and_hot_refresh(self):
+        eng, mgr = self._engine(refresh_every=2)
+        e0 = mgr.book_epoch
+        step0 = eng._step
+        _, totals = eng.generate(jnp.ones((2, 8), jnp.int32), 6)
+        # uniform books code everything at exactly 8 bits/symbol, so the
+        # shannon gap is visible and the monitor flips an epoch
+        assert totals["act_shannon_bits"] > 0
+        assert totals["act_coded_bits"] >= totals["act_shannon_bits"]
+        assert totals.get("book_refreshes", 0) >= 1
+        assert mgr.book_epoch > e0
+        assert mgr.n_refreshes >= 1
+        # the engine swapped in the new epoch's compiled step (the old
+        # epoch's entry was evicted from the cache)
+        assert eng._step is not step0
+        assert eng._spec.book_epoch == mgr.book_epoch
+        assert totals["book_epoch"] == float(mgr.book_epoch)
+        # refreshed books actually compress the decode activations
+        _, totals2 = eng.generate(jnp.ones((2, 8), jnp.int32), 4)
+        assert (totals2["act_coded_bits"] / totals2["act_raw_bits"]
+                < totals["act_coded_bits"] / totals["act_raw_bits"])
+
+    def test_no_lifecycle_engine_unchanged(self):
+        eng, mgr = self._engine()
+        eng2 = Engine(eng.params, eng.cfg, ServeConfig(max_cache_len=64))
+        a, t = eng2.generate(jnp.ones((1, 8), jnp.int32), 3)
+        assert a.shape == (1, 3)
+        assert t["act_raw_bits"] == 0.0
+
+    def test_lifecycle_requires_spec(self):
+        from repro.lifecycle import BookLifecycleManager
+
+        cfg = ModelConfig(name="s-bad", arch_type="dense", d_model=32,
+                          vocab_size=64, blocks=(BlockGroup(("attn",), 1),),
+                          n_heads=2, n_kv_heads=1, head_dim=16, d_ff=64,
+                          remat="none")
+        params = model_init(cfg, jax.random.PRNGKey(0))
+        with pytest.raises(ValueError, match="comp_spec"):
+            Engine(params, cfg, ServeConfig(max_cache_len=16),
+                   lifecycle=BookLifecycleManager())

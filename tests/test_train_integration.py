@@ -209,3 +209,63 @@ class TestGradSyncAccounting:
             make_train_step(cfg, AdamWConfig(), dp_degree=8,
                             dp_axis_sizes=(4, 2),
                             grad_sync="reduce_scatter")
+
+
+class TestLifecycleDriftMetrics:
+    """The train step's in-graph half of the drift probe + the manager-
+    driven refresh loop (repro.lifecycle, docs/lifecycle.md)."""
+
+    def test_shannon_and_epoch_metrics(self):
+        from repro.lifecycle import BookLifecycleManager
+
+        cfg = _cfg()
+        mgr = BookLifecycleManager()
+        mgr.install(("grad", "bf16", "lo"), np.ones(256))
+        mgr.install(("grad", "bf16", "hi"), np.ones(256))
+        spec = mgr.spec("grad", "bf16", mode="ledger")
+        step = jax.jit(make_train_step(cfg, AdamWConfig(lr=1e-3),
+                                       comp_spec=spec))
+        _, _, m = _run(cfg, 1, step)
+        # Shannon floor: positive, never above the realized coded bits,
+        # never above raw (8 bits/symbol ceiling)
+        assert 0 < float(m["grad_shannon_bits"]) <= float(m["grad_coded_bits"])
+        assert float(m["grad_shannon_bits"]) <= float(m["grad_raw_bits"])
+        assert float(m["book_epoch"]) == float(mgr.book_epoch)
+        assert float(m["moe_wire_coded_bits"]) == 0.0   # dense model
+
+    def test_manager_driven_refresh_recompiles_and_improves(self):
+        from repro.lifecycle import BookLifecycleManager, DriftThresholds
+
+        cfg = _cfg()
+        mgr = BookLifecycleManager(thresholds=DriftThresholds(
+            min_symbols=1, patience=1, kl_bits=0.01, excess_bits=0.01))
+        # uniform bootstrap books: real gradients must read as drifted
+        mgr.install(("grad", "bf16", "lo"), np.ones(256))
+        mgr.install(("grad", "bf16", "hi"), np.ones(256))
+
+        def build(m):
+            return jax.jit(make_train_step(
+                cfg, AdamWConfig(lr=1e-3),
+                comp_spec=m.spec("grad", "bf16", mode="ledger")))
+
+        step = mgr.compiled("train", build)
+        state, _, m = _run(cfg, 2, step)
+        ratio_before = float(m["grad_coded_bits"]) / float(m["grad_raw_bits"])
+        reports = mgr.observe_train_metrics(m)
+        assert set(reports) == {"lo", "hi"}
+        assert mgr.maybe_refresh() is not None
+        step2 = mgr.compiled("train", build)
+        assert step2 is not step
+        assert mgr.n_recompiles == 2
+        _, _, m2 = _run(cfg, 2, step2)
+        assert float(m2["book_epoch"]) == float(mgr.book_epoch)
+        ratio_after = float(m2["grad_coded_bits"]) / float(m2["grad_raw_bits"])
+        assert ratio_after < ratio_before - 0.02
+
+    def test_spec_off_keeps_zero_metrics(self):
+        cfg = _cfg()
+        step = jax.jit(make_train_step(cfg, AdamWConfig(lr=1e-3)))
+        _, _, m = _run(cfg, 1, step)
+        assert float(m["grad_shannon_bits"]) == 0.0
+        assert float(m["book_epoch"]) == 0.0
+        assert float(m["moe_wire_coded_bits"]) == 0.0

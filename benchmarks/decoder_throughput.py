@@ -160,3 +160,69 @@ def run() -> None:
          f"{default_us['scan'] / default_us['multisym']:.3f}")
     best = min(default_us.values())
     emit(f"{P}.best_throughput_mbps", 0.0, f"{n / best:.2f}")
+
+    _run_qlc()
+
+
+def _qlc_payload():
+    """(e4m3 data bytes, fixed-book histogram) — QLC's serving payload.
+
+    QLC targets the inference a2a/ring path, where activations ride the
+    wire as fp8; the codec×backend comparison therefore runs on
+    e4m3-quantized activation bytes (not the training bf16 planes the
+    Huffman sweep above measures)."""
+    if TINY:
+        rng = np.random.default_rng(0)
+        vals = rng.normal(size=131072).astype(np.float32)
+        prev = rng.normal(size=131072).astype(np.float32)
+    else:
+        from .common import gemma_proxy
+        cfg, params, acts = gemma_proxy()
+        vals = np.asarray(acts[0], np.float32).reshape(-1)[:1 << 20]
+        prev = np.asarray(acts[1], np.float32).reshape(-1)[:1 << 20]
+    data = np.asarray(jnp.asarray(vals, jnp.float8_e4m3fn)).view(np.uint8)
+    probe = np.asarray(jnp.asarray(prev, jnp.float8_e4m3fn)).view(np.uint8)
+    return data, np.maximum(np.bincount(probe, minlength=256), 1)
+
+
+def _run_qlc() -> None:
+    """Codec × backend sweep: QLC's branchless scan vs canonical
+    Huffman's multisym window-LUT on the same e4m3 stream.
+
+    Headline rows (gated via ``--compare``):
+      * ``{P}.qlc_vs_multisym_speedup`` — same-run decode-time ratio at
+        the default chunk (the acceptance floor is 1.5×);
+      * ``{P}.qlc.rate_ratio_vs_huffman`` — deterministic bits ratio
+        (the ≤ 1.06 give-up the 4-class restriction costs).
+    """
+    data, counts = _qlc_payload()
+    n = data.shape[0]
+    P = "qlc_tiny" if TINY else "qlc"
+    reps = 5
+    chunks = (DEFAULT_CHUNK,) if TINY else (512, DEFAULT_CHUNK, 8192)
+
+    hbook = build_codebook(counts, codec="huffman")
+    qbook = build_codebook(counts, codec="qlc")
+    djnp = jnp.asarray(data)
+
+    default_us = {}
+    for chunk in chunks:
+        for codec, book, backend in (("huffman", hbook, "multisym"),
+                                     ("qlc", qbook, "scan")):
+            stream = encode_chunked(djnp, book, chunk=chunk)
+            out = decode_chunked(stream, book, backend=backend)
+            assert (np.asarray(out, np.uint8) == data).all(), \
+                f"{codec}/{backend}/c{chunk} not bit-exact"
+            us = _best_of(lambda s=stream, b=book, bk=backend:
+                          decode_chunked(s, b, backend=bk), reps)
+            emit(f"{P}.{codec}.{backend}.c{chunk}.us", us, f"n={n}")
+            emit(f"{P}.{codec}.{backend}.c{chunk}.syms_per_sec", 0.0,
+                 f"{n / us * 1e6:.0f}")
+            if chunk == DEFAULT_CHUNK:
+                default_us[codec] = us
+
+    emit(f"{P}.qlc_vs_multisym_speedup", 0.0,
+         f"{default_us['huffman'] / default_us['qlc']:.3f}")
+    # deterministic: same-histogram payload bits, QLC / Huffman (≤ 1.06)
+    emit(f"{P}.rate_ratio_vs_huffman", 0.0,
+         f"{qbook.encoded_bits(counts) / hbook.encoded_bits(counts):.4f}")

@@ -112,6 +112,43 @@ def _inner() -> None:
     emit("ring_traffic.ring.hop_latency_us", results["ring"][0] / hops, "")
     emit("ring_traffic.payload_raw_bits_per_dev", 0.0, f"{raw:.0f}")
 
+    # --- codec matrix on the serving payload: e4m3 ring all-reduce ----
+    # QLC targets the inference wire, where activations ride as fp8.
+    # Same integer-valued trick (sums stay exactly representable), same
+    # ring transport, huffman vs qlc books from the same histograms —
+    # the coded-bits delta is the codec's rate give-up, measured on the
+    # actual hop traffic rather than an endpoint estimate.
+    x8 = jnp.asarray(rng.integers(-2, 3, size=(_N, _PER_DEV)),
+                     jnp.float8_e4m3fn)
+    planes8 = SCHEMES["e4m3"].to_symbols(np.asarray(x8))
+    want8 = np.asarray(x8, np.float32).sum(axis=0)
+    coded8 = {}
+    for codec in ("huffman", "qlc"):
+        books8 = {p: build_codebook(np.bincount(s, minlength=256),
+                                    codec=codec)
+                  for p, s in planes8.items()}
+
+        @smap
+        def run8(xs, b=books8):
+            y, stats = TRANSPORTS["ring"].all_reduce(
+                xs[0], "data", b, "e4m3", chunk=_CHUNK)
+            return y[None], {k: jax.lax.psum(v, "data")
+                             for k, v in stats.items()}
+
+        y, stats = run8(x8)
+        got8 = np.asarray(y, np.float32)
+        assert (got8 == want8).all(), f"ring_{codec}_e4m3 not bit-exact"
+        us, _ = timed(lambda: run8(x8))
+        coded8[codec] = float(np.asarray(stats["coded_wire_bits"]))
+        emit(f"ring_traffic.ring_{codec}_e4m3.all_reduce_us", us, "")
+        emit(f"ring_traffic.ring_{codec}_e4m3.coded_wire_bits", 0.0,
+             f"{coded8[codec]:.0f}")
+        emit(f"ring_traffic.ring_{codec}_e4m3.wire_ratio", 0.0,
+             f"{coded8[codec] / (float(np.asarray(stats['raw_wire_bits'])) or 1.0):.4f}")
+    # deterministic codec rate comparison on identical hop traffic
+    emit("ring_traffic.e4m3_qlc_rate_ratio", 0.0,
+         f"{coded8['qlc'] / (coded8['huffman'] or 1.0):.4f}")
+
     def emit_op(name, us, stats, extra_hops=None):
         raw_w = float(stats["raw_wire_bits"])
         coded_w = float(stats["coded_wire_bits"])

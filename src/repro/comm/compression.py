@@ -47,7 +47,6 @@ __all__ = ["CompressionSpec", "payload_stats", "histogram256_xla",
 
 _MODES = ("off", "ledger", "bitexact")
 KNOWN_TRANSPORTS = ("monolithic", "chunked", "ring")
-_DECODE_BACKENDS = ("multisym", "scan", "pallas", "multisym_pallas")
 _CARRIES = ("wire", "f32")
 
 
@@ -92,9 +91,15 @@ class CompressionSpec:
     # Bitexact wire strategy (repro.comm.transport registry).
     transport: str = "monolithic"        # monolithic | chunked | ring
     chunk: int = DEFAULT_CHUNK           # chunked/ring symbols per chunk
-    # Chunked-decode backend; the multi-symbol table walk is the default
-    # (fastest portable backend, pure XLA — docs/kernels.md).
-    decode_backend: str = "multisym"     # multisym|scan|pallas|multisym_pallas
+    # Entropy codec (repro.core.codec registry).  "auto" resolves to the
+    # process default at construction, so the stored field is always a
+    # concrete registered name — two specs differing only in how they
+    # spelled the default still hash and compare equal.
+    codec: str = "auto"                  # huffman | qlc | auto
+    # Chunked-decode backend; "auto" resolves to the codec's default
+    # (huffman → the multisym table walk, qlc → the branchless scan —
+    # docs/kernels.md, docs/codecs.md), again at construction.
+    decode_backend: str = "auto"         # auto|multisym|scan|pallas|...
     # Ring all-reduce accumulation dtype across hops: "wire" reduces in
     # the scheme dtype (honest link semantics); "f32" carries float32
     # partial sums as two wire-dtype components — training-grade
@@ -112,10 +117,14 @@ class CompressionSpec:
         if self.transport not in KNOWN_TRANSPORTS:
             raise ValueError(f"unknown transport {self.transport!r}; "
                              f"one of {KNOWN_TRANSPORTS}")
-        if self.decode_backend not in _DECODE_BACKENDS:
-            raise ValueError(f"unknown decode backend "
-                             f"{self.decode_backend!r}; "
-                             f"one of {_DECODE_BACKENDS}")
+        from ..core.codec import default_codec, get_codec
+        codec_name = (default_codec() if self.codec == "auto" else self.codec)
+        codec = get_codec(codec_name)    # raises on unknown codec
+        backend = codec.resolve_backend(self.decode_backend)
+        # Frozen dataclass: resolve "auto" in place so the static fields
+        # jit/shard_map see are always concrete names.
+        object.__setattr__(self, "codec", codec_name)
+        object.__setattr__(self, "decode_backend", backend)
         if self.carry not in _CARRIES:
             raise ValueError(f"unknown carry {self.carry!r}; "
                              f"one of {_CARRIES}")
@@ -159,10 +168,11 @@ class CompressionSpec:
                       scheme_name: str = "bf16", mode: str = "ledger",
                       transport: str = "monolithic",
                       chunk: int = DEFAULT_CHUNK,
-                      decode_backend: str = "multisym",
+                      decode_backend: str = "auto",
                       carry: str = "wire",
                       axes: Optional[Tuple[str, str]] = None,
-                      book_epoch: Optional[int] = None
+                      book_epoch: Optional[int] = None,
+                      codec: Optional[str] = None
                       ) -> "CompressionSpec":
         scheme = SCHEMES[scheme_name]
         lens = []
@@ -175,9 +185,13 @@ class CompressionSpec:
             # registries expose book_epoch; RegistrySnapshots expose epoch
             book_epoch = getattr(registry, "book_epoch",
                                  getattr(registry, "epoch", 0))
+        if codec is None:
+            # registries and snapshots both carry the codec they built
+            # their books with; pre-codec objects are huffman.
+            codec = getattr(registry, "codec", "huffman")
         return cls(mode=mode, scheme_name=scheme_name, tensor_kind=tensor_kind,
                    plane_lengths=tuple(lens), book_ids=tuple(ids),
-                   transport=transport, chunk=chunk,
+                   transport=transport, chunk=chunk, codec=codec,
                    decode_backend=decode_backend, carry=carry, axes=axes,
                    book_epoch=book_epoch)
 
@@ -185,18 +199,28 @@ class CompressionSpec:
     def from_books(cls, books: Dict[str, Codebook], scheme_name: str,
                    tensor_kind: str = "generic", mode: str = "ledger",
                    transport: str = "monolithic", chunk: int = DEFAULT_CHUNK,
-                   decode_backend: str = "multisym",
+                   decode_backend: str = "auto",
                    carry: str = "wire",
                    axes: Optional[Tuple[str, str]] = None,
-                   book_epoch: int = 0
+                   book_epoch: int = 0,
+                   codec: Optional[str] = None
                    ) -> "CompressionSpec":
         lens = tuple((p, tuple(int(v) for v in b.lengths))
                      for p, b in books.items())
         ids = tuple((p, b.book_id) for p, b in books.items())
+        if codec is None:
+            # Infer from the books themselves; a mixed-codec plane dict
+            # is a caller bug, not something to paper over.
+            names = {getattr(b, "codec_name", "huffman")
+                     for b in books.values()}
+            if len(names) > 1:
+                raise ValueError(f"books mix codecs {sorted(names)}; "
+                                 f"one spec covers one codec")
+            codec = names.pop() if names else "auto"
         return cls(mode=mode, scheme_name=scheme_name, tensor_kind=tensor_kind,
                    plane_lengths=lens, book_ids=ids, transport=transport,
-                   chunk=chunk, decode_backend=decode_backend, carry=carry,
-                   axes=axes, book_epoch=book_epoch)
+                   chunk=chunk, codec=codec, decode_backend=decode_backend,
+                   carry=carry, axes=axes, book_epoch=book_epoch)
 
 
 def _planes_of(x: jnp.ndarray, spec: CompressionSpec) -> Dict[str, jnp.ndarray]:

@@ -34,9 +34,12 @@ layout* (pad slots decode to value 0 and re-mask on encode) and recode
 the updated blocks.  The fixed codebook is what makes either viable: no
 codebook rides the wire and re-encoding is a single LUT pass (the
 paper's single-stage property, per hop).  The decode side is selected
-by ``decode_backend`` (``scan`` / ``pallas`` / ``multisym`` /
-``multisym_pallas`` — see ``core.encoder.decode_chunked``; the
-table-driven ``multisym`` walk is the default).
+by ``decode_backend``, resolved per codec by ``transport.decode_blocks``
+(huffman: ``scan`` / ``pallas`` / ``multisym`` / ``multisym_pallas``;
+qlc: ``scan`` / ``pallas`` — ``"auto"`` picks the codec's default, see
+docs/codecs.md).  The encode side is codec-agnostic: both codecs pack
+through the same ``_pack_rows`` core, so the hop recode path is
+unchanged.
 
 Numerics: gather-type ops (all_gather, all_to_all) forward values
 unchanged, so they are bit-exact for any input.  Reduce-type ops
@@ -80,9 +83,10 @@ __all__ = ["ring_all_gather", "ring_all_reduce", "ring_reduce_scatter",
            "ring_all_to_all", "RING_CARRIES", "DEFAULT_RING_BACKEND"]
 
 RING_CARRIES = ("wire", "f32")
-# The table-driven multi-symbol walk: pure-XLA (shard_map-safe without
-# replication-check overrides) and the fastest CPU/TPU-portable backend.
-DEFAULT_RING_BACKEND = "multisym"
+# "auto" resolves per codec inside decode_blocks: the hop codec follows
+# whatever codec built the books (huffman → the pure-XLA multisym walk,
+# qlc → the branchless scan — both shard_map-safe, docs/codecs.md).
+DEFAULT_RING_BACKEND = "auto"
 
 
 def _fwd_perm(n: int):

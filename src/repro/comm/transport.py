@@ -45,10 +45,8 @@ import jax
 import jax.numpy as jnp
 
 from ..core.codebook import Codebook
-from ..core.encoder import (DEFAULT_CHUNK, decode_chunks_jit,
-                            decode_chunks_multisym_jit, decode_jit,
-                            encode_chunked_jit, encode_jit,
-                            multisym_table_args)
+from ..core.codec import codec_for_book
+from ..core.encoder import DEFAULT_CHUNK, encode_chunked_jit, encode_jit
 from ..core.symbols import SCHEMES
 
 __all__ = [
@@ -69,10 +67,11 @@ try:
 except AttributeError:
     from jax.experimental.shard_map import shard_map as shard_map_compat
 
-# Default chunked-decode backend for every transport entry point: the
-# multi-symbol table walk (pure XLA, fastest portable backend — see
-# docs/kernels.md; ``pallas`` / ``multisym_pallas`` opt into kernels).
-DEFAULT_DECODE_BACKEND = "multisym"
+# Default chunked-decode backend for every transport entry point:
+# "auto" resolves per codec in ``decode_blocks`` (huffman → the multisym
+# table walk, qlc → the branchless scan — docs/kernels.md,
+# docs/codecs.md; ``pallas`` / ``multisym_pallas`` opt into kernels).
+DEFAULT_DECODE_BACKEND = "auto"
 
 # Analytic ring-algorithm egress factors per device (× payload), shared
 # by ledger mode and the transports' raw-bit accounting.
@@ -143,39 +142,18 @@ def encode_planes(x, books: Dict[str, Codebook], scheme_name: str, *,
 
 
 def decode_plane(words, book: Codebook, n_symbols: int):
-    """Monolithic decode: canonical scan walk over one plane's stream."""
-    t = book.tables
-    return decode_jit(words, jnp.asarray(t.first_code), jnp.asarray(t.base_index),
-                      jnp.asarray(t.num_codes), jnp.asarray(t.sorted_symbols),
-                      n_symbols, max_len=t.max_len)
+    """Monolithic decode of one plane's stream, via the book's codec."""
+    return codec_for_book(book).decode_plane(words, book, n_symbols)
 
 
 def decode_blocks(words, counts, book: Codebook, chunk: int, backend: str):
-    """Backend-dispatched chunked decode: (NB, cap) words + (NB,) counts
-    → (NB, chunk) symbol blocks.  The one implementation every transport
-    decodes through (gathered peers, ring hops)."""
-    t = book.tables
-    targs = (jnp.asarray(t.first_code), jnp.asarray(t.base_index),
-             jnp.asarray(t.num_codes), jnp.asarray(t.sorted_symbols))
-    if backend == "pallas":
-        from ..kernels.decode import decode_chunks_pallas
-        from ..kernels.ops import INTERPRET
-        return decode_chunks_pallas(words, counts, *targs, chunk=chunk,
-                                    max_len=t.max_len, interpret=INTERPRET)
-    if backend == "scan":
-        return decode_chunks_jit(words, counts, *targs, chunk=chunk,
-                                 max_len=t.max_len)
-    if backend == "multisym":
-        return decode_chunks_multisym_jit(
-            words, counts, *multisym_table_args(book), chunk=chunk,
-            max_len=t.max_len)
-    if backend == "multisym_pallas":
-        from ..kernels.decode import decode_chunks_multisym_pallas
-        from ..kernels.ops import INTERPRET
-        return decode_chunks_multisym_pallas(
-            words, counts, *multisym_table_args(book, full=False), *targs,
-            chunk=chunk, max_len=t.max_len, interpret=INTERPRET)
-    raise ValueError(f"unknown decode backend {backend!r}")
+    """Codec- and backend-dispatched chunked decode: (NB, cap) words +
+    (NB,) counts → (NB, chunk) symbol blocks.  The one implementation
+    every transport decodes through (gathered peers, ring hops): the
+    book's ``codec_name`` picks the codec (``core.codec``), which
+    resolves ``backend`` (``"auto"`` → its default) and validates it."""
+    return codec_for_book(book).decode_blocks(words, counts, book, chunk,
+                                              backend)
 
 
 def decode_gathered_chunk(gw, count: int, book: Codebook, chunk: int,

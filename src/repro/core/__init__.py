@@ -3,6 +3,8 @@ codebooks (Agrawal et al., 2026)."""
 from .codebook import (Codebook, CodebookKey, CodebookRegistry,
                        RegistrySnapshot, build_codebook,
                        registry_content_hash)
+from .codec import (CODECS, Codec, codec_for_book, default_codec, get_codec,
+                    register_codec, set_default_codec)
 from .encoder import (EncodeResult, decode_jit, decode_np, decode_with_book,
                       encode_jit, encode_np, encoded_size_bits,
                       packed_words_capacity, single_stage_encode,
@@ -12,6 +14,8 @@ from .entropy import (compressibility, cross_entropy, expected_code_length,
 from .huffman import (MAX_CODE_LEN, canonical_codes, canonical_decode_tables,
                       huffman_code_lengths, kraft_sum, package_merge_lengths,
                       validate_prefix_free)
+from .qlc import (QLCBook, build_qlc_book, decode_chunks_qlc_jit,
+                  qlc_book_from_lengths)
 from .stats import ShardStatsCollector, per_shard_report, shard_histograms
 from .symbols import SCHEMES, SymbolScheme, scheme_for_dtype
 

@@ -41,6 +41,7 @@ CodebookKey = Tuple[str, str, str]  # (tensor_kind, dtype_scheme, plane)
 @dataclass(frozen=True)
 class Codebook:
     """A fixed canonical Huffman codebook over an n-symbol alphabet."""
+    codec_name = "huffman"               # registry tag (core.codec)
     book_id: int
     key: CodebookKey
     lengths: np.ndarray          # (n,) int32; >0 everywhere (total code)
@@ -83,13 +84,27 @@ class Codebook:
 def build_codebook(counts: np.ndarray, *, book_id: int = -1,
                    key: CodebookKey = ("", "", ""),
                    max_len: int = MAX_CODE_LEN,
-                   floor: int = 1, n_symbols: Optional[int] = None) -> Codebook:
-    """Build a total, length-limited canonical codebook from a histogram.
+                   floor: int = 1, n_symbols: Optional[int] = None,
+                   codec: Optional[str] = None) -> Codebook:
+    """Build a total, length-limited codebook from a histogram.
 
     ``floor`` smoothing gives every symbol at least that count so the code
     is total.  The compression loss from smoothing is O(n/total) bits —
     negligible for the multi-MB shards the paper studies.
+
+    ``codec`` selects the length-assignment strategy (``core.codec``
+    registry): ``"huffman"`` builds the canonical Huffman book inline;
+    any other registered codec dispatches to its ``build_book``; ``None``
+    resolves to the process default (``core.codec.default_codec``).
     """
+    if codec is None:
+        from .codec import default_codec
+        codec = default_codec()
+    if codec != "huffman":
+        from .codec import get_codec
+        return get_codec(codec).build_book(
+            counts, book_id=book_id, key=key, max_len=max_len, floor=floor,
+            n_symbols=n_symbols)
     counts = np.asarray(counts, dtype=np.int64)
     if n_symbols is not None and counts.shape[0] != n_symbols:
         raise ValueError(f"histogram has {counts.shape[0]} bins, expected {n_symbols}")
@@ -125,10 +140,16 @@ def registry_content_hash(books: Iterable[Codebook]) -> str:
     decoder on the fleet must agree on.  Canonical codes and decode
     tables are pure functions of the lengths, so hashing lengths pins
     the whole wire format; EMA observation state is deliberately
-    excluded (it differs across replicas without breaking the wire)."""
+    excluded (it differs across replicas without breaking the wire).
+
+    The per-book **codec identity** is part of the content: the same
+    lengths vector decodes differently under huffman vs qlc, so a
+    mixed-codec fleet must fail ``verify_epoch_agreement`` exactly like
+    a mixed-lengths one."""
     h = hashlib.sha256()
     for book in books:
         h.update(np.int64(book.book_id).tobytes())
+        h.update(getattr(book, "codec_name", "huffman").encode() + b"\x1e")
         h.update("\x1f".join(book.key).encode() + b"\x1e")
         h.update(np.ascontiguousarray(book.lengths, dtype=np.int32).tobytes())
     return h.hexdigest()
@@ -146,6 +167,7 @@ class RegistrySnapshot:
     epoch: int
     books: Tuple[Codebook, ...]
     content_hash: str
+    codec: str = "huffman"       # the codec every book was built with
 
     def get(self, key: CodebookKey) -> Codebook:
         for book in self.books:
@@ -175,10 +197,17 @@ class CodebookRegistry:
     """
 
     def __init__(self, n_symbols: int = 256, *, ema: float = 0.9,
-                 max_len: int = MAX_CODE_LEN):
+                 max_len: int = MAX_CODE_LEN, codec: Optional[str] = None):
+        if codec is None:
+            from .codec import default_codec
+            codec = default_codec()
+        else:
+            from .codec import get_codec
+            get_codec(codec)             # validate eagerly
         self.n_symbols = n_symbols
         self.ema = ema
         self.max_len = max_len
+        self.codec = codec
         self._lock = threading.Lock()
         self._running: Dict[CodebookKey, _RunningPMF] = {}
         self._books: Dict[CodebookKey, Codebook] = {}
@@ -194,7 +223,8 @@ class CodebookRegistry:
         with self._lock:
             books = tuple(self._by_id)
             return RegistrySnapshot(epoch=self._epoch, books=books,
-                                    content_hash=registry_content_hash(books))
+                                    content_hash=registry_content_hash(books),
+                                    codec=self.codec)
 
     # ---------------------------------------------------------- observation
     def observe(self, key: CodebookKey, counts: np.ndarray) -> None:
@@ -221,7 +251,7 @@ class CodebookRegistry:
                 book_id = (self._books[key].book_id if key in self._books
                            else len(self._by_id))
                 book = build_codebook(counts, book_id=book_id, key=key,
-                                      max_len=self.max_len)
+                                      max_len=self.max_len, codec=self.codec)
                 self._books[key] = book
                 if book_id == len(self._by_id):
                     self._by_id.append(book)
@@ -292,6 +322,7 @@ class CodebookRegistry:
                 "ema": np.array(self.ema, np.float64),
                 "max_len": np.array(self.max_len),
                 "book_epoch": np.array(self._epoch),
+                "codec": np.array(self.codec),
             }
             for i, book in enumerate(self._by_id):
                 blob[f"lengths_{i}"] = book.lengths
@@ -309,18 +340,20 @@ class CodebookRegistry:
     def load(cls, path: str) -> "CodebookRegistry":
         blob = np.load(path, allow_pickle=False)
         if "format" not in blob.files:
-            # Legacy (pre-lifecycle) blobs: books only, EMA state lost.
-            reg = cls(n_symbols=int(blob["n_symbols"]))
+            # Legacy (pre-lifecycle) blobs: books only, EMA state lost;
+            # pre-codec blobs are by definition huffman.
+            reg = cls(n_symbols=int(blob["n_symbols"]), codec="huffman")
             for i in range(int(blob["n_books"])):
                 key = tuple(str(s) for s in blob[f"key_{i}"])
                 reg.install(key, blob[f"counts_{i}"])
             return reg
+        codec = (str(blob["codec"]) if "codec" in blob.files else "huffman")
         reg = cls(n_symbols=int(blob["n_symbols"]), ema=float(blob["ema"]),
-                  max_len=int(blob["max_len"]))
+                  max_len=int(blob["max_len"]), codec=codec)
         for i in range(int(blob["n_books"])):
             key = tuple(str(s) for s in blob[f"key_{i}"])
             book = build_codebook(blob[f"counts_{i}"], book_id=i, key=key,
-                                  max_len=reg.max_len)
+                                  max_len=reg.max_len, codec=reg.codec)
             if not np.array_equal(book.lengths, blob[f"lengths_{i}"]):
                 raise ValueError(
                     f"codebook {i} ({key}) did not rebuild to its saved "

@@ -59,6 +59,13 @@ def chunk_capacity_words(chunk: int, max_len: int = MAX_CODE_LEN) -> int:
     near-incompressible chunk.  For ``chunk * max_len`` divisible by 32
     (every power-of-two chunk, incl. ``bitpack.BLOCK``) the value — and
     the wire format — is unchanged.
+
+    Codec note: this capacity is the wire contract for *every* codec, so
+    any book riding a chunked buffer must have its longest code ≤
+    ``max_len``.  Huffman books enforce that by construction
+    (package-merge is length-limited); QLC books validate it at build
+    (``core.qlc.qlc_book_from_lengths`` rejects lengths > max_len),
+    keeping buffer shapes codec-independent.
     """
     return (chunk * max_len + 31) // 32 + 1
 
@@ -208,10 +215,8 @@ def decode_jit(words: jnp.ndarray, first_code: jnp.ndarray,
 
 def decode_with_book(words: jnp.ndarray, book: Codebook,
                      n_symbols: int) -> jnp.ndarray:
-    t = book.tables
-    return decode_jit(words, jnp.asarray(t.first_code), jnp.asarray(t.base_index),
-                      jnp.asarray(t.num_codes), jnp.asarray(t.sorted_symbols),
-                      n_symbols, max_len=t.max_len)
+    from .codec import codec_for_book
+    return codec_for_book(book).decode_plane(words, book, n_symbols)
 
 
 # --------------------------------------------------------------------------
@@ -476,43 +481,24 @@ def encode_chunked(symbols: jnp.ndarray, book: Codebook, *,
                          book_id=book.book_id)
 
 
-def decode_chunked(stream: ChunkedStream, book: Codebook, *,
+def decode_chunked(stream: ChunkedStream, book, *,
                    backend: str = "auto") -> jnp.ndarray:
     """Decode a ChunkedStream back to its uint8 symbols.
 
-    backend: "pallas"          — the per-symbol canonical-walk kernel;
-             "scan"            — the XLA lax.scan fallback;
-             "multisym"        — K-bit window LUT decode (XLA while-loop);
-             "multisym_pallas" — the multi-symbol Pallas kernel;
-             "auto"            — pallas (interpret on CPU, Mosaic on TPU).
+    The book's codec (``core.codec``, tagged on the book itself) picks
+    the decoder family; ``backend`` selects within it — for huffman:
+    "pallas" (per-symbol canonical-walk kernel), "scan" (XLA lax.scan),
+    "multisym" (K-bit window LUT), "multisym_pallas"; for qlc: "scan" /
+    "pallas".  "auto" here means **pallas** for either codec (interpret
+    on CPU, Mosaic on TPU) — this entry point's historical contract —
+    unlike spec-level "auto", which resolves to the codec's fastest
+    portable default.
     """
-    t = book.tables
+    from .codec import codec_for_book
     counts = jnp.asarray(stream.chunk_counts())
-    targs = (jnp.asarray(t.first_code), jnp.asarray(t.base_index),
-             jnp.asarray(t.num_codes), jnp.asarray(t.sorted_symbols))
-    if backend in ("auto", "pallas"):
-        from ..kernels.decode import decode_chunks_pallas
-        from ..kernels.ops import INTERPRET
-        out = decode_chunks_pallas(
-            stream.block_words, counts, *targs, chunk=stream.chunk,
-            max_len=t.max_len, interpret=INTERPRET)
-    elif backend == "scan":
-        out = decode_chunks_jit(
-            stream.block_words, counts, *targs, chunk=stream.chunk,
-            max_len=t.max_len)
-    elif backend == "multisym":
-        out = decode_chunks_multisym_jit(
-            stream.block_words, counts, *multisym_table_args(book),
-            chunk=stream.chunk, max_len=t.max_len)
-    elif backend == "multisym_pallas":
-        from ..kernels.decode import decode_chunks_multisym_pallas
-        from ..kernels.ops import INTERPRET
-        out = decode_chunks_multisym_pallas(
-            stream.block_words, counts,
-            *multisym_table_args(book, full=False), *targs,
-            chunk=stream.chunk, max_len=t.max_len, interpret=INTERPRET)
-    else:
-        raise ValueError(f"unknown decode backend {backend!r}")
+    out = codec_for_book(book).decode_blocks(
+        stream.block_words, counts, book, stream.chunk,
+        "pallas" if backend == "auto" else backend)
     return concat_chunks(out, stream.chunk_counts())
 
 

@@ -11,6 +11,6 @@ ref.py       — pure-jnp oracles used by the allclose test sweeps
 """
 from . import ops, ref
 from .bitpack import pack_blocks_pallas
-from .decode import decode_chunks_pallas
+from .decode import decode_chunks_pallas, decode_chunks_qlc_pallas
 from .encode import encode_lookup_pallas
 from .histogram import histogram256_pallas

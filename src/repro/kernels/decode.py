@@ -271,3 +271,107 @@ def decode_chunks_multisym_pallas(block_words: jnp.ndarray,
         interpret=interpret,
     )(block_words.astype(jnp.uint32), counts, st, mt, fc, bi, nc, ss)
     return out
+
+
+def _decode_qlc_kernel(words_ref, count_ref, lp_ref, bp_ref, st_ref, out_ref,
+                       *, chunk: int, cap: int):
+    """Decode one chunk of Quad-Length-Code bitstream (branchless walk).
+
+    words_ref: (1, cap) uint32 — the chunk's MSB-first packed words
+    count_ref: (1, 1) int32 — symbols actually present in this chunk
+    lp_ref:    (1, 1) int32 — packed class lengths l0|l1<<8|l2<<16|l3<<24
+    bp_ref:    (1, 1) int32 — packed class bases  b1|b2<<10|b3<<20 (b0=0)
+    st_ref:    (1, 256) int32 — class-major symbol table (ptr → symbol)
+    out_ref:   (1, chunk) int32 — decoded symbols (0 past count)
+
+    Unlike the Huffman walk there is no table probe per candidate length:
+    the code length is a pure function of the window's top 2 bits, so the
+    whole loop body is shifts, masks and one 256-entry gather — the QLC
+    paper's table-free decode contract (docs/codecs.md).
+    """
+    words = words_ref[...].reshape(-1)
+    n_sym = count_ref[0, 0]
+    lp = lp_ref[0, 0].astype(jnp.uint32)
+    bp = bp_ref[0, 0].astype(jnp.uint32)
+    st = st_ref[...].reshape(-1)
+
+    def step(k, carry):
+        bit_pos, out = carry
+        widx = jnp.minimum((bit_pos >> jnp.uint32(5)).astype(jnp.int32),
+                           cap - 2)
+        pin = bit_pos & jnp.uint32(31)
+        w0 = words[widx]
+        w1 = words[widx + 1]
+        hi = w0 << pin
+        lo = jnp.where(pin == 0, jnp.uint32(0),
+                       w1 >> jnp.clip(32 - pin.astype(jnp.int32), 0, 31
+                                      ).astype(jnp.uint32))
+        win = ((hi | lo) >> jnp.uint32(16))                  # top 16 bits
+        c = win >> jnp.uint32(14)                            # class = 2 MSBs
+        l = (lp >> (c << jnp.uint32(3))) & jnp.uint32(0xFF)
+        # dense in-class index: the l-2 bits after the prefix
+        idx = (win >> (jnp.uint32(16) - l)) & ((jnp.uint32(1)
+                                                << (l - jnp.uint32(2)))
+                                               - jnp.uint32(1))
+        base = jnp.where(
+            c == 0, jnp.uint32(0),
+            (bp >> ((c - jnp.uint32(1)) * jnp.uint32(10))) & jnp.uint32(0x3FF))
+        ptr = (base + idx).astype(jnp.int32)
+        sym = st[jnp.clip(ptr, 0, st.shape[0] - 1)]
+        live = k < n_sym
+        out = out.at[k].set(jnp.where(live, sym, 0))
+        adv = jnp.where(live, l, jnp.uint32(0))
+        return bit_pos + adv, out
+
+    cursor0 = words[0] & jnp.uint32(0)
+    _, out = jax.lax.fori_loop(
+        0, chunk, step, (cursor0, jnp.zeros((chunk,), jnp.int32)))
+    out_ref[...] = out[None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "max_len", "interpret"))
+def decode_chunks_qlc_pallas(block_words: jnp.ndarray,
+                             chunk_counts: jnp.ndarray,
+                             len_pack: jnp.ndarray, base_pack: jnp.ndarray,
+                             sym_tab: jnp.ndarray, *, chunk: int = CHUNK,
+                             max_len: int = MAX_CODE_LEN,
+                             interpret: bool = True) -> jnp.ndarray:
+    """QLC decode of NB independent chunk bitstreams in one grid launch.
+
+    block_words:  (NB, cap) uint32 — per-chunk packed streams (cap is the
+                  shared ``chunk_capacity_words(chunk, max_len)`` wire
+                  capacity; QLC lengths are validated ≤ max_len at book
+                  build, so the Huffman wire layout is reused unchanged).
+    chunk_counts: (NB,) int32 — symbols per chunk (tail may be short).
+    len_pack/base_pack: scalar uint32 packed class tables
+                  (``QLCBook.len_pack()`` / ``QLCBook.base_pack()``).
+    sym_tab:      (n,) int32 class-major pointer → symbol table.
+    Returns (NB, chunk) int32 symbols, zero-filled past each count.
+    Bit-exact contract: ``ref.decode_chunks_qlc_ref`` (pure-NumPy
+    bit-serial oracle).
+    """
+    nb, cap = block_words.shape
+    if cap != chunk_capacity_words(chunk, max_len):
+        raise ValueError(f"cap {cap} != capacity for chunk={chunk}")
+    counts = chunk_counts.reshape(nb, 1).astype(jnp.int32)
+    lp = jnp.asarray(len_pack, jnp.uint32).reshape(1, 1).astype(jnp.int32)
+    bp = jnp.asarray(base_pack, jnp.uint32).reshape(1, 1).astype(jnp.int32)
+    st = jnp.zeros((1, 256), jnp.int32).at[0, :sym_tab.shape[0]].set(
+        sym_tab.reshape(-1).astype(jnp.int32))
+
+    kernel = functools.partial(_decode_qlc_kernel, chunk=chunk, cap=cap)
+    out = pl.pallas_call(
+        kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((1, cap), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, 256), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb, chunk), jnp.int32),
+        interpret=interpret,
+    )(block_words.astype(jnp.uint32), counts, lp, bp, st)
+    return out

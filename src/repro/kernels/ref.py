@@ -5,9 +5,10 @@ These are the semantics contracts: tests sweep shapes/dtypes and assert
 """
 from __future__ import annotations
 
-from typing import Tuple
+from typing import Sequence, Tuple
 
 import jax.numpy as jnp
+import numpy as np
 
 
 def histogram256_ref(symbols: jnp.ndarray) -> jnp.ndarray:
@@ -56,3 +57,52 @@ def decode_chunks_multisym_ref(block_words: jnp.ndarray,
     from ..core.encoder import decode_chunks_multisym_jit
     return decode_chunks_multisym_jit(block_words, chunk_counts, step_tab,
                                       emit_tab, chunk=chunk, max_len=max_len)
+
+
+def decode_qlc_np(words: np.ndarray, n_symbols: int,
+                  class_lengths: Sequence[int], class_bases: Sequence[int],
+                  sym_tab: np.ndarray) -> np.ndarray:
+    """Bit-serial QLC oracle over one MSB-first packed word stream.
+
+    Deliberately shares **no code** with ``core.qlc`` — it re-reads the
+    wire definition from first principles (2 prefix bits name the class,
+    the next ``l−2`` bits are a dense in-class index), one bit at a time,
+    so the lax scan, the window-LUT phase-2 resolve and the Pallas
+    kernel all have a genuinely independent contract to meet.
+    """
+    w = np.asarray(words, dtype=np.uint32).reshape(-1)
+    cl = [int(v) for v in class_lengths]
+    cb = [int(v) for v in class_bases]
+    st = np.asarray(sym_tab, dtype=np.int32).reshape(-1)
+
+    def bits(pos: int, n: int) -> int:
+        v = 0
+        for i in range(n):
+            b = pos + i
+            v = (v << 1) | ((int(w[b >> 5]) >> (31 - (b & 31))) & 1)
+        return v
+
+    out = np.zeros(n_symbols, dtype=np.int32)
+    pos = 0
+    for k in range(n_symbols):
+        c = bits(pos, 2)
+        l = cl[c]
+        idx = bits(pos + 2, l - 2)
+        out[k] = st[cb[c] + idx]
+        pos += l
+    return out
+
+
+def decode_chunks_qlc_ref(block_words: np.ndarray, chunk_counts: np.ndarray,
+                          class_lengths: Sequence[int],
+                          class_bases: Sequence[int], sym_tab: np.ndarray,
+                          chunk: int) -> np.ndarray:
+    """Chunked QLC oracle: ``decode_qlc_np`` per chunk row, zero-padded."""
+    bw = np.asarray(block_words, dtype=np.uint32)
+    cc = np.asarray(chunk_counts, dtype=np.int32).reshape(-1)
+    out = np.zeros((bw.shape[0], chunk), dtype=np.int32)
+    for i in range(bw.shape[0]):
+        n = int(cc[i])
+        out[i, :n] = decode_qlc_np(bw[i], n, class_lengths, class_bases,
+                                   sym_tab)
+    return out

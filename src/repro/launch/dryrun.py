@@ -235,6 +235,7 @@ def lower_combo(arch_id: str, shape_name: str, *, multi_pod: bool = False,
 
 
 def ring_collective_check(n: int = 8, payload: int = 4096, chunk: int = 512,
+                          codec: str = "huffman",
                           verbose: bool = True) -> Dict[str, Any]:
     """Lower, compile and RUN the ring transport on an n-device submesh.
 
@@ -249,6 +250,11 @@ def ring_collective_check(n: int = 8, payload: int = 4096, chunk: int = 512,
     with the measured per-hop ledgers matching the analytic ring
     volumes (2(n−1)/n for all_reduce, (n−1)/n for reduce_scatter /
     all_to_all, the sum of per-axis terms for the hierarchy).
+
+    ``codec`` selects the hop codec (``core.codec`` registry): the same
+    checks run under huffman or qlc books — the ring is codec-agnostic
+    by construction, and this proves it end-to-end through a real
+    shard_map lowering.
     """
     import numpy as np
     from ..comm import (hierarchical_all_reduce, hierarchical_wire_factor,
@@ -263,7 +269,7 @@ def ring_collective_check(n: int = 8, payload: int = 4096, chunk: int = 512,
     rng = np.random.default_rng(0)
     x = rng.integers(-2, 3, size=(n, payload)).astype(jnp.bfloat16)
     planes = SCHEMES["bf16"].to_symbols(np.asarray(x))
-    books = {p: build_codebook(np.bincount(s, minlength=256))
+    books = {p: build_codebook(np.bincount(s, minlength=256), codec=codec)
              for p, s in planes.items()}
 
     def body(xs):
@@ -271,7 +277,7 @@ def ring_collective_check(n: int = 8, payload: int = 4096, chunk: int = 512,
                                  decode_backend="scan")
         yg, _ = ring_all_gather(xs, "data", books, "bf16", chunk=chunk,
                                 decode_backend="scan")
-        # the new ops run the default (multisym) hop decode backend
+        # the new ops run the codec's default ("auto") hop decode backend
         ys, ss = ring_reduce_scatter(xs[0], "data", books, "bf16",
                                      chunk=chunk)
         ya, sa = ring_all_to_all(xs[0].reshape(n, -1), "data", books,
@@ -350,7 +356,7 @@ def ring_collective_check(n: int = 8, payload: int = 4096, chunk: int = 512,
                   and abs(hier_raw - hier_analytic) < 1e-3)
     rec = {
         "kind": "ring_check", "mesh": f"{n}x1(ring)", "n_devices": n,
-        "payload_elems": payload, "chunk": chunk,
+        "payload_elems": payload, "chunk": chunk, "codec": codec,
         "collective_permutes_lowered": int(n_permutes),
         "bitexact_all_reduce": ar_exact, "bitexact_all_gather": ag_exact,
         "bitexact_reduce_scatter": rs_exact, "bitexact_all_to_all": a2a_exact,
@@ -369,7 +375,7 @@ def ring_collective_check(n: int = 8, payload: int = 4096, chunk: int = 512,
                            and n_permutes >= 2 * (n - 1)) else "FAILED",
     }
     if verbose:
-        print(f"[dryrun] ring-check n={n} payload={payload} "
+        print(f"[dryrun] ring-check n={n} payload={payload} codec={codec} "
               f"permutes={n_permutes} "
               f"bitexact(ar/ag/rs/a2a/hier)="
               f"{ar_exact}/{ag_exact}/{rs_exact}/{a2a_exact}/{hier_exact} "
@@ -519,13 +525,16 @@ def main() -> None:
                     help="induce synthetic distribution shift; verify "
                          "stale-book detection, a bit-exact ring epoch "
                          "flip, and loud epoch-mismatch failure")
+    ap.add_argument("--codec", default="huffman",
+                    help="entropy codec for --ring-check books "
+                         "(core.codec registry: huffman | qlc)")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
 
     if args.ring_check or args.drift_check:
         recs = []
         if args.ring_check:
-            recs.append(ring_collective_check())
+            recs.append(ring_collective_check(codec=args.codec))
         if args.drift_check:
             recs.append(drift_check())
         if args.out:

@@ -147,6 +147,7 @@ class BookLifecycleManager:
         books — what a step holder calls after an epoch flip."""
         return self.spec(spec.tensor_kind, spec.scheme_name, mode=spec.mode,
                          transport=spec.transport, chunk=spec.chunk,
+                         codec=spec.codec,
                          decode_backend=spec.decode_backend, carry=spec.carry,
                          axes=spec.axes)
 
@@ -189,6 +190,7 @@ class BookLifecycleManager:
             "n_symbols": self.registry.n_symbols,
             "ema": self.registry.ema,
             "max_len": self.registry.max_len,
+            "codec": self.registry.codec,
             "books": [{"book_id": b.book_id, "key": list(b.key),
                        "payload_bits_on_source": int(b.encoded_bits(
                            b.source_counts))}
@@ -207,6 +209,10 @@ class BookLifecycleManager:
         with open(os.path.join(dirpath, _MANIFEST)) as f:
             manifest = json.load(f)
         registry = CodebookRegistry.load(os.path.join(dirpath, _REGISTRY))
+        if manifest.get("codec", "huffman") != registry.codec:
+            raise ValueError(
+                f"manifest codec {manifest.get('codec')!r} != registry "
+                f"blob codec {registry.codec!r}")
         snap = registry.snapshot()
         if snap.epoch != manifest["book_epoch"]:
             raise ValueError(

@@ -25,6 +25,7 @@ manager.
 """
 from __future__ import annotations
 
+import hashlib
 from typing import Optional, Sequence, Union
 
 import jax
@@ -43,10 +44,18 @@ class EpochSyncError(RuntimeError):
 
 def epoch_fingerprint(state: Union[RegistrySnapshot, CodebookRegistry,
                                    "object"]) -> np.ndarray:
-    """(2,) uint32 ``[epoch, content-hash digest]`` for the wire.
+    """(2,) uint32 ``[epoch, content digest]`` for the wire.
 
     Accepts a ``RegistrySnapshot``, a ``CodebookRegistry`` or a
     ``BookLifecycleManager`` (anything exposing ``snapshot``).
+
+    The digest covers the registry content hash — which itself covers
+    each book's **codec identity** (``registry_content_hash``), so a
+    huffman/qlc split fleet disagrees even on identical lengths — plus
+    the process-global MoE a2a wire configuration
+    (``models.moe.a2a_wire_fingerprint``): those dispatch books bypass
+    the registry, so without this term a half-configured fleet would
+    pass agreement and silently mis-decode every expert dispatch.
     """
     snap = state
     if isinstance(state, CodebookRegistry):
@@ -56,7 +65,12 @@ def epoch_fingerprint(state: Union[RegistrySnapshot, CodebookRegistry,
         snap = snap() if callable(snap) else snap
         if not isinstance(snap, RegistrySnapshot):
             raise TypeError(f"cannot fingerprint {type(state).__name__}")
-    digest = int(snap.content_hash[:8], 16)
+    # Imported unconditionally (not only when MoE is in the model) so
+    # every replica folds the same term regardless of import order.
+    from ..models.moe import a2a_wire_fingerprint
+    content = hashlib.sha256(
+        (snap.content_hash + "\x1e" + a2a_wire_fingerprint()).encode())
+    digest = int(content.hexdigest()[:8], 16)
     return np.array([snap.epoch & 0xFFFFFFFF, digest], dtype=np.uint32)
 
 

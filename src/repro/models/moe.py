@@ -38,7 +38,8 @@ from .layers import mlp_apply, mlp_init, mlp_pspec
 
 __all__ = ["moe_init", "moe_pspec", "moe_apply", "moe_prefill", "moe_decode",
            "moe_apply_a2a", "moe_apply_a2a_block", "configure_a2a_wire",
-           "moe_capacity", "moe_stream_capacity", "moe_stream_capacity_host"]
+           "a2a_wire_fingerprint", "moe_capacity", "moe_stream_capacity",
+           "moe_stream_capacity_host"]
 
 
 def moe_capacity(n_tokens: int, cfg: ModelConfig) -> int:
@@ -385,21 +386,48 @@ def moe_apply_a2a(params, x, cfg: ModelConfig, axis_name: str, books, *,
 # real books (e.g. from a ``BookLifecycleManager`` snapshot) via
 # ``configure_a2a_wire``.
 _A2A_WIRE = {"books": None, "scheme_name": "bf16", "chunk": 512,
-             "decode_backend": "multisym"}
+             "decode_backend": "auto"}
 _A2A_DEFAULT_BOOKS = {}
 
 
 def configure_a2a_wire(books=None, scheme_name: str = None,
-                       chunk: int = None, decode_backend: str = None) -> None:
+                       chunk: int = None, decode_backend: str = None, *,
+                       spec=None) -> None:
     """Set the codec the ``moe_impl="a2a"`` block path encodes with.
 
     Any argument left ``None`` keeps its current value; ``books`` maps
-    plane → ``Codebook`` for the configured scheme (pass a lifecycle
-    manager's ``books(tensor_kind)``).  Changing the wire config only
-    affects steps traced afterwards — pair it with an epoch-keyed
-    compiled-step cache (``repro.lifecycle``) so a book refresh is a
-    deliberate recompile.
+    plane → book for the configured scheme (pass a lifecycle manager's
+    ``books(tensor_kind)``).  Alternatively pass a bitexact
+    ``CompressionSpec`` via ``spec``: the books are rebuilt from the
+    spec's per-plane canonical lengths through the spec's codec —
+    exactly what every decoding peer holds — and scheme / chunk /
+    decode_backend follow the spec, so the a2a wire config can never
+    drift from the spec the rest of the fleet agreed on.  Changing the
+    wire config only affects steps traced afterwards — pair it with an
+    epoch-keyed compiled-step cache (``repro.lifecycle``) so a book
+    refresh is a deliberate recompile.
+
+    Because this state is process-global it bypasses the registry
+    content hash; ``a2a_wire_fingerprint`` folds it into the epoch
+    fingerprint (``repro.lifecycle.sync``) so a half-configured fleet
+    fails ``verify_epoch_agreement`` instead of silently mixing books.
     """
+    if spec is not None:
+        if books is not None:
+            raise ValueError("pass either books or spec, not both")
+        if spec.plane_lengths is None:
+            raise ValueError("configure_a2a_wire(spec=...) needs a spec "
+                             "with plane_lengths (mode != off)")
+        from ..core.codec import get_codec
+        codec = get_codec(spec.codec)
+        books = {
+            plane: codec.book_from_lengths(
+                np.asarray(lens, np.int32),
+                key=(spec.tensor_kind, spec.scheme_name, plane))
+            for plane, lens in spec.plane_lengths}
+        scheme_name = spec.scheme_name
+        chunk = spec.chunk
+        decode_backend = spec.decode_backend
     if books is not None:
         _A2A_WIRE["books"] = dict(books)
     if scheme_name is not None:
@@ -408,6 +436,31 @@ def configure_a2a_wire(books=None, scheme_name: str = None,
         _A2A_WIRE["chunk"] = int(chunk)
     if decode_backend is not None:
         _A2A_WIRE["decode_backend"] = decode_backend
+
+
+def a2a_wire_fingerprint() -> str:
+    """Deterministic digest of the process-global a2a wire config.
+
+    The dispatch books configured here are the one piece of coding
+    content the registry hash cannot see; this digest makes them part
+    of the epoch agreement protocol.  Unconfigured processes (running
+    on the deterministic bootstrap books) return a stable constant, so
+    a fleet that never calls ``configure_a2a_wire`` still agrees — but
+    one replica configuring real books while another runs the bootstrap
+    set produces different fingerprints and a hard ``EpochSyncError``.
+    """
+    if _A2A_WIRE["books"] is None:
+        return "a2a:unconfigured"
+    import hashlib
+    h = hashlib.sha256()
+    h.update(f"{_A2A_WIRE['scheme_name']}|{_A2A_WIRE['chunk']}|"
+             f"{_A2A_WIRE['decode_backend']}".encode())
+    for plane in sorted(_A2A_WIRE["books"]):
+        b = _A2A_WIRE["books"][plane]
+        h.update(plane.encode() + b"\x1e")
+        h.update(getattr(b, "codec_name", "huffman").encode() + b"\x1e")
+        h.update(np.ascontiguousarray(b.lengths, np.int32).tobytes())
+    return "a2a:" + h.hexdigest()
 
 
 def _a2a_wire_books(scheme_name: str):

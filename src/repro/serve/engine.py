@@ -16,10 +16,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..comm.compression import CompressionSpec, payload_stats
-from ..core.codebook import Codebook
+from ..core.codec import get_codec
 from ..core.encoder import (DEFAULT_CHUNK, chunk_counts_for, concat_chunks,
                             encode_chunked_jit)
-from ..core.huffman import canonical_codes, canonical_decode_tables
 from ..models.common import ModelConfig
 from ..models.transformer import decode_step, prefill
 
@@ -68,15 +67,16 @@ def make_serve_step(model_cfg: ModelConfig,
                         else DEFAULT_CHUNK)
     if (comp_spec is not None and comp_spec.enabled
             and comp_spec.mode == "bitexact"):
+        # Rebuild the receiver-side books from the spec's canonical
+        # lengths through the spec's codec — exactly what a decoding
+        # peer holds (the lengths vector is the whole wire contract for
+        # either codec; docs/codecs.md).
+        codec = get_codec(comp_spec.codec)
         books = {}
         for plane, lens in comp_spec.plane_lengths:
             lv = np.asarray(lens, dtype=np.int32)
-            books[plane] = Codebook(
-                book_id=-1,
-                key=(comp_spec.tensor_kind, comp_spec.scheme_name, plane),
-                lengths=lv, codes=canonical_codes(lv),
-                tables=canonical_decode_tables(lv),
-                source_counts=np.zeros(256, np.int64))
+            books[plane] = codec.book_from_lengths(
+                lv, key=(comp_spec.tensor_kind, comp_spec.scheme_name, plane))
 
     n_moe = sum(1 for kind in model_cfg.layer_kinds if "moe" in kind)
 

@@ -5,14 +5,34 @@ without it (the tier-1 CI image bakes in only jax/numpy/pytest) get a
 minimal deterministic stand-in: each ``@given`` test runs
 ``max_examples`` seeded draws, so the property sweeps still execute —
 with fixed seeds instead of adaptive shrinking.
+
+``REPRO_TEST_CODEC`` (CI codec matrix): when set, the whole suite runs
+with that codec as the process default — every ``build_codebook`` /
+``CodebookRegistry`` / ``CompressionSpec`` that doesn't pin a codec
+explicitly builds and decodes through it.  Codec-specific tests
+(multisym tables, canonical Huffman properties, …) pin
+``codec="huffman"`` and are unaffected.
 """
 from __future__ import annotations
 
 import functools
+import os
 import random
 import sys
 import types
 import zlib
+
+import pytest
+
+
+@pytest.fixture(scope="session", autouse=True)
+def _default_codec_from_env():
+    """Point the process-default codec at ``$REPRO_TEST_CODEC``."""
+    name = os.environ.get("REPRO_TEST_CODEC", "huffman")
+    from repro.core.codec import set_default_codec
+    prev = set_default_codec(name)
+    yield name
+    set_default_codec(prev)
 
 try:  # pragma: no cover - exercised only where hypothesis exists
     import hypothesis  # noqa: F401

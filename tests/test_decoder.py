@@ -21,8 +21,10 @@ from repro.kernels.decode import decode_chunks_pallas
 
 
 def _book_from(sym, n_symbols=256):
+    # codec pinned: this file tests the canonical-Huffman kernels
+    # (book.tables, decode_chunks_pallas) regardless of the CI codec leg
     return build_codebook(np.maximum(
-        np.bincount(sym, minlength=n_symbols), 1))
+        np.bincount(sym, minlength=n_symbols), 1), codec="huffman")
 
 
 def _decode_both(stream, book):
@@ -81,7 +83,7 @@ class TestRandomizedCodebooks:
         rng = np.random.default_rng(seed)
         # randomized book: built from a *different* skewed distribution
         book = build_codebook(np.maximum(
-            rng.integers(0, 1000, size=256), 1))
+            rng.integers(0, 1000, size=256), 1), codec="huffman")
         p = rng.dirichlet(np.full(256, 0.05))
         sym = rng.choice(256, size=n, p=p).astype(np.uint8)
         stream = encode_chunked(jnp.asarray(sym), book, chunk=512)

@@ -17,7 +17,10 @@ def _data(seed, n, skew=0.05):
 
 
 def _book_for(data):
-    return build_codebook(np.bincount(data, minlength=256))
+    # codec pinned: this file exercises the canonical-Huffman encode/
+    # decode contract (decode_np walks the prefix tree) on every CI leg
+    return build_codebook(np.bincount(data, minlength=256),
+                          codec="huffman")
 
 
 class TestRoundtrip:

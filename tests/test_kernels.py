@@ -24,7 +24,8 @@ def _sym(seed, n, dtype=jnp.uint8, skew=0.05):
 def _lut(seed):
     rng = np.random.default_rng(seed)
     counts = np.maximum(rng.integers(0, 1000, size=256), 1)
-    book = build_codebook(counts)
+    # codec pinned: decode_np below walks the canonical prefix tree
+    book = build_codebook(counts, codec="huffman")
     return book, jnp.asarray(book.code_lut())
 
 

@@ -38,9 +38,12 @@ def _book_from_lengths(lengths) -> Codebook:
 
 
 def _random_book(rng) -> Codebook:
-    """Random *length-limited* codebook from a random skewed histogram."""
+    """Random *length-limited* codebook from a random skewed histogram.
+
+    Codec pinned: everything in this file is about the canonical-Huffman
+    multisym tables, so the CI codec matrix must not redirect it."""
     counts = np.maximum(rng.integers(0, 10000, size=256) ** 2, 1)
-    return build_codebook(counts)
+    return build_codebook(counts, codec="huffman")
 
 
 def _roundtrip_all_backends(sym: np.ndarray, book: Codebook, chunk: int):
@@ -237,15 +240,16 @@ class TestBackendDispatch:
         book = _random_book(rng)
         sym = rng.integers(0, 256, size=64).astype(np.uint8)
         stream = encode_chunked(jnp.asarray(sym), book, chunk=64)
-        with pytest.raises(ValueError, match="unknown decode backend"):
+        with pytest.raises(ValueError, match="not supported by codec"):
             decode_chunked(stream, book, backend="turbo")
 
     def test_spec_accepts_multisym(self):
         from repro.comm.compression import CompressionSpec
-        spec = CompressionSpec(mode="bitexact", decode_backend="multisym")
+        spec = CompressionSpec(mode="bitexact", codec="huffman",
+                               decode_backend="multisym")
         assert spec.decode_backend == "multisym"
-        with pytest.raises(ValueError, match="unknown decode backend"):
-            CompressionSpec(decode_backend="warp")
+        with pytest.raises(ValueError, match="not supported by codec"):
+            CompressionSpec(codec="huffman", decode_backend="warp")
 
     def test_spec_carry_validation(self):
         from repro.comm.compression import CompressionSpec
@@ -283,7 +287,8 @@ class TestServeVerifyBackend:
         params = model_init(cfg, jax.random.PRNGKey(0))
         rng = np.random.default_rng(5)
         books = {p: build_codebook(np.maximum(
-            np.bincount(rng.integers(0, 256, 4096), minlength=256), 1))
+            np.bincount(rng.integers(0, 256, 4096), minlength=256), 1),
+            codec="huffman")
             for p in ("lo", "hi")}
         spec = CompressionSpec.from_books(books, "bf16", mode="bitexact",
                                           decode_backend=backend, chunk=64)

@@ -1,0 +1,291 @@
+"""Quad-Length-Code codec: bit-exactness vs an independent oracle,
+canonicality, the codec registry contract, and the rate bound vs
+canonical Huffman.
+
+The contract under test: for ANY probe histogram, ``build_qlc_book``
+yields a four-class code whose scan and Pallas decoders read back
+bit-exactly what ``decode_qlc_np`` — a bit-serial pure-Python decoder
+that shares no tables with the device paths — extracts from the same
+words.  Adversarial PMFs pin the envelope the length-tuple search must
+cover: all mass on one symbol (prefix-minimal (2,8,8,9) tuple), exactly
+uniform over 256 (the degenerate (8,8,8,8) identity byte code), and
+e4m3-shaped activations (the paper's serving payload).
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.codebook import build_codebook, registry_content_hash
+from repro.core.codec import (CODECS, codec_for_book, get_codec,
+                              set_default_codec)
+from repro.core.encoder import (chunk_capacity_words, decode_chunked,
+                                encode_chunked)
+from repro.core.qlc import (QLCBook, build_qlc_book, decode_chunks_qlc_jit,
+                            qlc_book_from_lengths, qlc_decode_args,
+                            qlc_kernel_args)
+from repro.kernels.decode import decode_chunks_qlc_pallas
+from repro.kernels.ref import decode_chunks_qlc_ref
+
+
+def _e4m3_symbols(rng, n):
+    """e4m3-quantized gaussian activations viewed as bytes — the shard
+    payload distribution the paper's gemma2 probe histograms measure."""
+    x = rng.normal(0.0, 1.0, size=n).astype(np.float32)
+    return np.asarray(jnp.asarray(x, jnp.float8_e4m3fn)).view(np.uint8)
+
+
+def _roundtrip_qlc(sym: np.ndarray, book: QLCBook, chunk: int):
+    """Encode once; decode through scan, Pallas and the NP oracle."""
+    stream = encode_chunked(jnp.asarray(sym), book, chunk=chunk)
+    lp, lut = qlc_decode_args(book)
+    got_scan = np.concatenate(np.asarray(decode_chunks_qlc_jit(
+        stream.block_words, jnp.asarray(stream.chunk_counts()), lp, lut,
+        chunk)))[:sym.shape[0]]
+    lp2, bp, st_tab = qlc_kernel_args(book)
+    got_pal = np.concatenate(np.asarray(decode_chunks_qlc_pallas(
+        stream.block_words, jnp.asarray(stream.chunk_counts()), lp2, bp, st_tab,
+        chunk=chunk)))[:sym.shape[0]]
+    want = np.concatenate(decode_chunks_qlc_ref(
+        np.asarray(stream.block_words), stream.chunk_counts(),
+        book.class_lengths, book.class_bases, np.asarray(book.sym_tab),
+        chunk))[:sym.shape[0]]
+    assert (want == sym).all(), "oracle: roundtrip"
+    assert (got_scan == sym).all(), "scan: roundtrip"
+    assert (got_pal == sym).all(), "pallas: roundtrip"
+
+
+class TestPropertyBitExact:
+    @given(st.integers(0, 2**31 - 1), st.integers(1, 4000))
+    @settings(max_examples=10, deadline=None)
+    def test_random_histograms_random_streams(self, seed, n):
+        rng = np.random.default_rng(seed)
+        counts = np.maximum(rng.integers(0, 10000, size=256) ** 2, 1)
+        book = build_qlc_book(counts)
+        p = rng.dirichlet(np.full(256, 0.05))
+        sym = rng.choice(256, size=n, p=p).astype(np.uint8)
+        _roundtrip_qlc(sym, book, chunk=512)
+
+    @given(st.integers(0, 2**31 - 1))
+    @settings(max_examples=6, deadline=None)
+    def test_adversarial_all_mass_on_one_symbol(self, seed):
+        rng = np.random.default_rng(seed)
+        hot = int(rng.integers(0, 256))
+        counts = np.ones(256, np.int64)
+        counts[hot] = 10**9
+        book = build_qlc_book(counts)
+        # the hot symbol must land in the 2-bit class
+        assert int(book.lengths[hot]) == 2
+        sym = np.full(1500, hot, np.uint8)
+        sym[::97] = (hot + 1) % 256            # sprinkle cold symbols
+        _roundtrip_qlc(sym, book, chunk=256)
+
+    @given(st.integers(0, 2**31 - 1))
+    @settings(max_examples=6, deadline=None)
+    def test_adversarial_uniform_256(self, seed):
+        rng = np.random.default_rng(seed)
+        book = build_qlc_book(np.full(256, 1000, np.int64))
+        # uniform over 256 degrades to the identity byte code
+        assert book.class_lengths == (8, 8, 8, 8)
+        assert (book.lengths == 8).all()
+        sym = rng.integers(0, 256, size=2048).astype(np.uint8)
+        _roundtrip_qlc(sym, book, chunk=512)
+
+    @given(st.integers(0, 2**31 - 1))
+    @settings(max_examples=6, deadline=None)
+    def test_adversarial_e4m3_shaped(self, seed):
+        rng = np.random.default_rng(seed)
+        probe = _e4m3_symbols(rng, 1 << 16)
+        book = build_qlc_book(np.bincount(probe, minlength=256))
+        sym = _e4m3_symbols(rng, 3000)
+        _roundtrip_qlc(sym, book, chunk=512)
+
+
+class TestOddChunks:
+    """Satellite 6: chunk-capacity math under both codecs.
+
+    ``chunk_capacity_words`` sizes the wire for ``max_len`` bits per
+    symbol; QLC validates its longest class length ≤ the same
+    ``max_len`` at build time, so odd chunk sizes (tail chunks, capacity
+    rounding) must behave identically across codecs.
+    """
+
+    @pytest.mark.parametrize("chunk", [31, 255, 1001])
+    @pytest.mark.parametrize("codec", ["huffman", "qlc"])
+    def test_odd_chunks_roundtrip(self, chunk, codec):
+        rng = np.random.default_rng(chunk)
+        sym = _e4m3_symbols(rng, 3 * chunk + 7)    # forces a ragged tail
+        counts = np.bincount(sym, minlength=256)
+        book = build_codebook(counts, codec=codec)
+        stream = encode_chunked(jnp.asarray(sym), book, chunk=chunk)
+        assert stream.block_words.shape[1] == chunk_capacity_words(
+            chunk, book.max_len)
+        for backend in ("scan", "pallas"):
+            got = np.asarray(decode_chunked(stream, book, backend=backend))
+            assert (got == sym).all(), f"{codec}/{backend} chunk={chunk}"
+
+    def test_qlc_capacity_never_exceeded(self):
+        # worst case: every symbol in the longest class, smallest chunk
+        book = build_qlc_book(np.full(256, 1000, np.int64))
+        cap = chunk_capacity_words(31, book.max_len)
+        sym = np.arange(31, dtype=np.uint8)
+        stream = encode_chunked(jnp.asarray(sym), book, chunk=31)
+        assert stream.block_words.shape == (1, cap)
+
+
+class TestRateBound:
+    def test_qlc_within_6pct_of_huffman_on_e4m3(self):
+        """The acceptance bound: on the gemma2-2b-style e4m3 activation
+        histograms, the 4-class restriction gives up ≤ 6% rate vs the
+        optimal length-limited Huffman code."""
+        rng = np.random.default_rng(0)
+        for scale in (0.5, 1.0, 2.0):          # activation dynamic ranges
+            x = rng.normal(0.0, scale, size=1 << 18).astype(np.float32)
+            probe = np.asarray(jnp.asarray(x, jnp.float8_e4m3fn)
+                               ).view(np.uint8)
+            counts = np.bincount(probe, minlength=256)
+            hb = build_codebook(counts, codec="huffman")
+            qb = build_qlc_book(counts)
+            ratio = qb.encoded_bits(counts) / hb.encoded_bits(counts)
+            assert ratio <= 1.06, f"scale={scale}: ratio {ratio:.4f}"
+
+
+class TestCanonicality:
+    def test_build_roundtrips_through_from_lengths(self):
+        rng = np.random.default_rng(3)
+        for _ in range(5):
+            counts = np.maximum(rng.integers(0, 10000, size=256) ** 2, 1)
+            book = build_qlc_book(counts)
+            re = qlc_book_from_lengths(book.lengths, key=book.key)
+            assert (re.codes == book.codes).all()
+            assert re.class_lengths == book.class_lengths
+            assert re.class_bases == book.class_bases
+            assert (re.sym_tab == book.sym_tab).all()
+
+    def test_from_lengths_rejects_out_of_range(self):
+        with pytest.raises(ValueError, match=r"must lie in \[2, 16\]"):
+            qlc_book_from_lengths(np.full(256, 1, np.int32))
+        with pytest.raises(ValueError, match=r"must lie in \[2, 16\]"):
+            qlc_book_from_lengths(np.full(256, 17, np.int32))
+
+    def test_from_lengths_rejects_non_qlc_vector(self):
+        # five distinct lengths can never fit a 2-bit class prefix
+        lv = np.full(256, 12, np.int32)
+        lv[:5] = [2, 3, 4, 5, 6]
+        with pytest.raises(ValueError, match="classes"):
+            qlc_book_from_lengths(lv)
+
+    def test_class_lengths_non_decreasing_and_cover(self):
+        rng = np.random.default_rng(4)
+        for _ in range(5):
+            counts = np.maximum(rng.integers(0, 10**6, size=256), 1)
+            book = build_qlc_book(counts)
+            cl = book.class_lengths
+            assert all(cl[i] <= cl[i + 1] for i in range(3))
+            assert all(2 <= l <= 16 for l in cl)
+            # Kraft-complete over occupied slots
+            occupied = np.bincount(
+                np.searchsorted(np.asarray(book.class_bases),
+                                np.arange(256), side="right") - 1,
+                minlength=4)
+            for c in range(4):
+                assert occupied[c] <= 1 << (cl[c] - 2)
+
+
+class TestCodecRegistry:
+    def test_registry_has_both_codecs(self):
+        assert set(CODECS) >= {"huffman", "qlc"}
+        assert get_codec("huffman").name == "huffman"
+        assert get_codec("qlc").name == "qlc"
+
+    def test_unknown_codec_rejected(self):
+        with pytest.raises(ValueError, match="unknown codec"):
+            get_codec("lz77")
+
+    def test_build_codebook_dispatches_on_codec(self):
+        counts = np.arange(1, 257, dtype=np.int64)
+        hb = build_codebook(counts, codec="huffman")
+        qb = build_codebook(counts, codec="qlc")
+        assert codec_for_book(hb).name == "huffman"
+        assert codec_for_book(qb).name == "qlc"
+        assert isinstance(qb, QLCBook)
+
+    def test_default_codec_switch_round_trips(self):
+        prev = set_default_codec("qlc")
+        try:
+            book = build_codebook(np.ones(256, np.int64))
+            assert codec_for_book(book).name == "qlc"
+        finally:
+            set_default_codec(prev)
+
+    def test_backend_resolution_per_codec(self):
+        qlc = get_codec("qlc")
+        assert qlc.resolve_backend("auto") == qlc.default_backend
+        with pytest.raises(ValueError, match="not supported by codec"):
+            qlc.resolve_backend("multisym")
+
+    def test_spec_resolves_codec_and_backend(self):
+        from repro.comm.compression import CompressionSpec
+        spec = CompressionSpec(mode="bitexact", codec="qlc")
+        assert spec.codec == "qlc"
+        assert spec.decode_backend == get_codec("qlc").default_backend
+        with pytest.raises(ValueError, match="unknown codec"):
+            CompressionSpec(codec="zstd")
+
+    def test_content_hash_covers_codec_identity(self):
+        counts = np.arange(1, 257, dtype=np.int64)
+        key = ("act", "e4m3", "b0")
+        hb = build_codebook(counts, book_id=0, key=key, codec="huffman")
+        qb = build_codebook(counts, book_id=0, key=key, codec="qlc")
+        assert registry_content_hash([hb]) != registry_content_hash([qb])
+
+
+class TestA2AWireFingerprint:
+    """Satellite 3 regression: a2a dispatch books bypass the registry;
+    the epoch fingerprint must still cover them so a half-configured
+    fleet fails agreement instead of silently mixing books."""
+
+    @pytest.fixture(autouse=True)
+    def _reset_wire(self):
+        from repro.models import moe
+        saved = dict(moe._A2A_WIRE)
+        yield
+        moe._A2A_WIRE.clear()
+        moe._A2A_WIRE.update(saved)
+
+    def test_half_configured_fleet_raises(self):
+        from repro.lifecycle import (EpochSyncError, epoch_fingerprint,
+                                     verify_epoch_agreement)
+        from repro.models import moe
+        from repro.core.codebook import CodebookRegistry
+
+        reg = CodebookRegistry()
+        reg.install(("act", "e4m3", "b0"), np.arange(1, 257))
+
+        moe._A2A_WIRE["books"] = None          # device A: unconfigured
+        fp_unconf = epoch_fingerprint(reg)
+        assert moe.a2a_wire_fingerprint() == "a2a:unconfigured"
+
+        book = reg.get(("act", "e4m3", "b0"))
+        moe.configure_a2a_wire(books={"b0": book})   # device B: configured
+        fp_conf = epoch_fingerprint(reg)
+        assert not np.array_equal(fp_unconf, fp_conf)
+
+        fleet = np.stack([fp_conf, fp_unconf, fp_conf, fp_conf])
+        with pytest.raises(EpochSyncError, match="disagree"):
+            verify_epoch_agreement(fleet)
+        # uniform fleet (all configured) passes
+        verify_epoch_agreement(np.tile(fp_conf, (4, 1)))
+
+    def test_wire_codec_identity_changes_fingerprint(self):
+        from repro.models import moe
+
+        counts = np.arange(1, 257, dtype=np.int64)
+        key = ("act", "e4m3", "b0")
+        moe.configure_a2a_wire(
+            books={"b0": build_codebook(counts, key=key, codec="huffman")})
+        fp_h = moe.a2a_wire_fingerprint()
+        moe.configure_a2a_wire(
+            books={"b0": build_codebook(counts, key=key, codec="qlc")})
+        fp_q = moe.a2a_wire_fingerprint()
+        assert fp_h != fp_q

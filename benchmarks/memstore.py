@@ -1,0 +1,140 @@
+"""Compressed-at-rest memory benchmark — HBM footprint + fused decode.
+
+Two question families (docs/memstore.md):
+
+  footprint   how many HBM bits does coded-at-rest storage hold for a
+              trained-weight-shaped bf16 model, params and KV cache,
+              versus raw bf16?  The ratios are exact coded sizes of
+              seeded data — machine-portable, so the ``_speedup`` rows
+              (raw/coded savings multipliers) sit under the tight CI
+              ratio gate.  The paper-level claim — coded/raw ≤ 0.75 on
+              bf16 trained-shaped weights, params-and-KV combined — is
+              asserted in-process before any row is emitted.
+  bandwidth   what does the fused ``decode_matmul`` path cost next to a
+              dense matmul on the materialized weight?  Reported as
+              effective HBM bandwidth (raw-weight bytes the consumer
+              *would* have read, per second) — ``_mbps`` rows, loose
+              timing gate.  Bit-exactness vs the decode-then-matmul
+              oracle is asserted before timing.
+
+``REPRO_BENCH_TINY=1`` shrinks the model and generation length and
+emits under ``memstore_tiny.*`` (the fast-CI smoke).  The full run
+measures the Gemma-proxy SFT weights from ``common.gemma_proxy``.
+"""
+from __future__ import annotations
+
+import os
+
+import numpy as np
+
+TINY = os.environ.get("REPRO_BENCH_TINY") == "1"
+NS = "memstore_tiny" if TINY else "memstore"
+HBM_RATIO_BOUND = 0.75
+
+
+def _trained_shaped_params():
+    """bf16 params with trained-weight statistics.
+
+    TINY: synthetic N(0, 0.02) matrices (the scale SFT leaves weights
+    at — exponent bytes concentrate exactly like trained checkpoints).
+    Full: the actual post-SFT Gemma-proxy parameters.
+    """
+    import jax.numpy as jnp
+    if TINY:
+        rng = np.random.default_rng(11)
+        return {f"layer{i}.w": jnp.asarray(
+                    rng.normal(0.0, 0.02, (256, 256)), jnp.bfloat16)
+                for i in range(4)}
+    from .common import gemma_proxy
+    _, params, _ = gemma_proxy()
+    return params
+
+
+def run() -> None:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels.ref import decode_matmul_ref
+    from repro.memstore import CompressedParamStore
+    from repro.models import BlockGroup, ModelConfig, model_init
+    from repro.serve.engine import Engine, ServeConfig
+
+    from .common import emit, timed
+
+    # ---- footprint: params at rest -----------------------------------
+    params = _trained_shaped_params()
+    store = CompressedParamStore.from_tree(params)
+    fp = store.footprint()
+    coded_raw = sum(e["raw_bits"] for e in fp["leaves"].values()
+                    if e["kind"] == "coded")
+    coded_coded = sum(e["coded_bits"] for e in fp["leaves"].values()
+                      if e["kind"] == "coded") + fp["book_bits"]
+    param_ratio = coded_coded / coded_raw
+    assert param_ratio <= HBM_RATIO_BOUND, (
+        f"param HBM ratio {param_ratio:.4f} exceeds {HBM_RATIO_BOUND} "
+        f"on trained-shaped bf16 weights")
+
+    # ---- footprint: a serving engine, params + KV combined -----------
+    cfg = ModelConfig(name="memb", arch_type="dense", d_model=128,
+                      vocab_size=512, blocks=(BlockGroup(("attn",), 2),),
+                      n_heads=4, n_kv_heads=2, head_dim=32, d_ff=256)
+    eng_params = model_init(cfg, jax.random.PRNGKey(0))
+    eng_store = CompressedParamStore.from_tree(eng_params)
+    n_new = 4 if TINY else 12
+    prompt = jnp.asarray(np.random.default_rng(0).integers(
+        0, cfg.vocab_size, (2, 8)), jnp.int32)
+    eng = Engine(None, cfg, ServeConfig(max_cache_len=32),
+                 param_store=eng_store, kv_mode="coded")
+    _, totals = eng.generate(prompt, n_new)
+    hbm_ratio = totals["hbm_coded_bits"] / totals["hbm_raw_bits"]
+    kv_ratio = totals["kv_hbm_coded_bits"] / totals["kv_hbm_raw_bits"]
+    assert hbm_ratio <= HBM_RATIO_BOUND, (
+        f"combined HBM ratio {hbm_ratio:.4f} (params+KV) exceeds "
+        f"{HBM_RATIO_BOUND}")
+
+    # ---- bandwidth: fused decode_matmul vs dense matmul --------------
+    rng = np.random.default_rng(3)
+    k_dim, n_cols, m = (256, 128, 8) if TINY else (1024, 256, 16)
+    w = jnp.asarray(rng.normal(0.0, 0.02, (k_dim, n_cols)), jnp.bfloat16)
+    x = jnp.asarray(rng.normal(0.0, 1.0, (m, k_dim)), jnp.bfloat16)
+    ws = CompressedParamStore.from_tree({"w": w}, chunk=4096, min_size=1)
+    name = ws.names()[0]
+    lo, hi, counts = ws.plane_blocks(name)
+    got = ws.matmul(x, name)
+    want = decode_matmul_ref(x, jnp.asarray(lo), jnp.asarray(hi),
+                             jnp.asarray(counts), ws.books,
+                             chunk=4096, n_cols=n_cols)
+    assert np.array_equal(np.asarray(got), np.asarray(want)), (
+        "fused decode_matmul diverged from its decode-then-matmul oracle")
+
+    fused_us, _ = timed(lambda: ws.matmul(x, name), reps=3, warmup=1)
+    w_mat = ws.materialize(name)
+    dense = jax.jit(lambda a, b: jnp.dot(
+        a.astype(jnp.float32), b.astype(jnp.float32),
+        preferred_element_type=jnp.float32))
+    dense_us, _ = timed(lambda: dense(x, w_mat), reps=3, warmup=1)
+    raw_mb = w.size * 2 / 1e6                    # bf16 bytes the fused
+    fused_mbps = raw_mb / (fused_us / 1e6)       # path never reads
+    dense_mbps = raw_mb / (dense_us / 1e6)
+
+    emit(f"{NS}.param_hbm_raw_bits", 0.0, f"{coded_raw:.0f}")
+    emit(f"{NS}.param_hbm_coded_bits", 0.0, f"{coded_coded:.0f}")
+    emit(f"{NS}.param_hbm_ratio", 0.0, f"{param_ratio:.4f}")
+    emit(f"{NS}.param_hbm_savings_speedup", 0.0,
+         f"{coded_raw / coded_coded:.4f}")
+    emit(f"{NS}.engine_hbm_raw_bits", 0.0,
+         f"{totals['hbm_raw_bits']:.0f}")
+    emit(f"{NS}.engine_hbm_coded_bits", 0.0,
+         f"{totals['hbm_coded_bits']:.0f}")
+    emit(f"{NS}.engine_hbm_ratio", 0.0, f"{hbm_ratio:.4f}")
+    emit(f"{NS}.engine_hbm_savings_speedup", 0.0,
+         f"{1.0 / hbm_ratio:.4f}")
+    emit(f"{NS}.kv_hbm_ratio", 0.0, f"{kv_ratio:.4f}")
+    emit(f"{NS}.decode_matmul.us", fused_us, "")
+    emit(f"{NS}.raw_matmul.us", dense_us, "")
+    emit(f"{NS}.decode_matmul_effective_mbps", 0.0, f"{fused_mbps:.3f}")
+    emit(f"{NS}.raw_matmul_effective_mbps", 0.0, f"{dense_mbps:.3f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -86,7 +86,8 @@ def main(argv=None) -> None:
     from . import (codelen_ablation, collective_traffic, common,
                    decoder_throughput, drift, dtype_sweep,
                    encoder_throughput, fig1_pmf, fig2_per_shard, fig3_kl,
-                   fig4_fixed_codebook, ring_traffic, tensor_kinds)
+                   fig4_fixed_codebook, memstore, ring_traffic,
+                   tensor_kinds)
 
     suites = [
         ("fig1", fig1_pmf.run),
@@ -101,6 +102,7 @@ def main(argv=None) -> None:
         ("traffic", collective_traffic.run),
         ("ring_traffic", ring_traffic.run),
         ("drift", drift.run),
+        ("memstore", memstore.run),
     ]
     parser = argparse.ArgumentParser(
         prog="benchmarks.run", description=__doc__,

@@ -1,5 +1,6 @@
 from .ckpt import load_pytree, save_pytree
-from .compressed import load_compressed, save_compressed
+from .compressed import (load_compressed, load_compressed_store,
+                         save_compressed)
 
 __all__ = ["load_pytree", "save_pytree", "load_compressed",
-           "save_compressed"]
+           "load_compressed_store", "save_compressed"]

@@ -1,16 +1,23 @@
-"""Huffman-compressed checkpoints — the paper's codec applied to weight
-storage.
+"""Compressed checkpoints — the paper's codec applied to weight storage.
 
 Each bf16 leaf is split into byte planes and single-stage-encoded with a
-fixed codebook built from the *whole checkpoint's* plane statistics (one
+fixed book built from the *whole checkpoint's* plane statistics (one
 observation pass — this is storage, not the latency-critical wire, so
-one extra pass is fine and maximizes ratio).  The npz stores packed
-uint32 words + bit counts + the two 256-byte length vectors; restore is
-bit-exact.
+one extra pass is fine and maximizes ratio).  Books are built through
+the ``CODECS`` registry (``codec=`` or the process default), and the
+manifest records the codec name, book epoch and chunk size; manifests
+from before the codec field load as ``huffman`` / epoch 0.
 
-Typical ratio on trained bf16 weights: ~0.7 (exponent-byte structure),
-for free at load time (decode is a table walk).  f32 leaves (norm
-scales, optimizer scalars) are stored raw.
+The npz stores, per plane, the chunked coded stream with every chunk
+trimmed to its own ``(bits + 31) // 32 + 1`` words and concatenated —
+exactly the at-rest layout of ``memstore.PlaneStream``.  That makes the
+manifest the serving interchange format: ``load_compressed_store``
+re-labels the stored words into a ``CompressedParamStore`` **without a
+decode round trip**, and ``load_compressed`` is just that store
+materialized.  Restore is bit-exact either way.
+
+Typical ratio on trained bf16 weights: ~0.7 (exponent-byte structure).
+f32 leaves (norm scales, optimizer scalars) are stored raw.
 """
 from __future__ import annotations
 
@@ -21,58 +28,43 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.codebook import build_codebook
-from ..core.encoder import decode_with_book, encode_jit
+from ..core.codec import default_codec, get_codec
 from ..core.symbols import bf16_planes_np
+from ..memstore.store import (CodedLeaf, CompressedParamStore, PlaneStream,
+                              RawLeaf, encode_plane)
 from .ckpt import _flatten
 
-__all__ = ["save_compressed", "load_compressed"]
+__all__ = ["save_compressed", "load_compressed", "load_compressed_store"]
 
-_CHUNK = 1 << 22          # symbols per encode call
-
-
-def _encode_stream(sym: np.ndarray, book) -> Tuple[np.ndarray, list]:
-    words_parts = []
-    bits = []
-    for i in range(0, len(sym), _CHUNK):
-        chunk = sym[i:i + _CHUNK]
-        w, nb = encode_jit(jnp.asarray(chunk), jnp.asarray(book.codes),
-                           jnp.asarray(book.lengths))
-        nb = int(nb)
-        words_parts.append(np.asarray(w)[: (nb + 31) // 32 + 1])
-        bits.append((nb, len(chunk)))
-    return np.concatenate(words_parts), bits
+_CHUNK = 1 << 16          # symbols per coded chunk (manifest "chunk")
+_MIN_SIZE = 1024          # leaves below this stay raw
 
 
-def _decode_stream(words: np.ndarray, bits: list, book) -> np.ndarray:
-    out = []
-    off = 0
-    for nb, nsym in bits:
-        nw = (nb + 31) // 32 + 1
-        out.append(np.asarray(decode_with_book(
-            jnp.asarray(words[off:off + nw]), book, nsym)))
-        off += nw
-    return np.concatenate(out) if out else np.zeros(0, np.uint8)
-
-
-def save_compressed(path: str, tree, extra_meta: Optional[Dict] = None
-                    ) -> Dict[str, float]:
+def save_compressed(path: str, tree, extra_meta: Optional[Dict] = None, *,
+                    codec: Optional[str] = None, chunk: int = _CHUNK,
+                    book_epoch: int = 0) -> Dict[str, float]:
     """Returns {raw_bytes, stored_bytes, ratio}."""
+    codec_name = codec or default_codec()
+    codec_obj = get_codec(codec_name)
     flat = _flatten(tree)
     # 1. observe whole-checkpoint plane statistics (storage: 2-pass ok)
     counts = {"lo": np.zeros(256, np.int64), "hi": np.zeros(256, np.int64)}
     bf16_keys = []
     for k, v in flat.items():
         arr = np.asarray(v)
-        if arr.dtype == jnp.bfloat16 and arr.size >= 1024:
+        if arr.dtype == jnp.bfloat16 and arr.size >= _MIN_SIZE:
             bf16_keys.append(k)
             for p, s in bf16_planes_np(arr).items():
                 counts[p] += np.bincount(s, minlength=256)
-    books = {p: build_codebook(c) for p, c in counts.items()}
+    books = {p: codec_obj.build_book(c, key=("ckpt", "bf16", p))
+             for p, c in counts.items()}
 
     blob: Dict[str, np.ndarray] = {}
     meta: Dict[str, Any] = {"dtypes": {}, "shapes": {}, "bits": {},
                             "compressed": bf16_keys,
+                            "codec": codec_name,
+                            "book_epoch": int(book_epoch),
+                            "chunk": int(chunk),
                             "extra": extra_meta or {}}
     raw_bytes = stored = 0
     for k, v in flat.items():
@@ -84,18 +76,21 @@ def save_compressed(path: str, tree, extra_meta: Optional[Dict] = None
             planes = bf16_planes_np(arr)
             meta["bits"][k] = {}
             for p, sym in planes.items():
-                words, bits = _encode_stream(sym, books[p])
-                blob[f"{k}::{p}"] = words
-                meta["bits"][k][p] = bits
-                stored += words.nbytes
+                ps = encode_plane(sym, books[p], chunk=chunk)
+                blob[f"{k}::{p}"] = ps.words
+                meta["bits"][k][p] = [
+                    [int(nb), int(ns)] for nb, ns in
+                    zip(ps.bit_counts, ps.chunk_counts())]
+                stored += ps.words.nbytes
         else:
             if arr.dtype == jnp.bfloat16:
                 arr = arr.view(np.uint16)
             blob[k] = arr
             stored += arr.nbytes
     for p, b in books.items():
-        blob[f"__book_{p}__"] = b.lengths.astype(np.int32)
-        stored += 256
+        lengths = np.asarray(b.lengths).astype(np.int32)
+        blob[f"__book_{p}__"] = lengths
+        stored += lengths.nbytes
     blob["__meta__"] = np.frombuffer(json.dumps(meta).encode(),
                                      dtype=np.uint8)
     np.savez(path, **blob)
@@ -103,40 +98,74 @@ def save_compressed(path: str, tree, extra_meta: Optional[Dict] = None
             "ratio": stored / max(raw_bytes, 1)}
 
 
-def load_compressed(path: str, like) -> Tuple[Any, Dict]:
+def load_compressed_store(path: str, like=None, *,
+                          expect_codec: Optional[str] = None
+                          ) -> Tuple[CompressedParamStore, Dict]:
+    """Open a compressed manifest as a ``CompressedParamStore`` — no
+    decode round trip: the stored per-plane words ARE the store's
+    at-rest streams, so this is a re-labelling plus book rebuild from
+    the recorded length vectors (through the recorded codec; manifests
+    predating the codec field are ``huffman`` / epoch 0).
+
+    like:          optional pytree template — required later by
+                   ``materialize_tree()`` if omitted here.
+    expect_codec:  refuse (ValueError) manifests coded differently —
+                   for deployments that pin the serving codec.
+    Returns (store, extra_meta).
+    """
     blob = np.load(path, allow_pickle=False)
     meta = json.loads(bytes(blob["__meta__"]).decode())
-    from ..core.huffman import canonical_codes, canonical_decode_tables
-    from ..core.codebook import Codebook
-
-    def book_from_lengths(lengths):
-        lengths = np.asarray(lengths, np.int32)
-        return Codebook(book_id=-1, key=("ckpt", "bf16", ""),
-                        lengths=lengths, codes=canonical_codes(lengths),
-                        tables=canonical_decode_tables(lengths),
-                        source_counts=np.ones(256, np.int64))
-
-    books = {p: book_from_lengths(blob[f"__book_{p}__"])
+    codec_name = meta.get("codec", "huffman")
+    book_epoch = int(meta.get("book_epoch", 0))
+    chunk = int(meta.get("chunk", 1 << 22))
+    if expect_codec is not None and expect_codec != codec_name:
+        raise ValueError(
+            f"manifest {path!r} is coded with {codec_name!r}, caller "
+            f"requires {expect_codec!r}")
+    codec_obj = get_codec(codec_name)
+    books = {p: codec_obj.book_from_lengths(
+                 np.asarray(blob[f"__book_{p}__"], np.int32),
+                 key=("ckpt", "bf16", p))
              for p in ("lo", "hi")}
 
-    flat: Dict[str, np.ndarray] = {}
+    entries: Dict[str, Any] = {}
     for k, dtype in meta["dtypes"].items():
         shape = tuple(meta["shapes"][k])
         if k in meta["compressed"]:
             planes = {}
             for p in ("lo", "hi"):
-                planes[p] = _decode_stream(blob[f"{k}::{p}"],
-                                           meta["bits"][k][p], books[p])
-            u16 = (planes["lo"].astype(np.uint16)
-                   | (planes["hi"].astype(np.uint16) << 8))
-            flat[k] = u16.view(jnp.bfloat16).reshape(shape)
+                bits = meta["bits"][k][p]
+                n_symbols = sum(int(ns) for _, ns in bits)
+                # per-leaf streams shorter than one chunk were encoded
+                # as a single n-sized block; chunk_counts_for must
+                # reproduce the recorded per-chunk symbol counts
+                leaf_chunk = chunk if n_symbols > int(bits[0][1]) else \
+                    int(bits[0][1])
+                planes[p] = PlaneStream(
+                    words=np.asarray(blob[f"{k}::{p}"], np.uint32),
+                    bit_counts=np.asarray([nb for nb, _ in bits], np.int64),
+                    n_symbols=n_symbols, chunk=leaf_chunk,
+                    max_len=books[p].max_len)
+            entries[k] = CodedLeaf(shape=shape, planes=planes)
         else:
             arr = blob[k]
             if dtype == "bfloat16":
                 arr = arr.view(jnp.bfloat16)
-            flat[k] = arr.reshape(shape)
-    template = _flatten(like)
-    leaves = [flat[k] for k in template]
-    tree = jax.tree_util.tree_unflatten(
-        jax.tree_util.tree_structure(like), leaves)
-    return tree, meta["extra"]
+            entries[k] = RawLeaf(value=arr.reshape(shape))
+    treedef = (jax.tree_util.tree_structure(like) if like is not None
+               else None)
+    if like is not None:
+        template = _flatten(like)
+        entries = {k: entries[k] for k in template}
+    store = CompressedParamStore(entries, books, codec=codec_name,
+                                 book_epoch=book_epoch, chunk=chunk,
+                                 treedef=treedef)
+    return store, meta["extra"]
+
+
+def load_compressed(path: str, like, *,
+                    expect_codec: Optional[str] = None) -> Tuple[Any, Dict]:
+    """Materialized load: open as a store, decode every leaf."""
+    store, extra = load_compressed_store(path, like,
+                                         expect_codec=expect_codec)
+    return store.materialize_tree(like), extra

@@ -1,0 +1,311 @@
+"""Pallas TPU kernel: fused coded-weight decode + matmul.
+
+The compressed-at-rest memstore (``memstore/store.py``) keeps bf16
+weight matrices in HBM as two chunked coded byte-plane streams (lo/hi,
+the same wire layout every other kernel in this package consumes).  The
+naive consume path is decode → assemble bf16 → ``jnp.dot`` — three HBM
+round trips for a weight the matmul reads exactly once.  This kernel
+fuses the three: each grid step pulls one coded chunk of *each* plane
+into VMEM, walks both back to symbols (the canonical-prefix walk of
+``decode.py`` or the table-free QLC walk, with that plane's own book),
+reassembles the bf16 tile ``lo | hi << 8`` in registers, and
+immediately multiplies it into a resident (M, N) accumulator — so HBM
+only ever sees coded bytes on the weight side.
+
+Layout contract: the weight W (K, N) is flattened **row-major** before
+plane-split + chunked encode, and ``chunk % N == 0`` so every chunk
+decodes to an integral ``(chunk // N, N)`` row tile.  The host wrapper
+zero-pads x's columns up to ``NB * chunk // N``; tail-chunk slack
+decodes to symbol 0 → bf16 0.0, which meets those zero x columns, so
+ragged K needs no masking in-kernel.
+
+Accumulation is the standard Pallas reduction-grid pattern: every grid
+step addresses the same (M, N) output block, step 0 zeroes it, each
+step adds its tile's partial product (f32 accumulate).  Grid steps are
+sequential on TPU, so the f32 sum order is exactly chunk-major — the
+``ref.decode_matmul_ref`` oracle reproduces that order and the tests
+assert **bit-exact** equality, not allclose.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..core.encoder import chunk_capacity_words
+from ..core.huffman import MAX_CODE_LEN
+
+
+def _walk_canonical(words, n_sym, fc, bi, nc, ss, *, chunk: int,
+                    max_len: int, cap: int):
+    """Canonical-prefix walk of one chunk: (cap,) words → (chunk,) int32.
+
+    Same loop body as ``decode._decode_kernel`` (window read, canonical
+    subtraction over all candidate lengths, cursor advance); factored so
+    the fused matmul kernel decodes each byte plane with its own book.
+    """
+    ls = jax.lax.broadcasted_iota(jnp.int32, (max_len,), 0) + 1   # 1..L
+    fcl = fc[ls]
+    ncl = nc[ls]
+
+    def step(k, carry):
+        bit_pos, out = carry
+        widx = jnp.minimum((bit_pos >> jnp.uint32(5)).astype(jnp.int32),
+                           cap - 2)
+        pin = bit_pos & jnp.uint32(31)
+        w0 = words[widx]
+        w1 = words[widx + 1]
+        hi = w0 << pin
+        lo = jnp.where(pin == 0, jnp.uint32(0),
+                       w1 >> jnp.clip(32 - pin.astype(jnp.int32), 0, 31
+                                      ).astype(jnp.uint32))
+        window = ((hi | lo) >> jnp.uint32(32 - max_len)).astype(jnp.int32)
+        cand = window >> (max_len - ls)
+        off = cand - fcl
+        valid = (off >= 0) & (off < ncl)
+        li = jnp.argmax(valid)
+        l = ls[li]
+        sym = ss[jnp.clip(bi[l] + off[li], 0, ss.shape[0] - 1)]
+        live = k < n_sym
+        out = out.at[k].set(jnp.where(live, sym, 0))
+        adv = jnp.where(live, l, 0).astype(jnp.uint32)
+        return bit_pos + adv, out
+
+    cursor0 = words[0] & jnp.uint32(0)
+    _, out = jax.lax.fori_loop(
+        0, chunk, step, (cursor0, jnp.zeros((chunk,), jnp.int32)))
+    return out
+
+
+def _walk_qlc(words, n_sym, lp, bp, st, *, chunk: int, cap: int):
+    """Table-free QLC walk of one chunk (``decode._decode_qlc_kernel``
+    loop body): (cap,) words → (chunk,) int32 symbols."""
+    def step(k, carry):
+        bit_pos, out = carry
+        widx = jnp.minimum((bit_pos >> jnp.uint32(5)).astype(jnp.int32),
+                           cap - 2)
+        pin = bit_pos & jnp.uint32(31)
+        w0 = words[widx]
+        w1 = words[widx + 1]
+        hi = w0 << pin
+        lo = jnp.where(pin == 0, jnp.uint32(0),
+                       w1 >> jnp.clip(32 - pin.astype(jnp.int32), 0, 31
+                                      ).astype(jnp.uint32))
+        win = ((hi | lo) >> jnp.uint32(16))                  # top 16 bits
+        c = win >> jnp.uint32(14)                            # class = 2 MSBs
+        l = (lp >> (c << jnp.uint32(3))) & jnp.uint32(0xFF)
+        idx = (win >> (jnp.uint32(16) - l)) & ((jnp.uint32(1)
+                                                << (l - jnp.uint32(2)))
+                                               - jnp.uint32(1))
+        base = jnp.where(
+            c == 0, jnp.uint32(0),
+            (bp >> ((c - jnp.uint32(1)) * jnp.uint32(10))) & jnp.uint32(0x3FF))
+        ptr = (base + idx).astype(jnp.int32)
+        sym = st[jnp.clip(ptr, 0, st.shape[0] - 1)]
+        live = k < n_sym
+        out = out.at[k].set(jnp.where(live, sym, 0))
+        adv = jnp.where(live, l, jnp.uint32(0))
+        return bit_pos + adv, out
+
+    cursor0 = words[0] & jnp.uint32(0)
+    _, out = jax.lax.fori_loop(
+        0, chunk, step, (cursor0, jnp.zeros((chunk,), jnp.int32)))
+    return out
+
+
+def _accumulate_tile(i, lo_sym, hi_sym, x_ref, out_ref, *, rows: int,
+                     n_cols: int):
+    """Assemble the bf16 tile from plane symbols and accumulate x @ W.
+
+    Shared tail of both kernel bodies: ``u16 = lo | hi << 8`` bitcast to
+    bfloat16, reshaped row-major to (rows, n_cols), then the standard
+    sequential-grid f32 accumulation into the resident out block.
+    """
+    u16 = (lo_sym | (hi_sym << 8)).astype(jnp.uint16)
+    w_tile = jax.lax.bitcast_convert_type(u16, jnp.bfloat16)
+    w_tile = w_tile.reshape(rows, n_cols).astype(jnp.float32)
+    x_blk = x_ref[...].astype(jnp.float32)
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] += jnp.dot(x_blk, w_tile,
+                            preferred_element_type=jnp.float32)
+
+
+def _decode_matmul_kernel(x_ref, lo_ref, hi_ref, count_ref, fc_ref, bi_ref,
+                          nc_ref, ss_ref, out_ref, *, chunk: int,
+                          max_len: int, cap: int, rows: int, n_cols: int):
+    """One grid step: decode one lo+hi chunk pair, multiply the tile.
+
+    x_ref:     (M, rows) — this chunk's slice of the activations
+    lo/hi_ref: (1, cap) uint32 — the chunk's coded byte-plane streams
+    count_ref: (1, 1) int32 — symbols present in this chunk
+    fc/bi/nc_ref: (2, max_len+1) int32 — canonical tables, row 0 = lo
+               plane's book, row 1 = hi plane's
+    ss_ref:    (2, 256) int32 — per-plane sorted-symbol tables
+    out_ref:   (M, n_cols) f32 — shared accumulator across the grid
+    """
+    n_sym = count_ref[0, 0]
+    fc = fc_ref[...]
+    bi = bi_ref[...]
+    nc = nc_ref[...]
+    ss = ss_ref[...]
+    lo_sym = _walk_canonical(lo_ref[...].reshape(-1), n_sym, fc[0], bi[0],
+                             nc[0], ss[0], chunk=chunk, max_len=max_len,
+                             cap=cap)
+    hi_sym = _walk_canonical(hi_ref[...].reshape(-1), n_sym, fc[1], bi[1],
+                             nc[1], ss[1], chunk=chunk, max_len=max_len,
+                             cap=cap)
+    _accumulate_tile(pl.program_id(0), lo_sym, hi_sym, x_ref, out_ref,
+                     rows=rows, n_cols=n_cols)
+
+
+def _decode_matmul_qlc_kernel(x_ref, lo_ref, hi_ref, count_ref, lp_ref,
+                              bp_ref, st_ref, out_ref, *, chunk: int,
+                              cap: int, rows: int, n_cols: int):
+    """QLC variant: branchless per-plane walks feeding the tile matmul.
+
+    lp/bp_ref: (1, 2) int32 — packed class lengths/bases, col 0 = lo
+               plane's book, col 1 = hi plane's
+    st_ref:    (2, 256) int32 — per-plane class-major symbol tables
+    """
+    n_sym = count_ref[0, 0]
+    lp = lp_ref[...].reshape(-1).astype(jnp.uint32)
+    bp = bp_ref[...].reshape(-1).astype(jnp.uint32)
+    st = st_ref[...]
+    lo_sym = _walk_qlc(lo_ref[...].reshape(-1), n_sym, lp[0], bp[0], st[0],
+                       chunk=chunk, cap=cap)
+    hi_sym = _walk_qlc(hi_ref[...].reshape(-1), n_sym, lp[1], bp[1], st[1],
+                       chunk=chunk, cap=cap)
+    _accumulate_tile(pl.program_id(0), lo_sym, hi_sym, x_ref, out_ref,
+                     rows=rows, n_cols=n_cols)
+
+
+def _pad_x(x: jnp.ndarray, nb: int, rows: int) -> jnp.ndarray:
+    """Zero-pad x's contraction axis to NB * rows (tail-chunk columns
+    meet decoded-zero weight rows, so padding never changes the sum)."""
+    k_pad = nb * rows
+    if x.ndim != 2:
+        raise ValueError(f"x must be (M, K), got {x.shape}")
+    if x.shape[1] > k_pad:
+        raise ValueError(f"x K={x.shape[1]} exceeds coded rows {k_pad}")
+    if x.shape[1] == k_pad:
+        return x
+    return jnp.pad(x, ((0, 0), (0, k_pad - x.shape[1])))
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "n_cols", "max_len",
+                                             "interpret"))
+def decode_matmul_pallas(x: jnp.ndarray, lo_words: jnp.ndarray,
+                         hi_words: jnp.ndarray, chunk_counts: jnp.ndarray,
+                         first_code: jnp.ndarray, base_index: jnp.ndarray,
+                         num_codes: jnp.ndarray, sorted_symbols: jnp.ndarray,
+                         *, chunk: int, n_cols: int,
+                         max_len: int = MAX_CODE_LEN,
+                         interpret: bool = True) -> jnp.ndarray:
+    """x @ W from W's coded canonical-Huffman byte planes, fused.
+
+    x:            (M, K) — any float dtype; accumulated in f32
+    lo/hi_words:  (NB, cap) uint32 — chunked coded planes of W (K, N)
+                  flattened row-major (cap = chunk_capacity_words)
+    chunk_counts: (NB,) int32 — symbols per chunk
+    tables:       (2, max_len+1) / (2, ≤256) stacked canonical tables —
+                  row 0 decodes the lo plane, row 1 the hi plane
+    chunk must satisfy ``chunk % n_cols == 0``; K ≤ NB * chunk // n_cols.
+    Returns (M, n_cols) float32, bit-exact vs ``ref.decode_matmul_ref``.
+    """
+    nb, cap = lo_words.shape
+    if cap != chunk_capacity_words(chunk, max_len):
+        raise ValueError(f"cap {cap} != capacity for chunk={chunk}")
+    if chunk % n_cols != 0:
+        raise ValueError(f"chunk {chunk} not a multiple of n_cols {n_cols}")
+    rows = chunk // n_cols
+    x = _pad_x(x, nb, rows)
+    m = x.shape[0]
+    counts = chunk_counts.reshape(nb, 1).astype(jnp.int32)
+    tlen = max_len + 1
+    fc = first_code.reshape(2, tlen).astype(jnp.int32)
+    bi = base_index.reshape(2, tlen).astype(jnp.int32)
+    nc = num_codes.reshape(2, tlen).astype(jnp.int32)
+    ns = sorted_symbols.shape[-1]
+    ss = jnp.zeros((2, 256), jnp.int32).at[:, :ns].set(
+        sorted_symbols.reshape(2, ns).astype(jnp.int32))
+
+    kernel = functools.partial(_decode_matmul_kernel, chunk=chunk,
+                               max_len=max_len, cap=cap, rows=rows,
+                               n_cols=n_cols)
+    out = pl.pallas_call(
+        kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((m, rows), lambda i: (0, i)),
+            pl.BlockSpec((1, cap), lambda i: (i, 0)),
+            pl.BlockSpec((1, cap), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+            pl.BlockSpec((2, tlen), lambda i: (0, 0)),
+            pl.BlockSpec((2, tlen), lambda i: (0, 0)),
+            pl.BlockSpec((2, tlen), lambda i: (0, 0)),
+            pl.BlockSpec((2, 256), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((m, n_cols), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n_cols), jnp.float32),
+        interpret=interpret,
+    )(x, lo_words.astype(jnp.uint32), hi_words.astype(jnp.uint32), counts,
+      fc, bi, nc, ss)
+    return out
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "n_cols", "max_len",
+                                             "interpret"))
+def decode_matmul_qlc_pallas(x: jnp.ndarray, lo_words: jnp.ndarray,
+                             hi_words: jnp.ndarray,
+                             chunk_counts: jnp.ndarray,
+                             len_pack: jnp.ndarray, base_pack: jnp.ndarray,
+                             sym_tab: jnp.ndarray, *, chunk: int,
+                             n_cols: int, max_len: int = MAX_CODE_LEN,
+                             interpret: bool = True) -> jnp.ndarray:
+    """x @ W from W's coded QLC byte planes, fused.
+
+    Same contract as ``decode_matmul_pallas`` with per-plane QLC packed
+    scalars: len_pack/base_pack are (2,) uint32 ([lo, hi] books) and
+    sym_tab is (2, n) int32.  Bit-exact vs ``ref.decode_matmul_ref``.
+    """
+    nb, cap = lo_words.shape
+    if cap != chunk_capacity_words(chunk, max_len):
+        raise ValueError(f"cap {cap} != capacity for chunk={chunk}")
+    if chunk % n_cols != 0:
+        raise ValueError(f"chunk {chunk} not a multiple of n_cols {n_cols}")
+    rows = chunk // n_cols
+    x = _pad_x(x, nb, rows)
+    m = x.shape[0]
+    counts = chunk_counts.reshape(nb, 1).astype(jnp.int32)
+    lp = jnp.asarray(len_pack, jnp.uint32).reshape(1, 2).astype(jnp.int32)
+    bp = jnp.asarray(base_pack, jnp.uint32).reshape(1, 2).astype(jnp.int32)
+    ns = sym_tab.shape[-1]
+    st = jnp.zeros((2, 256), jnp.int32).at[:, :ns].set(
+        sym_tab.reshape(2, ns).astype(jnp.int32))
+
+    kernel = functools.partial(_decode_matmul_qlc_kernel, chunk=chunk,
+                               cap=cap, rows=rows, n_cols=n_cols)
+    out = pl.pallas_call(
+        kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((m, rows), lambda i: (0, i)),
+            pl.BlockSpec((1, cap), lambda i: (i, 0)),
+            pl.BlockSpec((1, cap), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+            pl.BlockSpec((1, 2), lambda i: (0, 0)),
+            pl.BlockSpec((1, 2), lambda i: (0, 0)),
+            pl.BlockSpec((2, 256), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((m, n_cols), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n_cols), jnp.float32),
+        interpret=interpret,
+    )(x, lo_words.astype(jnp.uint32), hi_words.astype(jnp.uint32), counts,
+      lp, bp, st)
+    return out

@@ -150,6 +150,54 @@ def decode_chunks_multisym(block_words, chunk_counts, book: Codebook, *,
         chunk=chunk, max_len=t.max_len, interpret=INTERPRET)
 
 
+def decode_matmul(x, lo_words, hi_words, chunk_counts, books, *,
+                  chunk: int, n_cols: int, interpret: bool | None = None):
+    """Fused coded-weight matmul: x @ W from W's coded byte planes.
+
+    lo/hi_words are (NB, cap) chunked coded streams of W (K, N)
+    flattened row-major; books = {"lo": book, "hi": book} (both planes
+    must share one codec).  Dispatches to the canonical-Huffman or QLC
+    fused kernel on the books' ``codec_name``.  Returns (M, n_cols)
+    float32, bit-exact vs ``ref.decode_matmul_ref``.
+    """
+    from .decode_matmul import decode_matmul_pallas, decode_matmul_qlc_pallas
+
+    itp = INTERPRET if interpret is None else interpret
+    lo_b, hi_b = books["lo"], books["hi"]
+    name = getattr(lo_b, "codec_name", "huffman")
+    if getattr(hi_b, "codec_name", "huffman") != name:
+        raise ValueError("decode_matmul: lo/hi books use different codecs")
+    if name == "qlc":
+        from ..core.qlc import qlc_kernel_args
+        lo_lp, lo_bp, lo_st = qlc_kernel_args(lo_b)
+        hi_lp, hi_bp, hi_st = qlc_kernel_args(hi_b)
+        return decode_matmul_qlc_pallas(
+            jnp.asarray(x), jnp.asarray(lo_words), jnp.asarray(hi_words),
+            jnp.asarray(chunk_counts),
+            jnp.stack([lo_lp, hi_lp]), jnp.stack([lo_bp, hi_bp]),
+            jnp.stack([lo_st, hi_st]),
+            chunk=chunk, n_cols=n_cols, interpret=itp)
+    lt, ht = lo_b.tables, hi_b.tables
+    if lt.max_len != ht.max_len:
+        raise ValueError("decode_matmul: lo/hi books disagree on max_len")
+    ns = max(lt.sorted_symbols.shape[0], ht.sorted_symbols.shape[0])
+
+    def _pad(sym):
+        out = np.zeros((ns,), np.int32)
+        out[:sym.shape[0]] = np.asarray(sym, np.int32)
+        return out
+
+    return decode_matmul_pallas(
+        jnp.asarray(x), jnp.asarray(lo_words), jnp.asarray(hi_words),
+        jnp.asarray(chunk_counts),
+        jnp.stack([jnp.asarray(lt.first_code), jnp.asarray(ht.first_code)]),
+        jnp.stack([jnp.asarray(lt.base_index), jnp.asarray(ht.base_index)]),
+        jnp.stack([jnp.asarray(lt.num_codes), jnp.asarray(ht.num_codes)]),
+        jnp.stack([jnp.asarray(_pad(lt.sorted_symbols)),
+                   jnp.asarray(_pad(ht.sorted_symbols))]),
+        chunk=chunk, n_cols=n_cols, max_len=lt.max_len, interpret=itp)
+
+
 def decode_with_book_kernel(symbols_stream, book: Codebook, n_symbols: int, *,
                             chunk: int = 2048):
     """Decode a kernel-path chunked stream back to (n_symbols,) uint8.

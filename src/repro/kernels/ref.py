@@ -7,6 +7,7 @@ from __future__ import annotations
 
 from typing import Sequence, Tuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -90,6 +91,54 @@ def decode_qlc_np(words: np.ndarray, n_symbols: int,
         idx = bits(pos + 2, l - 2)
         out[k] = st[cb[c] + idx]
         pos += l
+    return out
+
+
+def decode_matmul_ref(x: jnp.ndarray, lo_words: jnp.ndarray,
+                      hi_words: jnp.ndarray, chunk_counts: jnp.ndarray,
+                      books, chunk: int, n_cols: int) -> jnp.ndarray:
+    """Decode-then-matmul oracle for the fused ``decode_matmul`` kernel.
+
+    Decodes each byte plane through its book's codec (the scan/NP
+    decoders, themselves property-tested vs ``decode_np``), reassembles
+    the bf16 weight chunk tiles, and accumulates the partial products
+    **in the same chunk-major f32 order** as the kernel's sequential
+    reduction grid — which is what makes the contract bit-exact rather
+    than allclose: a single monolithic dot would sum in a different
+    order.
+
+    books: {"lo": book, "hi": book} — per-plane books (any codec).
+    Returns (M, n_cols) float32.
+    """
+    from ..core.codec import codec_for_book
+
+    if chunk % n_cols != 0:
+        raise ValueError(f"chunk {chunk} not a multiple of n_cols {n_cols}")
+    rows = chunk // n_cols
+    counts = jnp.asarray(chunk_counts).reshape(-1).astype(jnp.int32)
+    nb = int(counts.shape[0])
+    planes = {}
+    for plane, words in (("lo", lo_words), ("hi", hi_words)):
+        book = books[plane]
+        codec = codec_for_book(book)
+        backend = codec.resolve_backend("auto")
+        planes[plane] = codec.decode_blocks(jnp.asarray(words), counts, book,
+                                            chunk, backend)   # (NB, chunk)
+    u16 = (planes["lo"] | (planes["hi"] << 8)).astype(jnp.uint16)
+    w = jax.lax.bitcast_convert_type(u16, jnp.bfloat16)       # (NB, chunk)
+
+    k_pad = nb * rows
+    x = jnp.asarray(x)
+    if x.shape[1] > k_pad:
+        raise ValueError(f"x K={x.shape[1]} exceeds coded rows {k_pad}")
+    if x.shape[1] < k_pad:
+        x = jnp.pad(x, ((0, 0), (0, k_pad - x.shape[1])))
+    out = jnp.zeros((x.shape[0], n_cols), jnp.float32)
+    for i in range(nb):
+        w_tile = w[i].reshape(rows, n_cols).astype(jnp.float32)
+        x_blk = x[:, i * rows:(i + 1) * rows].astype(jnp.float32)
+        out = out + jnp.dot(x_blk, w_tile,
+                            preferred_element_type=jnp.float32)
     return out
 
 

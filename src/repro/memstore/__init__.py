@@ -1,0 +1,18 @@
+"""Compressed-at-rest serving memory: coded params + KV cache in HBM.
+
+``store.CompressedParamStore`` holds bf16 param leaves as chunked coded
+byte-plane streams with registry-built, epoch-stamped books;
+``kvstore.CodedKVStore`` does the same for the Engine's KV cache,
+differentially per decode step.  The fused consume path lives in
+``kernels.decode_matmul``; ``checkpoint.load_compressed_store`` turns a
+compressed checkpoint manifest into a store without a decode round
+trip.  See docs/memstore.md.
+"""
+from .store import (CodedLeaf, CompressedParamStore, PlaneStream, RawLeaf,
+                    decode_plane_stream, encode_plane)
+from .kvstore import CodedKVStore
+
+__all__ = [
+    "CodedLeaf", "CodedKVStore", "CompressedParamStore", "PlaneStream",
+    "RawLeaf", "decode_plane_stream", "encode_plane",
+]

@@ -1,0 +1,219 @@
+"""CodedKVStore — opt-in coded-at-rest KV cache for serve decode steps.
+
+Wraps the Engine's cache pytree: every attention cache node
+(``{"k", "v", "pos"}`` dicts from ``models.layers.attn_cache_init``) has
+its newly-written slots encoded per step with the activation books the
+lifecycle manager maintains (or any per-plane book pair), and decoded
+back on read.  Non-attention cache state (Mamba conv/ssm carries, MoE
+counts, pos vectors) passes through raw and is counted on both sides of
+the ledger.
+
+The write path is **differential**: ``ingest(caches)`` compares each
+node's ``pos`` vector against the last one seen and encodes exactly the
+slots whose absolute position changed — the whole prompt after prefill,
+one slot per decode step, re-coding a slot when a sliding window wraps
+onto it.  Segments replay in ingest order on ``read``, so a
+re-written slot resolves to its latest contents.  Reads rebuild from
+zeros, which matches ``attn_cache_init`` exactly; the round trip is
+bit-exact (tests + ``launch/dryrun.py --memstore-check``).
+
+Ledger: ``kv_hbm_raw_bits`` counts the bf16 bits of every ingested
+slot's K/V (what an uncoded cache would hold for the same occupancy,
+plus raw pass-through state); ``kv_hbm_coded_bits`` the tight coded
+payload + per-chunk headers (plus the same pass-through).  The Engine
+rolls both into its ``hbm_*`` stats next to the wire ledger.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, List, Mapping, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.codec import default_codec, get_codec
+from ..core.symbols import bf16_planes_np
+from .store import PLANES, PlaneStream, decode_plane_stream, encode_plane
+
+DEFAULT_KV_CHUNK = 512
+
+
+def _is_kv_node(x) -> bool:
+    return (isinstance(x, dict) and "k" in x and "v" in x and "pos" in x)
+
+
+@dataclass
+class _Segment:
+    """Coded K/V for one batch of slots of one cache node."""
+    slots: np.ndarray                       # (s,) int32 slot indices
+    shape: Tuple[int, ...]                  # (B, s, H, D)
+    k_planes: Dict[str, PlaneStream]
+    v_planes: Dict[str, PlaneStream]
+
+    @property
+    def raw_bits(self) -> int:
+        return 2 * 16 * int(np.prod(self.shape))
+
+    @property
+    def coded_bits(self) -> int:
+        return (sum(p.stored_bits for p in self.k_planes.values())
+                + sum(p.stored_bits for p in self.v_planes.values()))
+
+
+class CodedKVStore:
+    """Coded-at-rest KV cache: differential coded appends, decode on
+    read.  See module docstring."""
+
+    def __init__(self, books: Optional[Mapping[str, Any]] = None, *,
+                 codec: Optional[str] = None,
+                 chunk: int = DEFAULT_KV_CHUNK, backend: str = "auto"):
+        if books is not None:
+            for p in PLANES:
+                if p not in books:
+                    raise ValueError(f"books must map byte plane {p!r}")
+        self._init_books = dict(books) if books is not None else None
+        self.codec = (codec
+                      or (getattr(next(iter(books.values())), "codec_name",
+                                  None) if books else None)
+                      or default_codec())
+        get_codec(self.codec)                # validate eagerly
+        self.chunk = int(chunk)
+        self.backend = backend
+        self.reset()
+
+    def reset(self) -> None:
+        self.books = (dict(self._init_books)
+                      if self._init_books is not None else None)
+        self._segments: Dict[str, List[_Segment]] = {}
+        self._pos: Dict[str, np.ndarray] = {}
+        self._raw: Dict[str, Any] = {}
+
+    def _ensure_books(self, arrays) -> None:
+        """Build activation books from the first ingest's K/V data when
+        none were supplied: histogram both byte planes across every
+        dirty segment and build through the codec registry.  Floor
+        smoothing keeps the books lossless for any later appends, so
+        books stay pinned for the store's lifetime."""
+        if self.books is not None:
+            return
+        codec = get_codec(self.codec)
+        counts = {p: np.zeros((256,), np.int64) for p in PLANES}
+        for arr in arrays:
+            planes = bf16_planes_np(np.asarray(arr))
+            for p in PLANES:
+                counts[p] += np.bincount(planes[p].reshape(-1),
+                                         minlength=256)
+        self.books = {p: codec.build_book(counts[p], key=("kv", "bf16", p))
+                      for p in PLANES}
+
+    # ------------------------------------------------------------------
+    def _nodes(self, caches):
+        flat, treedef = jax.tree_util.tree_flatten_with_path(
+            caches, is_leaf=_is_kv_node)
+        return ([(jax.tree_util.keystr(path), node) for path, node in flat],
+                treedef)
+
+    def _encode(self, arr) -> Dict[str, PlaneStream]:
+        planes = bf16_planes_np(np.asarray(arr))
+        return {p: encode_plane(planes[p], self.books[p], chunk=self.chunk)
+                for p in PLANES}
+
+    def _decode(self, planes: Dict[str, PlaneStream],
+                shape: Tuple[int, ...]) -> jnp.ndarray:
+        sym = {p: decode_plane_stream(planes[p], self.books[p],
+                                      backend=self.backend) for p in PLANES}
+        u16 = (sym["lo"].astype(np.uint16)
+               | (sym["hi"].astype(np.uint16) << 8))
+        return jax.lax.bitcast_convert_type(jnp.asarray(u16),
+                                            jnp.bfloat16).reshape(shape)
+
+    # ------------------------------------------------------------------
+    def ingest(self, caches) -> int:
+        """Encode every cache slot whose ``pos`` changed since the last
+        ingest (prefill: all occupied slots; decode: the step's slot).
+        Returns the number of slots newly coded."""
+        nodes, _ = self._nodes(caches)
+        dirty = []
+        for name, node in nodes:
+            if not _is_kv_node(node) or node["k"].dtype != jnp.bfloat16:
+                self._raw[name] = node
+                continue
+            pos = np.asarray(node["pos"], np.int32)
+            prev = self._pos.get(name)
+            if prev is None:
+                prev = np.full_like(pos, -1)
+            # pos may be (slots,) or batched/stacked (..., slots) — a
+            # slot is dirty if ANY row's absolute position changed onto
+            # it (the slot axis is always last).
+            mask = (pos != prev) & (pos >= 0)
+            if mask.ndim > 1:
+                mask = mask.reshape(-1, mask.shape[-1]).any(axis=0)
+            changed = np.nonzero(mask)[0]
+            self._pos[name] = pos
+            if changed.size == 0:
+                continue
+            slots = changed.astype(np.int32)
+            # k/v are (..., slots, heads, head_dim): the slot axis is
+            # -3 whether the cache is per-layer (B, S, H, D) or stacked
+            # by a scanned prefill (L, B, S, H, D).
+            k_seg = np.take(np.asarray(node["k"]), slots, axis=-3)
+            v_seg = np.take(np.asarray(node["v"]), slots, axis=-3)
+            dirty.append((name, slots, k_seg, v_seg))
+        if not dirty:
+            return 0
+        self._ensure_books([a for _, _, k, v in dirty for a in (k, v)])
+        wrote = 0
+        for name, slots, k_seg, v_seg in dirty:
+            self._segments.setdefault(name, []).append(_Segment(
+                slots=slots, shape=tuple(k_seg.shape),
+                k_planes=self._encode(k_seg), v_planes=self._encode(v_seg)))
+            wrote += int(slots.size)
+        return wrote
+
+    def read(self, like):
+        """Rebuild the cache pytree by decoding every segment (in ingest
+        order) into zero-initialised k/v arrays — the exact inverse of
+        the ``attn_cache_init`` + ``dynamic_update_slice`` write path."""
+        nodes, treedef = self._nodes(like)
+        out = []
+        for name, node in nodes:
+            if not _is_kv_node(node) or node["k"].dtype != jnp.bfloat16:
+                out.append(self._raw.get(name, node))
+                continue
+            k = jnp.zeros_like(node["k"])
+            v = jnp.zeros_like(node["v"])
+            for seg in self._segments.get(name, ()):
+                idx = (slice(None),) * (k.ndim - 3) + (seg.slots,)
+                k = k.at[idx].set(self._decode(seg.k_planes, seg.shape))
+                v = v.at[idx].set(self._decode(seg.v_planes, seg.shape))
+            pos = self._pos.get(name)
+            if pos is None:
+                pos = np.asarray(node["pos"], np.int32)
+            rebuilt = dict(node)
+            rebuilt.update(k=k, v=v, pos=jnp.asarray(pos, jnp.int32))
+            out.append(rebuilt)
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    # ------------------------------------------------------------------
+    def _raw_leaf_bits(self) -> int:
+        bits = 0
+        for node in self._raw.values():
+            for leaf in jax.tree_util.tree_leaves(node):
+                n = int(np.prod(leaf.shape)) if leaf.shape else 1
+                bits += n * leaf.dtype.itemsize * 8
+        for pos in self._pos.values():
+            bits += pos.nbytes * 8
+        return bits
+
+    @property
+    def kv_hbm_raw_bits(self) -> int:
+        seg = sum(s.raw_bits for segs in self._segments.values()
+                  for s in segs)
+        return seg + self._raw_leaf_bits()
+
+    @property
+    def kv_hbm_coded_bits(self) -> int:
+        seg = sum(s.coded_bits for segs in self._segments.values()
+                  for s in segs)
+        return seg + self._raw_leaf_bits()

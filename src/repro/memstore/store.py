@@ -1,0 +1,308 @@
+"""CompressedParamStore — bf16 params held coded-at-rest in HBM.
+
+The serving memory path of the paper's single-stage encoder: instead of
+materializing a checkpoint's bf16 leaves into HBM and paying 16 bits
+per element forever, the store keeps each large bf16 leaf as two
+chunked coded byte-plane streams (lo/hi — ``core.symbols.bf16_planes``)
+plus per-plane books built through the ``CODECS`` registry.  Consumers
+either ``materialize(leaf)`` (decode → bf16, for one-shot uses like
+engine warm-up) or go through the fused ``matmul(x, leaf)`` path
+(``kernels.decode_matmul``) that multiplies tiles as they decode and
+never writes the raw weight back to HBM.
+
+At-rest layout — deliberately the same tight stream the compressed
+checkpoint writes: per plane, symbols are cut into fixed-``chunk``
+blocks, each block encoded MSB-first and trimmed to its own
+``(bits + 31) // 32 + 1`` words, then concatenated.  ``blocks()``
+re-expands rows to the padded ``chunk_capacity_words`` wire shape the
+decode kernels consume — zero-fill, which is bit-identical to what the
+chunked encoder emitted, so no re-encode ever happens on the consume
+path and ``checkpoint.load_compressed_store`` is a plain re-labelling
+of manifest bytes.
+
+Books are epoch-stamped (``book_epoch``) like the lifecycle registries,
+so a store handed to an `Engine` participates in the same epoch
+fingerprint discipline as the wire books.
+
+Footprint ledger: per-leaf ``raw_bits`` / ``coded_bits`` (payload +
+32-bit per-chunk headers; book tables counted once store-wide), rolled
+up into ``hbm_raw_bits`` / ``hbm_coded_bits`` — the numbers the Engine
+reports next to its wire ledger.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Mapping, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.codec import codec_for_book, default_codec, get_codec
+from ..core.encoder import (chunk_capacity_words, chunk_counts_for,
+                            concat_chunks, encode_chunked_jit)
+from ..core.huffman import MAX_CODE_LEN
+from ..core.symbols import bf16_planes_np
+
+PLANES = ("lo", "hi")
+DEFAULT_CHUNK = 4096
+DEFAULT_MIN_SIZE = 1024
+
+
+@dataclass
+class PlaneStream:
+    """One byte plane of one leaf, chunked-coded and tightly packed.
+
+    words:      1D uint32 — per-chunk streams, each trimmed to
+                ``(bits + 31) // 32 + 1`` words, concatenated
+    bit_counts: (NB,) int64 — payload bits per chunk (the wire header)
+    n_symbols:  total symbols (= leaf element count)
+    chunk:      symbols per block (tail block may be short)
+    """
+    words: np.ndarray
+    bit_counts: np.ndarray
+    n_symbols: int
+    chunk: int
+    max_len: int = MAX_CODE_LEN
+
+    def chunk_word_counts(self) -> np.ndarray:
+        return (self.bit_counts.astype(np.int64) + 31) // 32 + 1
+
+    def chunk_counts(self) -> np.ndarray:
+        return np.asarray(chunk_counts_for(self.n_symbols, self.chunk),
+                          np.int32)
+
+    def blocks(self) -> np.ndarray:
+        """Re-expand to the (NB, cap) zero-padded wire shape the decode
+        kernels consume — bit-identical to the chunked encoder output."""
+        cap = chunk_capacity_words(self.chunk, self.max_len)
+        nw = self.chunk_word_counts()
+        nb = len(nw)
+        out = np.zeros((nb, cap), np.uint32)
+        off = 0
+        for i in range(nb):
+            w = int(nw[i])
+            out[i, :w] = self.words[off:off + w]
+            off += w
+        return out
+
+    @property
+    def payload_bits(self) -> int:
+        return int(self.bit_counts.sum())
+
+    @property
+    def stored_bits(self) -> int:
+        """Tight at-rest footprint: packed words + 32-bit chunk headers."""
+        return int(self.words.nbytes * 8 + 32 * len(self.bit_counts))
+
+
+@dataclass
+class CodedLeaf:
+    """A bf16 leaf held as coded byte planes."""
+    shape: Tuple[int, ...]
+    planes: Dict[str, PlaneStream]
+
+    @property
+    def n_elements(self) -> int:
+        return int(np.prod(self.shape)) if self.shape else 1
+
+    @property
+    def raw_bits(self) -> int:
+        return 16 * self.n_elements
+
+    @property
+    def coded_bits(self) -> int:
+        return sum(ps.stored_bits for ps in self.planes.values())
+
+
+@dataclass
+class RawLeaf:
+    """A pass-through leaf (non-bf16 or below the coding floor)."""
+    value: Any
+
+    @property
+    def raw_bits(self) -> int:
+        v = self.value
+        return int(np.prod(v.shape) if v.shape else 1) * v.dtype.itemsize * 8
+
+    coded_bits = raw_bits
+
+
+def encode_plane(symbols: np.ndarray, book, *, chunk: int) -> PlaneStream:
+    """Chunk-encode one uint8 symbol plane into a tight PlaneStream."""
+    n = int(symbols.size)
+    bw, bb = encode_chunked_jit(
+        jnp.asarray(symbols.reshape(-1)),
+        jnp.asarray(np.asarray(book.codes, np.uint32)),
+        jnp.asarray(np.asarray(book.lengths, np.int32)),
+        chunk=chunk, max_len=book.max_len)
+    bw = np.asarray(bw)
+    bb = np.asarray(bb, np.int64)
+    nw = (bb + 31) // 32 + 1
+    tight = (np.concatenate([bw[i, :nw[i]] for i in range(bw.shape[0])])
+             if bw.shape[0] else np.zeros((0,), np.uint32))
+    return PlaneStream(words=tight, bit_counts=bb, n_symbols=n, chunk=chunk,
+                       max_len=book.max_len)
+
+
+def decode_plane_stream(ps: PlaneStream, book, *,
+                        backend: str = "auto") -> np.ndarray:
+    """Decode a PlaneStream back to its (n_symbols,) uint8 plane."""
+    codec = codec_for_book(book)
+    counts = jnp.asarray(ps.chunk_counts())
+    out = codec.decode_blocks(jnp.asarray(ps.blocks()), counts, book,
+                              ps.chunk, codec.resolve_backend(backend))
+    return np.asarray(concat_chunks(out, counts), np.uint8)
+
+
+class CompressedParamStore:
+    """Param leaves coded-at-rest, with materialize and fused-consume
+    paths plus a per-leaf footprint ledger.  See module docstring."""
+
+    def __init__(self, entries: "Dict[str, Any]", books: Mapping[str, Any],
+                 *, codec: Optional[str] = None, book_epoch: int = 0,
+                 chunk: int = DEFAULT_CHUNK, treedef=None):
+        self.entries = dict(entries)
+        self.books = dict(books)
+        name = codec or getattr(next(iter(self.books.values()), None),
+                                "codec_name", None) or default_codec()
+        get_codec(name)                      # validate eagerly
+        self.codec = name
+        self.book_epoch = int(book_epoch)
+        self.chunk = int(chunk)
+        self.treedef = treedef
+
+    # ------------------------------------------------------------------
+    # construction
+    # ------------------------------------------------------------------
+    @classmethod
+    def from_tree(cls, tree, *, chunk: int = DEFAULT_CHUNK,
+                  codec: Optional[str] = None,
+                  min_size: int = DEFAULT_MIN_SIZE, book_epoch: int = 0,
+                  books: Optional[Mapping[str, Any]] = None,
+                  key_prefix: Tuple[str, ...] = ("param", "bf16")
+                  ) -> "CompressedParamStore":
+        """Encode every large bf16 leaf of ``tree``; smaller / non-bf16
+        leaves pass through raw.  Books are shared across leaves, one
+        per byte plane, built from whole-tree histograms through the
+        codec registry (or passed in pre-built + epoch-stamped)."""
+        from ..checkpoint.ckpt import _flatten
+
+        codec_name = codec or (getattr(next(iter(books.values())),
+                                       "codec_name", None)
+                               if books else None) or default_codec()
+        codec_obj = get_codec(codec_name)
+        flat = _flatten(tree)
+        treedef = jax.tree_util.tree_structure(tree)
+
+        coded_planes: Dict[str, Dict[str, np.ndarray]] = {}
+        for name, leaf in flat.items():
+            arr = np.asarray(leaf)
+            if arr.dtype != jnp.bfloat16 or arr.size < min_size:
+                continue
+            coded_planes[name] = bf16_planes_np(arr)
+
+        if books is None:
+            counts = {p: np.zeros((256,), np.int64) for p in PLANES}
+            for planes in coded_planes.values():
+                for p in PLANES:
+                    counts[p] += np.bincount(planes[p].reshape(-1),
+                                             minlength=256)
+            books = {p: codec_obj.build_book(counts[p],
+                                             key=key_prefix + (p,))
+                     for p in PLANES}
+
+        entries: Dict[str, Any] = {}
+        for name, leaf in flat.items():
+            if name in coded_planes:
+                entries[name] = CodedLeaf(
+                    shape=tuple(np.asarray(leaf).shape),
+                    planes={p: encode_plane(coded_planes[name][p], books[p],
+                                            chunk=chunk) for p in PLANES})
+            else:
+                entries[name] = RawLeaf(value=leaf)
+        return cls(entries, books, codec=codec_name, book_epoch=book_epoch,
+                   chunk=chunk, treedef=treedef)
+
+    # ------------------------------------------------------------------
+    # reads
+    # ------------------------------------------------------------------
+    def names(self):
+        return list(self.entries.keys())
+
+    def __contains__(self, name: str) -> bool:
+        return name in self.entries
+
+    def materialize(self, name: str, *, backend: str = "auto"):
+        """Decode one leaf back to its exact bf16 array (raw leaves pass
+        through untouched)."""
+        e = self.entries[name]
+        if isinstance(e, RawLeaf):
+            return e.value
+        sym = {p: decode_plane_stream(e.planes[p], self.books[p],
+                                      backend=backend) for p in PLANES}
+        u16 = (sym["lo"].astype(np.uint16)
+               | (sym["hi"].astype(np.uint16) << 8))
+        arr = jax.lax.bitcast_convert_type(jnp.asarray(u16), jnp.bfloat16)
+        return arr.reshape(e.shape)
+
+    def materialize_tree(self, like=None):
+        """Decode every leaf and rebuild the original pytree."""
+        treedef = (jax.tree_util.tree_structure(like) if like is not None
+                   else self.treedef)
+        if treedef is None:
+            raise ValueError("store has no treedef; pass like=<template>")
+        leaves = [self.materialize(n) for n in self.entries]
+        return jax.tree_util.tree_unflatten(treedef, leaves)
+
+    def plane_blocks(self, name: str):
+        """Kernel-ready coded blocks of one leaf:
+        (lo (NB, cap), hi (NB, cap), chunk_counts (NB,))."""
+        e = self.entries[name]
+        if not isinstance(e, CodedLeaf):
+            raise KeyError(f"{name!r} is stored raw, not coded")
+        return (e.planes["lo"].blocks(), e.planes["hi"].blocks(),
+                e.planes["lo"].chunk_counts())
+
+    def matmul(self, x, name: str, *, interpret: Optional[bool] = None):
+        """Fused consume path: x @ leaf straight from the coded planes
+        (``kernels.decode_matmul``).  Requires a 2D leaf whose column
+        count divides the store chunk so chunks tile whole rows."""
+        e = self.entries[name]
+        if not isinstance(e, CodedLeaf) or len(e.shape) != 2:
+            raise ValueError(f"{name!r} is not a coded 2D leaf")
+        n_cols = e.shape[1]
+        chunk = e.planes["lo"].chunk
+        if chunk % n_cols != 0:
+            raise ValueError(
+                f"chunk {chunk} does not tile rows of {name!r} "
+                f"(n_cols={n_cols}); rebuild the store with a chunk that "
+                f"is a multiple of the leaf's column count")
+        from ..kernels import ops
+        lo, hi, counts = self.plane_blocks(name)
+        return ops.decode_matmul(x, lo, hi, counts, self.books, chunk=chunk,
+                                 n_cols=n_cols, interpret=interpret)
+
+    # ------------------------------------------------------------------
+    # ledger
+    # ------------------------------------------------------------------
+    def footprint(self) -> Dict[str, Any]:
+        """Per-leaf and total HBM footprint, in bits.  Raw pass-through
+        leaves count identically on both sides; book tables (one lengths
+        vector per plane) are counted once, store-wide."""
+        leaves = {}
+        raw = coded = 0
+        for name, e in self.entries.items():
+            r, c = int(e.raw_bits), int(e.coded_bits)
+            leaves[name] = {
+                "raw_bits": r, "coded_bits": c,
+                "kind": "coded" if isinstance(e, CodedLeaf) else "raw"}
+            raw += r
+            coded += c
+        book_bits = sum(
+            np.asarray(b.lengths).astype(np.int32).nbytes * 8
+            for b in self.books.values())
+        coded += book_bits
+        return {"leaves": leaves, "hbm_raw_bits": raw,
+                "hbm_coded_bits": coded, "book_bits": book_bits,
+                "ratio": (coded / raw) if raw else 0.0}

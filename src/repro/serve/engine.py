@@ -153,8 +153,17 @@ class Engine:
     def __init__(self, params, model_cfg: ModelConfig, serve_cfg: ServeConfig,
                  comp_spec: Optional[CompressionSpec] = None,
                  tp_degree: int = 1, ep_degree: int = 1,
-                 lifecycle=None, refresh_every: int = 16):
+                 lifecycle=None, refresh_every: int = 16,
+                 param_store=None, kv_mode: str = "raw"):
+        if param_store is not None:
+            if params is not None:
+                raise ValueError("pass either params or param_store, not "
+                                 "both")
+            # Decode-on-load: the store stays the HBM source of truth for
+            # footprint accounting; the working copy is materialized once.
+            params = param_store.materialize_tree()
         self.params = params
+        self.param_store = param_store
         self.cfg = model_cfg
         self.serve = serve_cfg
         self.lifecycle = lifecycle
@@ -165,10 +174,47 @@ class Engine:
         if lifecycle is not None and comp_spec is None:
             raise ValueError("a lifecycle manager needs a comp_spec naming "
                              "the tensor kind / scheme / wire config")
+        if kv_mode not in ("raw", "coded"):
+            raise ValueError(f"kv_mode must be 'raw' or 'coded', "
+                             f"got {kv_mode!r}")
+        self.kv_mode = kv_mode
+        self._kv = self._make_kvstore() if kv_mode == "coded" else None
         self._step = self._compile_step()
         self._prefill = jax.jit(
             partial(prefill, cfg=model_cfg, cache_len=serve_cfg.max_cache_len))
         self._key = jax.random.PRNGKey(serve_cfg.seed)
+
+    def _make_kvstore(self):
+        """Coded-KV wrapper, with books resolved in preference order:
+        the lifecycle manager's current activation books, the spec's
+        canonical plane lengths (what a receiving peer rebuilds), or the
+        param store's plane books.  Books are pinned per store — an
+        epoch flip mid-generate must not re-key segments already coded —
+        so ``generate`` builds a fresh store per call."""
+        from ..memstore.kvstore import DEFAULT_KV_CHUNK, CodedKVStore
+        spec = self._spec
+        if self.lifecycle is not None and spec is not None:
+            books = self.lifecycle.books(spec.tensor_kind, spec.scheme_name)
+        elif spec is not None and spec.enabled and spec.plane_lengths:
+            codec = get_codec(spec.codec)
+            books = {
+                plane: codec.book_from_lengths(
+                    np.asarray(lens, dtype=np.int32),
+                    key=(spec.tensor_kind, spec.scheme_name, plane))
+                for plane, lens in spec.plane_lengths}
+        elif self.param_store is not None:
+            # No activation books anywhere: let the KV store build its
+            # own from the first ingest's K/V histograms (through the
+            # param store's codec) — param-plane books fit rope'd
+            # activations poorly enough to cost rate.
+            return CodedKVStore(codec=self.param_store.codec,
+                                chunk=DEFAULT_KV_CHUNK)
+        else:
+            raise ValueError("kv_mode='coded' needs books: pass a "
+                             "comp_spec (or lifecycle) with activation "
+                             "books, or a param_store")
+        chunk = spec.chunk if spec is not None else DEFAULT_KV_CHUNK
+        return CodedKVStore(books, chunk=chunk)
 
     def _compile_step(self):
         build = lambda _=None: jax.jit(make_serve_step(  # noqa: E731
@@ -211,6 +257,13 @@ class Engine:
         if prefix_embeds is not None:
             batch["prefix_embeds"] = prefix_embeds
         logits, caches = self._prefill(self.params, batch)
+        if self._kv is not None:
+            # Fresh coded store per request: ingest the prefill slots,
+            # then serve every subsequent step from decoded reads so the
+            # logits genuinely flow through the encode→decode round trip.
+            self._kv = self._make_kvstore()
+            self._kv.ingest(caches)
+            caches = self._kv.read(caches)
         prompt_len = prompt_tokens.shape[1] + (
             prefix_embeds.shape[1] if prefix_embeds is not None else 0)
         tok = self._sample(logits).astype(jnp.int32)
@@ -219,6 +272,12 @@ class Engine:
         for i in range(max_new_tokens - 1):
             pos = jnp.int32(prompt_len + i)
             logits, caches, m = self._step(self.params, tok, caches, pos)
+            if self._kv is not None:
+                self._kv.ingest(caches)
+                caches = self._kv.read(caches)
+            # One host sync for the whole step's metrics dict — not one
+            # blocking float() per metric per token.
+            m = jax.device_get(m)
             for k, v in m.items():
                 if getattr(v, "ndim", 0) > 0:          # per-plane histograms
                     if self.lifecycle is not None and k.startswith("act_hist_"):
@@ -242,4 +301,27 @@ class Engine:
                   "act_decoded_bits", "act_decode_chunks",
                   "act_decode_mismatch", "moe_wire_raw_bits", "book_epoch"):
             totals.setdefault(k, 0.0)                  # stable for 1-token gens
+        totals.update(self.hbm_stats())
         return np.concatenate([np.asarray(t) for t in out], axis=1), totals
+
+    def hbm_stats(self) -> Dict[str, float]:
+        """Compressed-at-rest HBM ledger (params + KV), reported next to
+        the wire ledger in ``generate`` totals.  Zeros when the engine
+        holds everything raw; ``hbm_effective_bandwidth_x`` is the
+        raw/coded multiplier a memory-bound decode step gains by reading
+        coded bytes."""
+        stats = {"param_hbm_raw_bits": 0.0, "param_hbm_coded_bits": 0.0,
+                 "kv_hbm_raw_bits": 0.0, "kv_hbm_coded_bits": 0.0}
+        if self.param_store is not None:
+            fp = self.param_store.footprint()
+            stats["param_hbm_raw_bits"] = float(fp["hbm_raw_bits"])
+            stats["param_hbm_coded_bits"] = float(fp["hbm_coded_bits"])
+        if self._kv is not None:
+            stats["kv_hbm_raw_bits"] = float(self._kv.kv_hbm_raw_bits)
+            stats["kv_hbm_coded_bits"] = float(self._kv.kv_hbm_coded_bits)
+        raw = stats["param_hbm_raw_bits"] + stats["kv_hbm_raw_bits"]
+        coded = stats["param_hbm_coded_bits"] + stats["kv_hbm_coded_bits"]
+        stats["hbm_raw_bits"] = raw
+        stats["hbm_coded_bits"] = coded
+        stats["hbm_effective_bandwidth_x"] = (raw / coded) if coded else 0.0
+        return stats

@@ -1,11 +1,19 @@
-"""Checkpointing: raw and Huffman-compressed roundtrips."""
+"""Checkpointing: raw and compressed roundtrips.
+
+Compressed checkpoints ride the ``REPRO_TEST_CODEC`` matrix: the
+default-codec save path below exercises whichever codec the conftest
+installed, and the cross-codec tests pin both registry codecs
+explicitly.
+"""
+import json
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.checkpoint import (load_compressed, load_pytree, save_compressed,
-                              save_pytree)
+from repro.checkpoint import (load_compressed, load_compressed_store,
+                              load_pytree, save_compressed, save_pytree)
 from repro.models import BlockGroup, ModelConfig, model_init
 
 
@@ -64,3 +72,58 @@ class TestCompressedCheckpoint:
         save_compressed(p, tree)
         back, _ = load_compressed(p, like=tree)
         _trees_equal(tree, back)
+
+    def test_stored_bytes_account_book_tables(self, params, tmp_path):
+        p = str(tmp_path / "c.npz")
+        stats = save_compressed(p, params)
+        blob = np.load(p, allow_pickle=False)
+        expect = sum(blob[k].nbytes for k in blob.files
+                     if k != "__meta__")
+        # the two per-plane int32 length vectors are 1024 bytes each and
+        # must be on the ledger (regression: they were counted as 256)
+        assert blob["__book_lo__"].nbytes == 1024
+        assert stats["stored_bytes"] == expect
+
+
+class TestCodecInterop:
+    """Manifests record their codec; loads honour or refuse it."""
+
+    @pytest.mark.parametrize("codec", ["huffman", "qlc"])
+    def test_roundtrip_each_codec(self, params, tmp_path, codec):
+        p = str(tmp_path / f"{codec}.npz")
+        save_compressed(p, params, codec=codec, book_epoch=3)
+        store, _ = load_compressed_store(p, like=params)
+        assert store.codec == codec and store.book_epoch == 3
+        back, _ = load_compressed(p, like=params)
+        _trees_equal(params, back)
+
+    @pytest.mark.parametrize("codec,other",
+                             [("huffman", "qlc"), ("qlc", "huffman")])
+    def test_cross_codec_refusal(self, params, tmp_path, codec, other):
+        p = str(tmp_path / "c.npz")
+        save_compressed(p, params, codec=codec)
+        with pytest.raises(ValueError, match=other):
+            load_compressed_store(p, expect_codec=other)
+        with pytest.raises(ValueError, match=other):
+            load_compressed(p, params, expect_codec=other)
+        # pinning the recorded codec still loads, through either API
+        store, _ = load_compressed_store(p, like=params,
+                                         expect_codec=codec)
+        _trees_equal(params, store.materialize_tree(params))
+
+    def test_legacy_manifest_loads_as_huffman_epoch0(self, params,
+                                                     tmp_path):
+        p = str(tmp_path / "old.npz")
+        # legacy writers: huffman, 4M-symbol slabs, no codec fields
+        save_compressed(p, params, codec="huffman", chunk=1 << 22)
+        blob = dict(np.load(p, allow_pickle=False))
+        meta = json.loads(bytes(blob["__meta__"]).decode())
+        for k in ("codec", "book_epoch", "chunk"):
+            del meta[k]
+        blob["__meta__"] = np.frombuffer(json.dumps(meta).encode(),
+                                         np.uint8)
+        np.savez(p, **blob)
+        store, _ = load_compressed_store(p, like=params)
+        assert store.codec == "huffman" and store.book_epoch == 0
+        back, _ = load_compressed(p, params)
+        _trees_equal(params, back)

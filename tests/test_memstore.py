@@ -1,0 +1,206 @@
+"""Compressed-at-rest memory subsystem: param store, fused decode
+matmul, coded KV cache, and the Engine threading.
+
+Everything here must be *bit-exact* — the subsystem trades HBM bytes
+for decode work, never accuracy.  Codec-agnostic tests parametrize over
+both registry codecs explicitly (on top of the ``REPRO_TEST_CODEC``
+process default the conftest installs).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import load_compressed_store, save_compressed
+from repro.kernels.ref import decode_matmul_ref
+from repro.memstore import (CodedKVStore, CodedLeaf, CompressedParamStore,
+                            RawLeaf)
+from repro.models import BlockGroup, ModelConfig, model_init
+from repro.models.transformer import decode_step, prefill
+from repro.serve.engine import Engine, ServeConfig
+
+CODECS = ("huffman", "qlc")
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return ModelConfig(name="m", arch_type="dense", d_model=128,
+                       vocab_size=512, blocks=(BlockGroup(("attn",), 2),),
+                       n_heads=4, n_kv_heads=2, head_dim=32, d_ff=256)
+
+
+@pytest.fixture(scope="module")
+def params(cfg):
+    return model_init(cfg, jax.random.PRNGKey(3))
+
+
+def _bytes_equal(a, b):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        assert x.shape == y.shape and x.dtype == y.dtype
+        assert np.array_equal(np.asarray(x).view(np.uint8),
+                              np.asarray(y).view(np.uint8))
+
+
+class TestCompressedParamStore:
+    @pytest.mark.parametrize("codec", CODECS)
+    @pytest.mark.parametrize("chunk", [4096, 999])   # odd chunk: tail blocks
+    def test_materialize_bit_exact(self, params, codec, chunk):
+        store = CompressedParamStore.from_tree(params, codec=codec,
+                                               chunk=chunk)
+        _bytes_equal(params, store.materialize_tree(params))
+
+    @pytest.mark.parametrize("codec", CODECS)
+    def test_footprint_ledger(self, params, codec):
+        store = CompressedParamStore.from_tree(params, codec=codec)
+        fp = store.footprint()
+        raw_expect = sum(x.size * x.dtype.itemsize * 8
+                         for x in jax.tree.leaves(params))
+        assert fp["hbm_raw_bits"] == raw_expect
+        # bf16 weights must genuinely compress, books included
+        assert fp["ratio"] < 0.85, fp["ratio"]
+        assert fp["hbm_coded_bits"] == (
+            sum(e["coded_bits"] for e in fp["leaves"].values())
+            + fp["book_bits"])
+        # book tables: one int32 lengths vector per byte plane
+        assert fp["book_bits"] == 2 * 256 * 32
+        for name, e in fp["leaves"].items():
+            entry = store.entries[name]
+            if isinstance(entry, RawLeaf):
+                assert e["raw_bits"] == e["coded_bits"]
+            else:
+                assert isinstance(entry, CodedLeaf)
+
+    def test_small_and_non_bf16_leaves_pass_through(self):
+        tree = {"w": jnp.asarray(np.random.default_rng(0).normal(
+                    0, 0.02, (64, 64)), jnp.bfloat16),
+                "scale": jnp.ones((16,), jnp.float32),
+                "tiny": jnp.ones((4,), jnp.bfloat16)}
+        store = CompressedParamStore.from_tree(tree)
+        kinds = {n: e["kind"] for n, e in store.footprint()["leaves"].items()}
+        assert sorted(kinds.values()) == ["coded", "raw", "raw"]
+        _bytes_equal(tree, store.materialize_tree(tree))
+
+    @pytest.mark.parametrize("codec", CODECS)
+    def test_checkpoint_manifest_loads_as_store(self, params, codec,
+                                                tmp_path):
+        p = str(tmp_path / "ck.npz")
+        save_compressed(p, params, codec=codec, book_epoch=5)
+        store, _ = load_compressed_store(p, like=params)
+        assert store.codec == codec and store.book_epoch == 5
+        _bytes_equal(params, store.materialize_tree(params))
+
+
+class TestDecodeMatmul:
+    @pytest.mark.parametrize("codec", CODECS)
+    @pytest.mark.parametrize("shape,chunk", [
+        ((37, 10), 70),      # odd everything: short tail chunk, 3.7 rows
+        ((128, 16), 64),     # multi-block, chunk == 4 whole rows
+    ])
+    def test_bit_exact_vs_oracle(self, codec, shape, chunk):
+        rng = np.random.default_rng(7)
+        w = jnp.asarray(rng.normal(0, 0.02, shape), jnp.bfloat16)
+        x = jnp.asarray(rng.normal(0, 1.0, (4, shape[0])), jnp.bfloat16)
+        store = CompressedParamStore.from_tree({"w": w}, codec=codec,
+                                               chunk=chunk, min_size=1)
+        name = store.names()[0]
+        lo, hi, counts = store.plane_blocks(name)
+        got = store.matmul(x, name)
+        want = decode_matmul_ref(x, jnp.asarray(lo), jnp.asarray(hi),
+                                 jnp.asarray(counts), store.books,
+                                 chunk=chunk, n_cols=shape[1])
+        assert got.dtype == jnp.float32
+        assert np.array_equal(np.asarray(got), np.asarray(want))
+        # and the oracle itself is a real matmul
+        dense = jnp.dot(x.astype(jnp.float32),
+                        jnp.asarray(w, jnp.float32),
+                        preferred_element_type=jnp.float32)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(dense),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_chunk_must_tile_rows(self):
+        w = jnp.asarray(np.random.default_rng(0).normal(0, 0.02, (32, 10)),
+                        jnp.bfloat16)
+        store = CompressedParamStore.from_tree({"w": w}, chunk=64, min_size=1)
+        with pytest.raises(ValueError, match="tile"):
+            store.matmul(jnp.zeros((2, 32), jnp.bfloat16), store.names()[0])
+
+
+class TestCodedKVStore:
+    @pytest.mark.parametrize("codec", CODECS)
+    def test_prefill_and_decode_roundtrip(self, cfg, params, codec):
+        prompt = jnp.asarray(np.random.default_rng(0).integers(
+            0, cfg.vocab_size, (2, 8)), jnp.int32)
+        logits, caches = prefill(params, {"tokens": prompt}, cfg,
+                                 cache_len=16)
+        kv = CodedKVStore(codec=codec, chunk=96)
+        kv.ingest(caches)
+        _bytes_equal(caches, kv.read(caches))
+        # a decode step dirties exactly one slot; differential re-ingest
+        # must keep the rebuild exact
+        tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+        _, caches2 = decode_step(params, tok, caches, jnp.int32(8), cfg)
+        raw_before = kv.kv_hbm_raw_bits
+        kv.ingest(caches2)
+        assert kv.kv_hbm_raw_bits > raw_before
+        _bytes_equal(caches2, kv.read(caches2))
+        # activation books must actually compress the cache
+        assert kv.kv_hbm_coded_bits < kv.kv_hbm_raw_bits
+
+    def test_reset_clears_segments(self, cfg, params):
+        prompt = jnp.zeros((1, 4), jnp.int32)
+        _, caches = prefill(params, {"tokens": prompt}, cfg, cache_len=8)
+        kv = CodedKVStore(chunk=64)
+        kv.ingest(caches)
+        assert kv.kv_hbm_raw_bits > 0
+        kv.reset()
+        assert kv.kv_hbm_raw_bits == 0 and kv.books is None
+
+
+class TestEngineThreading:
+    @pytest.mark.parametrize("codec", CODECS)
+    def test_coded_serve_matches_raw_serve(self, cfg, params, codec):
+        serve_cfg = ServeConfig(max_cache_len=24)
+        prompt = jnp.asarray(np.random.default_rng(1).integers(
+            0, cfg.vocab_size, (2, 6)), jnp.int32)
+        toks_raw, totals_raw = Engine(params, cfg, serve_cfg).generate(
+            prompt, 6)
+        store = CompressedParamStore.from_tree(params, codec=codec)
+        eng = Engine(None, cfg, serve_cfg, param_store=store,
+                     kv_mode="coded")
+        toks, totals = eng.generate(prompt, 6)
+        assert np.array_equal(toks_raw, toks)
+        # HBM ledger reported next to the wire ledger
+        assert totals["hbm_raw_bits"] > 0
+        ratio = totals["hbm_coded_bits"] / totals["hbm_raw_bits"]
+        assert ratio < 0.85, ratio
+        assert totals["hbm_effective_bandwidth_x"] == pytest.approx(
+            1.0 / ratio)
+        assert totals["param_hbm_coded_bits"] < totals["param_hbm_raw_bits"]
+        assert totals["kv_hbm_coded_bits"] < totals["kv_hbm_raw_bits"]
+        # raw engine reports an all-zero ledger, same keys
+        for k in ("hbm_raw_bits", "hbm_coded_bits",
+                  "hbm_effective_bandwidth_x"):
+            assert totals_raw[k] == 0.0
+
+    def test_param_args_are_exclusive(self, cfg, params):
+        store = CompressedParamStore.from_tree(params)
+        with pytest.raises(ValueError, match="not both"):
+            Engine(params, cfg, ServeConfig(max_cache_len=8),
+                   param_store=store)
+        with pytest.raises(ValueError, match="kv_mode"):
+            Engine(params, cfg, ServeConfig(max_cache_len=8),
+                   kv_mode="zstd")
+        with pytest.raises(ValueError, match="books"):
+            Engine(params, cfg, ServeConfig(max_cache_len=8),
+                   kv_mode="coded")
+
+    def test_engine_from_checkpoint_store(self, cfg, params, tmp_path):
+        p = str(tmp_path / "ck.npz")
+        save_compressed(p, params)
+        store, _ = load_compressed_store(p, like=params)
+        serve_cfg = ServeConfig(max_cache_len=16)
+        prompt = jnp.zeros((1, 4), jnp.int32)
+        toks_raw, _ = Engine(params, cfg, serve_cfg).generate(prompt, 4)
+        toks, _ = Engine(None, cfg, serve_cfg, param_store=store,
+                         kv_mode="coded").generate(prompt, 4)
+        assert np.array_equal(toks_raw, toks)
